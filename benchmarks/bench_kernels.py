@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: jnp oracle wall-time on CPU + analytic TPU
+roofline for the Pallas kernels (interpret mode is a Python emulator, so
+TPU numbers here are derived from the kernels' HBM-traffic model, not
+measured wall time — recorded as such in EXPERIMENTS.md)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+from .common import print_table, timer
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def run():
+    rows = []
+    # sa_update: memory-bound combine. Bytes = (P+2) reads + 1 write.
+    for P, n in [(3, 1 << 20), (3, 1 << 24), (5, 1 << 24)]:
+        x = jnp.zeros((n,), jnp.bfloat16)
+        buf = jnp.zeros((P, n), jnp.bfloat16)
+        xi = jnp.zeros((n,), jnp.bfloat16)
+        coeffs = jnp.ones((P + 2,), jnp.float32)
+        dt, _ = timer(jax.jit(lambda a, b, c: ref.sa_update_ref(
+            a, b, c, coeffs[0], coeffs[1], coeffs[2:])), x, buf, xi)
+        bytes_ = 2 * n * (P + 3)
+        tpu_est = bytes_ / HBM_BW
+        rows.append([f"sa_update P{P} n=2^{n.bit_length()-1}",
+                     dt * 1e3, bytes_ / 2**20, tpu_est * 1e6])
+    print_table("sa_update kernel (fused combine)",
+                ["case", "cpu_jnp_ms", "MiB moved", "tpu_roofline_us"], rows)
+
+    rows = []
+    # flash attention: compute-bound. FLOPs = 4*B*H*S*T*hd (QK^T + PV).
+    for (B, H, S, hd) in [(1, 8, 2048, 128), (1, 16, 4096, 128)]:
+        q = jnp.zeros((B, H, S, hd), jnp.bfloat16)
+        k = jnp.zeros((B, H, S, hd), jnp.bfloat16)
+        v = jnp.zeros((B, H, S, hd), jnp.bfloat16)
+        dt, _ = timer(jax.jit(
+            lambda a, b, c: ref.flash_attention_ref(a, b, c)), q, k, v)
+        flops = 4 * B * H * S * S * hd * 0.5  # causal halves it
+        rows.append([f"flash B{B}H{H}S{S}", dt * 1e3, flops / 1e9,
+                     flops / PEAK * 1e6])
+    print_table("flash_attention (causal)",
+                ["case", "cpu_jnp_ms", "GFLOP", "tpu_roofline_us"], rows)
+
+    rows = []
+    # rwkv6 chunked scan: state stays in VMEM; HBM = r,k,v,logw in + y out.
+    from repro.models.rwkv6 import wkv_chunked
+    for (B, T, H, hd, Cch) in [(1, 4096, 8, 64, 64)]:
+        args = [jnp.zeros((B, T, H, hd)) for _ in range(3)]
+        logw = jnp.full((B, T, H, hd), -1.0)
+        u = jnp.zeros((H, hd))
+        S0 = jnp.zeros((B, H, hd, hd))
+        dt, _ = timer(jax.jit(lambda r, k, v: wkv_chunked(
+            r, k, v, logw, u, S0, Cch)[0]), *args)
+        hbm = 4 * B * T * H * hd * (4 + 1)  # 4 in + 1 out, f32
+        naive = 2 * B * T * H * hd * hd * 4 * 2  # seq scan: S re-read/write per t
+        rows.append([f"rwkv6 T{T}H{H}", dt * 1e3, hbm / 2**20,
+                     naive / hbm])
+    print_table("rwkv6 chunked WKV",
+                ["case", "cpu_jnp_ms", "MiB moved", "state-traffic saving x"],
+                rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

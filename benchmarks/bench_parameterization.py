@@ -1,0 +1,25 @@
+"""Paper Table 1: data- vs noise-prediction under the SDE sampler (tau=1).
+
+Claim reproduced: the data parameterization converges dramatically better
+at low NFE (the paper's 20-NFE noise-pred FID is 310 vs 3.88), because its
+injected-noise variance is strictly smaller (Cor. A.2)."""
+
+from .common import print_table, quality, sa_run
+
+
+def run():
+    rows = []
+    for nfe in (10, 20, 40, 60, 80):
+        r = {"nfe": nfe}
+        for param in ("noise", "data"):
+            x = sa_run(nfe, 3, 3, tau=1.0, parameterization=param)
+            r[param] = quality(x)["sw2"]
+        rows.append([nfe, r["noise"], r["data"]])
+    print_table("Table 1 analogue: parameterization (sliced-W2, tau=1, P3C3)",
+                ["NFE", "noise-pred", "data-pred"], rows)
+    assert rows[0][1] > rows[0][2], "data-pred must win at low NFE"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Table 2: predictor steps / corrector ablation.
+
+Claim reproduced: multistep (3-step vs 1-step) and the corrector both
+improve quality at matched (NFE, tau) cells."""
+
+from .common import print_table, quality, sa_run
+
+CELLS = [(15, 0.4), (23, 0.8), (31, 1.0), (47, 1.4)]
+SETTINGS = [
+    ("P1 only", 1, 0),
+    ("P1 + C1", 1, 1),
+    ("P3 only", 3, 0),
+    ("P3 + C3", 3, 3),
+]
+
+
+def run():
+    rows = []
+    for label, p, c in SETTINGS:
+        row = [label]
+        for nfe, tau in CELLS:
+            row.append(quality(sa_run(nfe, p, c, tau))["sw2"])
+        rows.append(row)
+    print_table("Table 2 analogue: predictor/corrector ablation (sliced-W2)",
+                ["setting"] + [f"NFE{n},tau{t}" for n, t in CELLS], rows)
+    # paper's orderings: P3 < P1; corrector helps the 1-step solver
+    assert rows[2][3] < rows[0][3], "P3 must beat P1 at NFE=31"
+    assert rows[1][3] < rows[0][3], "C1 must improve P1 at NFE=31"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Shared benchmark machinery.
+
+FID cannot be computed offline (no Inception network, no image datasets),
+so every quality benchmark runs against ANALYTIC oracles (exact score /
+x0-posterior for Gaussian mixtures) and reports distribution distances:
+    gaussian W2^2 (the FID formula IS a Gaussian W2), sliced W2, energy.
+Solver error is then the ONLY error — precisely what the paper's theorems
+bound — and the paper's qualitative claims (parameterization gap, tau
+trends, solver ranking, convergence order) become quantitative checks.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GMM, SASolverConfig, get_schedule, timestep_grid
+from repro.core.coefficients import build_tables
+from repro.core.metrics import gaussian_w2, sliced_w2
+from repro.core.solver import sample as sa_sample
+
+SCHED = get_schedule("vp_linear")
+GMM_TARGET = GMM.default_2d()
+N_SAMPLES = 8192
+DIM = 2
+
+
+def data_model(parameterization="data", delta: float = 0.0):
+    fn = GMM_TARGET.model_fn(SCHED, parameterization)
+    if delta > 0:
+        from repro.core.oracle import perturb_model
+        fn = perturb_model(fn, DIM, delta)
+    return fn
+
+
+def prior(key=jax.random.PRNGKey(11), n=N_SAMPLES):
+    return jax.random.normal(key, (n, DIM))
+
+
+def target_samples(key=jax.random.PRNGKey(12), n=N_SAMPLES):
+    return GMM_TARGET.sample(key, n)
+
+
+def sa_run(nfe: int, p: int, c: int, tau, *, parameterization="data",
+           delta: float = 0.0, key=jax.random.PRNGKey(0), grid="logsnr"):
+    """One SA-Solver run; NFE = steps + 1 (PEC)."""
+    n = nfe - 1
+    ts = timestep_grid(SCHED, n, kind=grid)
+    tb = build_tables(SCHED, ts, tau=tau, predictor_order=p,
+                      corrector_order=c, parameterization=parameterization)
+    cfg = SASolverConfig(n_steps=n, predictor_order=p, corrector_order=c,
+                         tau=tau, parameterization=parameterization,
+                         denoise_final=False)
+    return sa_sample(data_model(parameterization, delta), prior(), key,
+                     tb, cfg)
+
+
+def quality(x) -> dict:
+    key = jax.random.PRNGKey(13)
+    return {
+        "w2_gauss": gaussian_w2(x, GMM_TARGET.mean(), GMM_TARGET.cov_diag()),
+        "sw2": sliced_w2(x, target_samples(n=x.shape[0]), key),
+    }
+
+
+def timer(fn, *args, reps: int = 3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps, out
+
+
+def print_table(title: str, header: list[str], rows: list[list]):
+    print(f"\n### {title}")
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(
+            f"{v:.4f}" if isinstance(v, float) else str(v) for v in r))

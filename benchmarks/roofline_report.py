@@ -1,0 +1,55 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSON.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        benchmarks/results/dryrun_single.json [--md]
+"""
+
+import argparse
+import json
+
+
+def load(path):
+    return [json.loads(l) for l in open(path)]
+
+
+def fmt_table(recs, md=False):
+    hdr = ["arch", "shape", "fn", "peak GiB", "fit", "compute_s", "memory_s",
+           "collective_s", "dominant", "MODEL_FLOPs", "HLO_FLOPs(tot)",
+           "useful%"]
+    rows = []
+    for r in recs:
+        ro = r["roofline"]
+        m = r["memory"]
+        kind = {"train": "train_step", "prefill": "prefill_step",
+                "decode": "serve_step", "sample": "sample_step"}.get(
+                    r.get("shape", "").split("_")[0], "")
+        rows.append([
+            r["arch"], r["shape"],
+            "",
+            f'{m["peak_tpu_est_bytes"]/2**30:.1f}',
+            "Y" if m["fits_16GiB"] else "N",
+            f'{ro["compute_s"]:.3f}', f'{ro["memory_s"]:.3f}',
+            f'{ro["collective_s"]:.3f}', ro["dominant"],
+            f'{ro["model_flops_total"]:.2e}',
+            f'{r["cost"]["flops_per_device"]*r["chips"]:.2e}',
+            f'{ro["useful_flops_ratio"]*100:.1f}',
+        ])
+    if md:
+        out = ["| " + " | ".join(hdr) + " |",
+               "|" + "---|" * len(hdr)]
+        out += ["| " + " | ".join(str(c) for c in row) + " |" for row in rows]
+    else:
+        out = [",".join(hdr)] + [",".join(str(c) for c in r) for r in rows]
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    print(fmt_table(load(args.path), md=args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only tau_sweep
+"""
+
+import argparse
+import sys
+import time
+
+SECTIONS = [
+    ("parameterization", "Table 1: data vs noise prediction"),
+    ("pc_ablation", "Table 2: predictor/corrector ablation"),
+    ("tau_sweep", "Fig 1: tau x NFE sweep"),
+    ("solver_comparison", "Fig 2: solver comparison"),
+    ("convergence_order", "Thm 5.1/5.2: convergence order"),
+    ("inaccurate_score", "Fig 4: inaccurate score"),
+    ("kernels", "kernel micro-benchmarks"),
+    ("solver_overhead", "solver bookkeeping overhead"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    t00 = time.time()
+    failures = []
+    for name, desc in SECTIONS:
+        if args.only and args.only != name:
+            continue
+        print(f"\n{'='*72}\n== bench_{name}: {desc}\n{'='*72}")
+        sys.stdout.flush()
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.bench_{name}",
+                             fromlist=["run"])
+            mod.run()
+            print(f"[bench_{name} done in {time.time()-t0:.1f}s]")
+        except AssertionError as e:
+            failures.append((name, str(e)))
+            print(f"!! bench_{name} CLAIM FAILED: {e}")
+        sys.stdout.flush()
+    print(f"\ntotal bench time {time.time()-t00:.1f}s")
+    if failures:
+        print(f"{len(failures)} claim failures: {[f[0] for f in failures]}")
+        sys.exit(1)
+    print("all paper-claim checks passed")
+
+
+if __name__ == "__main__":
+    main()

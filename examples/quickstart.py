@@ -1,0 +1,41 @@
+"""Quickstart: sample a Gaussian-mixture with SA-Solver in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Uses the analytic oracle (exact x0-posterior) as the "diffusion model", so
+the solver is the only approximation — swap ``model_fn`` for any network
+with the same (x, t) -> x0-hat signature.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import GMM, SASolver, SASolverConfig, get_schedule
+from repro.core.metrics import sliced_w2
+
+
+def main():
+    schedule = get_schedule("vp_linear")
+    target = GMM.default_2d()
+    model_fn = target.model_fn(schedule, "data")   # exact E[x0 | x_t]
+
+    config = SASolverConfig(
+        n_steps=19,            # NFE = 20
+        predictor_order=3,
+        corrector_order=3,
+        tau=1.0,               # full SDE stochasticity
+    )
+    solver = SASolver(schedule, config)
+
+    x_T = solver.init_noise(jax.random.PRNGKey(0), (4096, 2))
+    x_0 = solver.sample(model_fn, x_T, jax.random.PRNGKey(1))
+
+    ref = target.sample(jax.random.PRNGKey(2), 4096)
+    print(f"sampled {x_0.shape[0]} points with NFE={config.nfe}")
+    print(f"sliced-W2 to target: {sliced_w2(x_0, ref, jax.random.PRNGKey(3)):.5f}")
+    print(f"(prior baseline:     "
+          f"{sliced_w2(x_T, ref, jax.random.PRNGKey(3)):.5f})")
+
+
+if __name__ == "__main__":
+    main()

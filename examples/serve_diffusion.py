@@ -1,0 +1,94 @@
+"""Batched diffusion serving: requests arrive with different prompts
+(conditioning latents), get micro-batched, and are sampled TOGETHER in one
+SA-Solver loop — the serving pattern the dry-run lowers at 512 devices.
+
+    PYTHONPATH=src python examples/serve_diffusion.py --requests 12 --nfe 15
+
+Demonstrates: request batching with ragged arrival, per-request RNG
+(fold_in by request id — no cross-request noise correlation), and a
+backbone selected by --arch (any zoo member in denoiser mode).
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import SASolver, SASolverConfig, get_schedule
+from repro.models import build_model, init_params
+
+
+class DiffusionServer:
+    """Compile once per (batch, seq) bucket; serve request batches."""
+
+    def __init__(self, arch: str, nfe: int, tau: float, latent: int = 8):
+        cfg = get_smoke(arch)
+        if getattr(cfg, "denoiser_latent", None) is None:
+            cfg = dataclasses.replace(cfg, denoiser_latent=latent)
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = init_params(jax.random.PRNGKey(0),
+                                  self.model.param_defs(), jnp.float32)
+        self.solver = SASolver(get_schedule("vp_linear"), SASolverConfig(
+            n_steps=nfe - 1, predictor_order=3, corrector_order=1, tau=tau))
+        self._compiled = {}
+
+    def _fn(self, batch, seq):
+        key = (batch, seq)
+        if key not in self._compiled:
+            dz = self.cfg.denoiser_latent
+
+            def serve(request_ids):
+                def one_noise(rid):
+                    return self.solver.init_noise(
+                        jax.random.fold_in(jax.random.PRNGKey(7), rid),
+                        (seq, dz))
+                xT = jax.vmap(one_noise)(request_ids)
+                k = jax.random.fold_in(jax.random.PRNGKey(8),
+                                       request_ids[0])
+                return self.solver.sample(
+                    lambda x, t: self.model.denoise(self.params, x, t),
+                    xT, k)
+
+            self._compiled[key] = jax.jit(serve)
+        return self._compiled[key]
+
+    def serve_batch(self, request_ids, seq: int):
+        fn = self._fn(len(request_ids), seq)
+        return fn(jnp.asarray(request_ids))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dit-s")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--nfe", type=int, default=15)
+    ap.add_argument("--tau", type=float, default=0.6)
+    args = ap.parse_args()
+
+    server = DiffusionServer(args.arch, args.nfe, args.tau)
+    pending = list(range(args.requests))
+    done = 0
+    t0 = time.perf_counter()
+    while pending:
+        batch, pending = pending[:args.batch], pending[args.batch:]
+        while len(batch) < args.batch:      # pad the tail bucket
+            batch.append(batch[-1])
+        out = jax.block_until_ready(server.serve_batch(batch, args.seq))
+        assert bool(jnp.all(jnp.isfinite(out)))
+        done += len(set(batch))
+        print(f"served batch {sorted(set(batch))}: out {out.shape}, "
+              f"std={float(jnp.std(out)):.3f}")
+    dt = time.perf_counter() - t0
+    print(f"\n{done} requests in {dt:.2f}s "
+          f"({done * args.nfe / dt:.1f} model-evals/s, NFE={args.nfe}, "
+          f"arch={server.cfg.name})")
+
+
+if __name__ == "__main__":
+    main()

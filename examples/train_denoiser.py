@@ -1,0 +1,111 @@
+"""End-to-end driver: train a DiT-S denoiser (~20M params) for a few
+hundred steps on a synthetic latent-field task, then sample it with
+SA-Solver at several (tau, NFE) settings — the paper's full pipeline.
+
+    PYTHONPATH=src python examples/train_denoiser.py --steps 300
+
+With --steps 300 on this container's CPU this takes a few minutes; the
+training loop is the fault-tolerant one (checkpoints to --ckpt, auto-
+resume on rerun).
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SASolver, SASolverConfig, get_schedule
+from repro.core.metrics import sliced_w2
+from repro.data import latent_batch
+from repro.models import build_model, init_params
+from repro.configs import get_smoke
+from repro.optim import (adamw, apply_updates, chain, clip_by_global_norm,
+                         linear_warmup_cosine)
+from repro.runtime import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--ckpt", default="/tmp/repro_denoiser")
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+
+    if args.fresh:
+        import shutil
+        shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    sched = get_schedule("vp_linear")
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke("dit-s"), n_layers=4, d_model=128,
+                              d_ff=512, n_heads=4, n_kv_heads=4,
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    dz, S = cfg.denoiser_latent, args.seq
+    opt = chain(clip_by_global_norm(1.0),
+                adamw(linear_warmup_cosine(2e-3, 20, args.steps),
+                      weight_decay=0.0))
+
+    def init_state():
+        params = init_params(jax.random.PRNGKey(0), model.param_defs(),
+                             jnp.float32)
+        return {"params": params, "opt": opt.init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def denoise_loss(params, x0, key):
+        kt, kn = jax.random.split(key)
+        t = jax.random.uniform(kt, (x0.shape[0],), minval=1e-3, maxval=1.0)
+        eps = jax.random.normal(kn, x0.shape)
+        a = sched.alpha_j(t)[:, None, None]
+        s = sched.sigma_j(t)[:, None, None]
+        pred = model.denoise(params, a * x0 + s * eps, t)
+        return jnp.mean((pred - x0) ** 2)
+
+    @jax.jit
+    def train_step(state, batch):
+        key = jax.random.fold_in(jax.random.PRNGKey(42), state["step"])
+        loss, grads = jax.value_and_grad(denoise_loss)(
+            state["params"], batch["x0"], key)
+        upd, opt_state = opt.update(grads, state["opt"], state["params"],
+                                    state["step"])
+        return ({"params": apply_updates(state["params"], upd),
+                 "opt": opt_state, "step": state["step"] + 1},
+                {"loss": loss})
+
+    class Batches:
+        def __init__(self):
+            self.step = 0
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            b = latent_batch(dz, S, args.batch, step=self.step)
+            self.step += 1
+            return {"x0": jnp.asarray(b["x0"])}
+
+    loop = TrainLoop(train_step, init_state, args.ckpt, save_every=100)
+    state, hist = loop.run(Batches(), args.steps, log_every=50)
+    print(f"\ntraining: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+    # ---- sample with SA-Solver at several settings --------------------
+    params = state["params"]
+    data = jnp.asarray(latent_batch(dz, S, 512, step=10_000)["x0"])
+    key = jax.random.PRNGKey(9)
+    print("\nSA-Solver sampling (sliced-W2 to held-out data, lower=better):")
+    for tau, nfe in [(0.0, 10), (0.4, 10), (0.0, 30), (1.0, 30)]:
+        solver = SASolver(sched, SASolverConfig(
+            n_steps=nfe - 1, predictor_order=3, corrector_order=3, tau=tau))
+        xT = solver.init_noise(jax.random.PRNGKey(5), (512, S, dz))
+        x0 = solver.sample(lambda x, t: model.denoise(params, x, t),
+                           xT, jax.random.PRNGKey(6))
+        d = sliced_w2(x0.reshape(512, -1), data.reshape(512, -1), key)
+        print(f"  tau={tau:<4} NFE={nfe:<3} sliced-W2={d:.4f}")
+    d0 = sliced_w2(xT.reshape(512, -1), data.reshape(512, -1), key)
+    print(f"  (prior noise baseline: {d0:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""repro.core — SA-Solver (NeurIPS 2023) and its substrate.
+
+The paper's contribution, as a composable JAX module:
+
+- variance-controlled diffusion SDE family (tau schedules)        tau.py
+- exact semi-linear solution machinery / Adams coefficients       coefficients.py
+- SA-Predictor / SA-Corrector, Algorithm 1                        solver.py
+- noise schedules + timestep grids                                schedules.py
+- baselines the paper compares against                            baselines.py
+- analytic oracles + metrics for validation                       oracle.py, metrics.py
+"""
+
+from .coefficients import SolverTables, build_tables, exp_monomial_integrals
+from .oracle import GMM, gaussian_oracle, perturb_model
+from .schedules import (
+    EDMSchedule,
+    NoiseSchedule,
+    VESchedule,
+    VPCosineSchedule,
+    VPLinearSchedule,
+    get_schedule,
+    timestep_grid,
+)
+from .solver import SASolver, SASolverConfig, sample
+from .tau import BandedTau, ConstantTau, DDIMEtaTau, TauSchedule
+
+__all__ = [
+    "SASolver",
+    "SASolverConfig",
+    "sample",
+    "SolverTables",
+    "build_tables",
+    "exp_monomial_integrals",
+    "NoiseSchedule",
+    "VPLinearSchedule",
+    "VPCosineSchedule",
+    "VESchedule",
+    "EDMSchedule",
+    "get_schedule",
+    "timestep_grid",
+    "TauSchedule",
+    "ConstantTau",
+    "BandedTau",
+    "DDIMEtaTau",
+    "GMM",
+    "gaussian_oracle",
+    "perturb_model",
+]

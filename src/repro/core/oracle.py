@@ -1,0 +1,134 @@
+"""Analytic diffusion oracles: data distributions with closed-form scores.
+
+For Gaussian-mixture data p_0 = sum_k w_k N(mu_k, diag(s_k^2)) the marginal
+at time t is p_t = sum_k w_k N(alpha_t mu_k, alpha_t^2 diag(s_k^2) +
+sigma_t^2 I), so the exact score — hence the exact data/noise prediction
+model — is available in closed form. Every convergence / quality experiment
+in the benchmark suite runs against these oracles: the solver error is then
+the *only* error, exactly what the paper's theorems bound.
+
+Also provides ``perturbed`` wrappers emulating an imperfectly-trained score
+(paper §6.5): x_theta is corrupted with a smooth, t-scaled random-feature
+field of controllable magnitude delta.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .schedules import NoiseSchedule
+
+__all__ = ["GMM", "gaussian_oracle", "perturb_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GMM:
+    """Gaussian mixture in R^d with diagonal covariances."""
+
+    weights: np.ndarray  # [K]
+    means: np.ndarray    # [K, d]
+    stds: np.ndarray     # [K, d]
+
+    @staticmethod
+    def default_2d() -> "GMM":
+        means = np.array(
+            [[-2.0, -2.0], [2.0, 2.0], [-2.0, 2.0], [2.0, -2.0], [0.0, 0.0]]
+        )
+        return GMM(
+            weights=np.array([0.2, 0.2, 0.2, 0.2, 0.2]),
+            means=means,
+            stds=np.full((5, 2), 0.35),
+        )
+
+    @staticmethod
+    def single(mean, std) -> "GMM":
+        mean = np.atleast_1d(np.asarray(mean, dtype=np.float64))
+        std = np.broadcast_to(np.asarray(std, dtype=np.float64), mean.shape)
+        return GMM(np.array([1.0]), mean[None], std[None])
+
+    @property
+    def dim(self) -> int:
+        return self.means.shape[1]
+
+    def sample(self, key: jax.Array, n: int) -> jnp.ndarray:
+        kc, kn = jax.random.split(key)
+        comp = jax.random.choice(
+            kc, len(self.weights), (n,), p=jnp.asarray(self.weights)
+        )
+        mu = jnp.asarray(self.means)[comp]
+        sd = jnp.asarray(self.stds)[comp]
+        return mu + sd * jax.random.normal(kn, (n, self.dim))
+
+    # ---- exact posteriors under the diffusion ---------------------------
+    def x0_prediction(self, schedule: NoiseSchedule, x: jnp.ndarray, t) -> jnp.ndarray:
+        """E[x_0 | x_t = x] — the ideal data-prediction model x_theta."""
+        a = schedule.alpha_j(t)
+        s = schedule.sigma_j(t)
+        mu = jnp.asarray(self.means)          # [K, d]
+        var_k = (a * jnp.asarray(self.stds)) ** 2 + s**2  # [K, d]
+        logw = jnp.log(jnp.asarray(self.weights))
+        diff = x[..., None, :] - a * mu       # [..., K, d]
+        logp = logw - 0.5 * jnp.sum(
+            diff**2 / var_k + jnp.log(2 * jnp.pi * var_k), axis=-1
+        )
+        r = jax.nn.softmax(logp, axis=-1)     # responsibilities [..., K]
+        # E[x0 | x, k] = mu_k + (a s_k^2 / var_k) (x - a mu_k)  (per-dim)
+        gain = a * jnp.asarray(self.stds) ** 2 / var_k  # [K, d]
+        e_x0_k = mu + gain * diff             # [..., K, d]
+        return jnp.sum(r[..., None] * e_x0_k, axis=-2)
+
+    def score(self, schedule: NoiseSchedule, x: jnp.ndarray, t) -> jnp.ndarray:
+        a = schedule.alpha_j(t)
+        s = schedule.sigma_j(t)
+        x0 = self.x0_prediction(schedule, x, t)
+        return -(x - a * x0) / s**2
+
+    def eps_prediction(self, schedule: NoiseSchedule, x: jnp.ndarray, t) -> jnp.ndarray:
+        a = schedule.alpha_j(t)
+        s = schedule.sigma_j(t)
+        return (x - a * self.x0_prediction(schedule, x, t)) / s
+
+    def model_fn(self, schedule: NoiseSchedule, parameterization: str = "data"):
+        if parameterization == "data":
+            return lambda x, t: self.x0_prediction(schedule, x, t)
+        return lambda x, t: self.eps_prediction(schedule, x, t)
+
+    # ---- exact moments (for W2-vs-Gaussian metrics) ----------------------
+    def mean(self) -> np.ndarray:
+        return np.einsum("k,kd->d", self.weights, self.means)
+
+    def cov_diag(self) -> np.ndarray:
+        m = self.mean()
+        second = np.einsum(
+            "k,kd->d", self.weights, self.stds**2 + self.means**2
+        )
+        return second - m**2
+
+
+def gaussian_oracle(schedule: NoiseSchedule, mean=0.0, std=1.0, dim: int = 2):
+    """Convenience: a single-Gaussian GMM (solver errors are exactly the
+    discretization error; marginal-preservation tests use this)."""
+    mu = np.full((dim,), float(mean))
+    return GMM.single(mu, float(std))
+
+
+def perturb_model(model_fn, dim: int, delta: float, seed: int = 0, n_features: int = 32):
+    """Emulate an inaccurate learned model (paper §6.5 / Appendix C).
+
+    Adds a fixed smooth random-feature field  delta * f(x)  to the prediction;
+    f has zero mean over x and unit RMS, so delta is the RMS prediction error.
+    """
+    rng = np.random.default_rng(seed)
+    W = jnp.asarray(rng.normal(size=(dim, n_features)) / np.sqrt(dim))
+    b = jnp.asarray(rng.uniform(0, 2 * np.pi, size=(n_features,)))
+    V = jnp.asarray(rng.normal(size=(n_features, dim)) * np.sqrt(2.0 / n_features))
+
+    def wrapped(x, t):
+        feat = jnp.cos(x @ W + b)
+        return model_fn(x, t) + delta * (feat @ V)
+
+    return wrapped

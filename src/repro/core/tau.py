@@ -1,0 +1,83 @@
+"""tau(t) stochasticity schedules (paper §4, §6.3, Appendix E).
+
+The paper uses either a constant tau or a piecewise-constant tau that is a
+constant value inside an EDM-sigma band [band_lo, band_hi] and zero outside
+(Appendix E: CIFAR10 band (0.05, 1], ImageNet64 band (0.05, 50]).
+
+The coefficient engine (coefficients.py) assumes tau is constant on each
+solver interval [t_{i+1}, t_i]; we therefore evaluate the schedule once per
+interval. For the banded schedule we evaluate at the interval midpoint in
+lambda — intervals that straddle a band edge get the midpoint value, which
+matches the paper's own discrete treatment (their bands are aligned to the
+step grid in practice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .schedules import NoiseSchedule
+
+__all__ = ["TauSchedule", "ConstantTau", "BandedTau", "DDIMEtaTau"]
+
+
+class TauSchedule:
+    def on_intervals(self, schedule: NoiseSchedule, ts: np.ndarray) -> np.ndarray:
+        """tau value for each interval [t_{i+1}, t_i]; shape [len(ts)-1]."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantTau(TauSchedule):
+    tau: float = 1.0
+
+    def on_intervals(self, schedule, ts):
+        return np.full(len(ts) - 1, float(self.tau), dtype=np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class BandedTau(TauSchedule):
+    """tau = value when band_lo <= sigma_EDM(t_mid) <= band_hi else 0."""
+
+    tau: float = 1.0
+    band_lo: float = 0.05
+    band_hi: float = 1.0
+
+    def on_intervals(self, schedule, ts):
+        ts = np.asarray(ts, dtype=np.float64)
+        lam = schedule.lam(ts)
+        lam_mid = 0.5 * (lam[:-1] + lam[1:])
+        sig = np.exp(-lam_mid)
+        inside = (sig >= self.band_lo) & (sig <= self.band_hi)
+        return np.where(inside, float(self.tau), 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class DDIMEtaTau(TauSchedule):
+    """The piecewise-constant tau_eta of Corollary 5.3: for a given DDIM eta,
+    the per-interval tau that makes the 1-step SA-Predictor coincide with
+    DDIM-eta.
+
+        tau_i^2 = log(1 - eta^2/sigma_{t_i}^2 (1 - alpha_{t_i}^2/alpha_{t_{i+1}}^2))
+                  / (-2 (lambda_{t_{i+1}} - lambda_{t_i}))
+
+    (Eq. 94; note t_{i+1} < t_i in our reverse-time grid so
+    lambda_{t_{i+1}} > lambda_{t_i}.)
+    """
+
+    eta: float = 1.0
+
+    def on_intervals(self, schedule, ts):
+        ts = np.asarray(ts, dtype=np.float64)
+        a = schedule.alpha(ts)
+        s = schedule.sigma(ts)
+        lam = schedule.lam(ts)
+        a_i, a_ip1 = a[:-1], a[1:]
+        s_i = s[:-1]
+        h = lam[1:] - lam[:-1]  # > 0
+        inner = 1.0 - (self.eta**2 / s_i**2) * (1.0 - a_i**2 / a_ip1**2)
+        inner = np.clip(inner, 1e-300, None)
+        tau2 = np.log(inner) / (-2.0 * h)
+        return np.sqrt(np.clip(tau2, 0.0, None))

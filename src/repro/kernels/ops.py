@@ -1,0 +1,48 @@
+"""jit'd public wrappers for the Pallas kernels with pure-jnp fallbacks.
+
+Dispatch: ``use_pallas(mode)`` where mode in {"auto", "kernel", "jnp"}.
+- "auto": kernel (interpret) on CPU only when explicitly benchmarked;
+  model code defaults to the jnp path on CPU because interpret mode is a
+  Python-loop emulator (correct, slow). On TPU "auto" means compiled
+  kernels. The dry-run always lowers the jnp path (Mosaic does not lower
+  on the CPU backend); kernel vs jnp numerical equivalence is asserted by
+  tests, so the dry-run roofline is valid for both.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_kernel
+from .rwkv6_scan import rwkv6_wkv as _wkv_kernel
+from .sa_update import sa_update as _sa_kernel
+
+__all__ = ["sa_update", "flash_attention", "wkv", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sa_update(x, buf, xi, coeffs, *, mode: str = "auto"):
+    if mode == "jnp" or (mode == "auto" and not on_tpu()):
+        return ref.sa_update_ref(x, buf, xi, coeffs[0], coeffs[1], coeffs[2:])
+    return _sa_kernel(x, buf, xi, coeffs, interpret=not on_tpu())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, mode: str = "auto",
+                    bq: int = 512, bk: int = 512):
+    if mode == "jnp" or (mode == "auto" and not on_tpu()):
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash_kernel(q, k, v, causal=causal, bq=bq, bk=bk,
+                         interpret=not on_tpu())
+
+
+def wkv(r, k, v, logw, u, S0, *, chunk: int = 64, mode: str = "auto"):
+    if mode == "jnp" or (mode == "auto" and not on_tpu()):
+        from ..models.rwkv6 import wkv_chunked
+        return wkv_chunked(r, k, v, logw, u, S0, chunk)
+    return _wkv_kernel(r, k, v, logw, u, S0, chunk=chunk,
+                       interpret=not on_tpu())

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert allclose between
+these and the kernels (interpret=True on CPU) over shape/dtype sweeps."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sa_update_ref", "flash_attention_ref", "wkv_ref"]
+
+
+def sa_update_ref(x, buf, xi, decay, noise, coeffs):
+    """x [*shape]; buf [P, *shape]; xi [*shape]; decay/noise scalars;
+    coeffs [P].  x' = decay*x + sum_j coeffs[j]*buf[j] + noise*xi."""
+    acc = jnp.einsum("p,p...->...", coeffs.astype(jnp.float32),
+                     buf.astype(jnp.float32))
+    return (decay * x.astype(jnp.float32) + acc
+            + noise * xi.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q [B,H,S,hd]; k,v [B,K,T,hd] with K dividing H. f32 softmax."""
+    B, H, S, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qk = q.reshape(B, K, G, S, hd)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qk.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -2.0**30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def wkv_ref(r, k, v, logw, u, S0):
+    """Sequential RWKV6 recurrence; delegates to the model-level oracle."""
+    from ..models.rwkv6 import wkv_sequential
+    return wkv_sequential(r, k, v, logw, u, S0)

@@ -1,0 +1,1 @@
+"""Launchers: production mesh, dry-run compiler, train/serve/sample drivers."""

@@ -1,0 +1,391 @@
+"""Dry-run cell assembly: (architecture x shape x mesh) -> a lowerable,
+fully-sharded step function with ShapeDtypeStruct arguments.
+
+One "cell" is what the multi-pod dry-run compiles:
+    train_4k     -> train_step  (loss + grad + optimizer update, ZeRO'd)
+    prefill_32k  -> prefill_step
+    decode_32k / long_500k -> serve_step (one token against a full cache)
+
+Sharding strategy (production default "fsdp_tp"):
+  - weights: TP dims (heads/kv_heads/mlp/experts/vocab) over 'model',
+    remaining large dim (embed) over 'data'  => ZeRO-3-style storage;
+    GSPMD re-gathers one scanned layer at a time.
+  - optimizer state: follows the param specs (already fully sharded);
+    adafactor for deepseek-v3-671b (factored 2nd moment), AdamW elsewhere.
+  - batch dim of data/caches over ('pod','data') when divisible.
+  - KV caches: kv-head dim over 'model' when divisible, else the SEQUENCE
+    dim over 'model' (sequence-sharded decode: QK^T partial scores +
+    softmax partials all-reduce — this is what lets deepseek's MLA cache
+    (18 GB batch-sharded-only) and dbrx's kv=8 cache fit).
+  - SSM states: head dim over 'model' where divisible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import SHAPES, ArchMeta, get_config, get_meta
+from ..models import RWKV6, RWKV6Config, TransformerLM, Zamba2, Zamba2Config, build_model
+from ..models.common import abstract_params, specs_for, tree_defs_map
+from ..optim import adafactor, adamw, apply_updates, chain, clip_by_global_norm
+
+__all__ = ["build_cell", "Cell", "batch_axes", "cache_specs", "param_shardings"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple              # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    label: str = ""
+    #: buffers updated in place at every step (params/opt state for train,
+    #: the KV/state cache for serving) — donated so the output aliases the
+    #: input instead of double-allocating
+    donate_argnums: tuple = ()
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _batch_dim_spec(mesh, n: int):
+    ax = batch_axes(mesh)
+    total = math.prod(mesh.shape[a] for a in ax) if ax else 1
+    if ax and n % total == 0:
+        return ax
+    # fall back to 'data' only, then replicated
+    if "data" in mesh.shape and n % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def cache_specs(cache_shapes, mesh):
+    """Path-keyed sharding rules for serving caches (see module docstring)."""
+    msize = dict(mesh.shape).get("model", 1)
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        shape = leaf.shape
+        dims: list = [None] * len(shape)
+        # dim 1 is batch everywhere (dim 0 = layers / applications)
+        if len(shape) >= 2:
+            dims[1] = _batch_dim_spec(mesh, shape[1])
+        if name in ("k", "v") and len(shape) == 5:
+            if shape[3] % msize == 0:
+                dims[3] = "model"                # kv heads
+            elif shape[2] % msize == 0:
+                dims[2] = "model"                # sequence-sharded KV
+            # long-context small-batch: ALSO shard sequence over the batch
+            # axes when the batch dim could not use them (zamba2 long_500k:
+            # 24 GiB shared-attn KV at B=1 -> /16 over data as well)
+            if dims[1] is None and dims[2] is None:
+                dsize = dict(mesh.shape).get("data", 1)
+                if shape[2] % dsize == 0 and shape[2] > 1:
+                    dims[2] = "data"
+        elif name in ("c_kv", "k_rope") and len(shape) == 4:
+            if shape[2] % msize == 0:
+                dims[2] = "model"                # sequence-sharded MLA cache
+        elif name == "h" and len(shape) == 5:
+            if shape[2] % msize == 0:
+                dims[2] = "model"                # SSM heads
+        elif name == "S" and len(shape) == 5:
+            if shape[2] % msize == 0:
+                dims[2] = "model"
+            elif shape[3] % msize == 0:
+                dims[3] = "model"                # rwkv state key-dim
+        elif name == "conv" and len(shape) == 4:
+            if shape[3] % msize == 0:
+                dims[3] = "model"
+        elif name in ("tm_shift", "cm_shift") and len(shape) == 3:
+            if shape[2] % msize == 0:
+                dims[2] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(kp, leaf) for kp, leaf in flat])
+
+
+def param_shardings(model, mesh, strategy: str = "fsdp_tp"):
+    defs = model.param_defs()
+    specs = specs_for(defs, strategy, mesh)
+    return tree_defs_map(lambda s: None, defs), jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _path_key(kp) -> tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def _opt_shardings(opt_state_abs, params_shardings, mesh):
+    """Optimizer-state shardings. AdamW m/v mirror the param tree exactly
+    (path suffix match); adafactor vr/vc drop one param dim — derive the
+    spec by slicing the param spec the same way."""
+    pflat, _ = jax.tree_util.tree_flatten_with_path(params_shardings)
+    by_path = {_path_key(kp): s for kp, s in pflat}
+
+    def find(kp, leaf):
+        keys = _path_key(kp)
+        nd = len(leaf.shape)
+        # AdamW: state path ends with the full param path
+        for i in range(len(keys)):
+            if keys[i:] in by_path:
+                spec = tuple(by_path[keys[i:]].spec)
+                spec = spec + (None,) * (nd - len(spec))
+                return NamedSharding(mesh, P(*spec[:nd]))
+        # adafactor: <param path> + ('vr'|'vc'|'v',)
+        if keys and keys[-1] in ("vr", "vc", "v"):
+            for i in range(len(keys) - 1):
+                if keys[i:-1] in by_path:
+                    pspec = list(by_path[keys[i:-1]].spec)
+                    pspec += [None] * ((nd + 1) - len(pspec))
+                    if keys[-1] == "vr":        # param shape minus last dim
+                        spec = pspec[:nd]
+                    elif keys[-1] == "vc":      # minus second-to-last dim
+                        spec = pspec[:nd - 1] + [pspec[nd]]
+                    else:                       # 1-D params: full mirror
+                        spec = pspec[:nd]
+                    return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state_abs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [find(kp, leaf) for kp, leaf in flat])
+
+
+# ---------------------------------------------------------------------------
+# data inputs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg, cell, mesh, *, kind: str):
+    """ShapeDtypeStructs + shardings for the data inputs of one cell."""
+    B = cell.global_batch
+    S = cell.seq_len
+    bspec = _batch_dim_spec(mesh, B)
+    sds = jax.ShapeDtypeStruct
+    ns = lambda *dims: NamedSharding(mesh, P(*dims))
+    embeds_mode = getattr(cfg, "input_mode", "tokens") == "embeds"
+    mrope = getattr(cfg, "rope_type", "") == "mrope"
+
+    if kind == "train":
+        if embeds_mode:
+            batch = {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+                     "labels": sds((B, S), jnp.int32)}
+            shard = {"embeds": ns(bspec, None, None), "labels": ns(bspec, None)}
+        else:
+            batch = {"tokens": sds((B, S), jnp.int32),
+                     "labels": sds((B, S), jnp.int32)}
+            shard = {"tokens": ns(bspec, None), "labels": ns(bspec, None)}
+        if getattr(cfg, "mtp", False):
+            batch["labels2"] = sds((B, S), jnp.int32)
+            shard["labels2"] = ns(bspec, None)
+        if mrope:
+            batch["positions"] = sds((3, B, S), jnp.int32)
+            shard["positions"] = ns(None, bspec, None)
+        return batch, shard
+
+    if kind == "prefill":
+        if embeds_mode:
+            batch = {"embeds": sds((B, S, cfg.d_model), jnp.bfloat16)}
+            shard = {"embeds": ns(bspec, None, None)}
+        else:
+            batch = {"tokens": sds((B, S), jnp.int32)}
+            shard = {"tokens": ns(bspec, None)}
+        if mrope:
+            batch["positions"] = sds((3, B, S), jnp.int32)
+            shard["positions"] = ns(None, bspec, None)
+        return batch, shard
+
+    if kind == "decode":
+        if embeds_mode:
+            tok = sds((B, 1, cfg.d_model), jnp.bfloat16)
+            tshard = ns(bspec, None, None)
+        else:
+            tok = sds((B, 1), jnp.int32)
+            tshard = ns(bspec, None)
+        return {"tokens": tok}, {"tokens": tshard}
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cell builders
+# ---------------------------------------------------------------------------
+
+
+def _make_optimizer(arch: str):
+    if arch.startswith("deepseek"):
+        return chain(clip_by_global_norm(1.0), adafactor(1e-3))
+    return chain(clip_by_global_norm(1.0), adamw(3e-4))
+
+
+#: gradient-accumulation microbatch splits for train cells — divides
+#: activation memory by the split at identical math (grads averaged over
+#: microbatches inside one optimizer step). Values chosen so peak_tpu_est
+#: fits 16 GiB on the (16,16) mesh; the accumulator stays in the grads'
+#: dtype and is sharded like the params.
+ACCUM_STEPS = {
+    "deepseek-v3-671b": 8,
+    "dbrx-132b": 4,
+}
+
+
+def _microbatch(batch, accum: int):
+    """Split each input's batch dim into a leading [accum] scan axis;
+    mrope positions carry batch on axis 1, everything else on axis 0."""
+    def split(key, v):
+        ax = 1 if key == "positions" else 0
+        b = v.shape[ax]
+        assert b % accum == 0, (key, v.shape, accum)
+        new = v.shape[:ax] + (accum, b // accum) + v.shape[ax + 1:]
+        out = v.reshape(new)
+        return jnp.moveaxis(out, ax, 0) if ax else out
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def build_cell(arch: str, shape: str, mesh, *, strategy: str | None = None,
+               param_dtype=jnp.bfloat16, accum: int | None = None) -> Cell:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    model = build_model(cfg)
+    defs = model.param_defs()
+    params_abs = abstract_params(defs, param_dtype)
+    if strategy is None:
+        # train: FSDP+TP (ZeRO-3 storage, per-layer regathers);
+        # serve: weights fully resident, 2D TP (no per-step gathers);
+        # sample: replicate the small denoiser, pure DP (§Perf C1/C2)
+        strategy = {"train": "fsdp_tp", "sample": "dp"}.get(
+            cell.kind, "serve_2d")
+    _, pshard = param_shardings(model, mesh, strategy)
+
+    if cell.kind == "train":
+        if accum is None:
+            accum = ACCUM_STEPS.get(arch, 1)
+        opt = _make_optimizer(arch)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        oshard = _opt_shardings(opt_abs, pshard, mesh)
+        batch_abs, bshard = input_specs(cfg, cell, mesh, kind="train")
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        sshard = NamedSharding(mesh, P())
+
+        def train_step(params, opt_state, step, batch):
+            if accum > 1:
+                mbs = _microbatch(batch, accum)
+
+                inv = 1.0 / accum
+
+                def micro(carry, mb):
+                    gacc, lacc = carry
+                    loss, grads = jax.value_and_grad(model.loss_fn)(params, mb)
+                    # fold the 1/accum average into the accumulate — the
+                    # separate post-scan rescale would materialize one more
+                    # full grad-tree copy (5.2 GB for deepseek)
+                    gacc = jax.tree.map(
+                        lambda a, g: a + (inv * g.astype(jnp.float32))
+                        .astype(a.dtype), gacc, grads)
+                    return (gacc, lacc + inv * loss), None
+
+                zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                     params)
+                (grads, loss), _ = jax.lax.scan(
+                    micro, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            else:
+                loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params, step)
+            params = apply_updates(params, updates)
+            return params, opt_state, step + 1, loss
+
+        return Cell(
+            arch=arch, shape=shape, kind="train", fn=train_step,
+            args=(params_abs, opt_abs, step_abs, batch_abs),
+            in_shardings=(pshard, oshard, sshard, bshard),
+            label=f"{arch}/{shape}/train_step",
+            donate_argnums=(0, 1),
+        )
+
+    # serving cells share the cache machinery
+    B, S = cell.global_batch, cell.seq_len
+    cache_abs = model.cache_shapes(B, S)
+    cshard = cache_specs(cache_abs, mesh)
+
+    if cell.kind == "prefill":
+        batch_abs, bshard = input_specs(cfg, cell, mesh, kind="prefill")
+
+        def prefill_step(params, batch, cache):
+            logits, cache = model.prefill(params, batch, cache)
+            return jnp.argmax(logits, axis=-1), cache
+
+        return Cell(
+            arch=arch, shape=shape, kind="prefill", fn=prefill_step,
+            args=(params_abs, batch_abs, cache_abs),
+            in_shardings=(pshard, bshard, cshard),
+            label=f"{arch}/{shape}/prefill_step",
+            donate_argnums=(2,),
+        )
+
+    if cell.kind == "sample":
+        # the paper's own workload: full SA-Solver sampling loop (Algorithm
+        # 1) driving the denoiser-mode backbone
+        from ..core import SASolver, SASolverConfig, get_schedule
+        B, S = cell.global_batch, cell.seq_len
+        dz = cfg.denoiser_latent
+        solver = SASolver(get_schedule("vp_linear"), SASolverConfig(
+            n_steps=19, predictor_order=3, corrector_order=3, tau=1.0))
+        xT_abs = jax.ShapeDtypeStruct((B, S, dz), jnp.float32)
+        key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        # sampling a replicated small denoiser: batch over EVERY mesh axis
+        # (pure DP, zero layer-internal collectives — §Perf C2)
+        all_axes = tuple(mesh.shape.keys())
+        total = mesh.devices.size
+        bspec = all_axes if B % total == 0 else _batch_dim_spec(mesh, B)
+        xshard = NamedSharding(mesh, P(bspec, None, None))
+        kshard = NamedSharding(mesh, P())
+
+        def sample_step(params, xT, key):
+            return solver.sample(
+                lambda x, t: model.denoise(params, x, t), xT, key)
+
+        return Cell(
+            arch=arch, shape=shape, kind="sample", fn=sample_step,
+            args=(params_abs, xT_abs, key_abs),
+            in_shardings=(pshard, xshard, kshard),
+            label=f"{arch}/{shape}/sample_step(NFE20,P3C3,tau1)",
+        )
+
+    if cell.kind == "decode":
+        tok_abs, tshard = input_specs(cfg, cell, mesh, kind="decode")
+        idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        ishard = NamedSharding(mesh, P())
+
+        def serve_step(params, tokens, cache, index):
+            logits, cache = model.decode_step(params, tokens, cache, index)
+            return jnp.argmax(logits, axis=-1), cache
+
+        return Cell(
+            arch=arch, shape=shape, kind="decode", fn=serve_step,
+            args=(params_abs, tok_abs["tokens"], cache_abs, idx_abs),
+            in_shardings=(pshard, tshard["tokens"], cshard, ishard),
+            label=f"{arch}/{shape}/serve_step",
+            donate_argnums=(2,),
+        )
+
+    raise ValueError(cell.kind)

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms from the compiled artifact.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init), which is why this module sets XLA_FLAGS before its
+own docstring.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Per cell this prints/records:
+    memory_analysis  : argument/output/temp bytes PER DEVICE (fit proof
+                       against the 16 GiB v5e HBM)
+    cost_analysis    : HLO FLOPs / bytes accessed per device
+    collective bytes : summed result-shape bytes of every all-gather /
+                       all-reduce / reduce-scatter / all-to-all /
+                       collective-permute in the post-optimization HLO
+    roofline terms   : compute / memory / collective seconds (v5e consts)
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+
+HBM_BYTES = 16 * 1024**3          # v5e per chip
+PEAK_FLOPS = 197e12               # bf16
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind (skip *-done duplicates)."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """6*N*D (train) / 2*N*D (inference), N = active params, D = tokens."""
+    from ..configs import SHAPES, get_config
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    total, active = cfg.param_count()
+    if cell.kind == "train":
+        toks = cell.global_batch * cell.seq_len
+        return 6.0 * active * toks
+    if cell.kind == "prefill":
+        toks = cell.global_batch * cell.seq_len
+        return 2.0 * active * toks
+    if cell.kind == "sample":
+        # NFE=20 denoiser evaluations over B x S latent tokens
+        return 2.0 * active * cell.global_batch * cell.seq_len * 20
+    return 2.0 * active * cell.global_batch     # decode: 1 new token/row
+
+
+_UPCAST_RE = re.compile(
+    r"=\s*f32\[([0-9,]+)\](?:\{[^}]*\})?\s+fusion\([^\n]*calls=%wrapped_convert")
+
+
+def cpu_upcast_bytes(hlo: str) -> int:
+    """Bytes of hoisted bf16->f32 weight copies.
+
+    XLA's CPU backend has no native bf16 matmul: it inserts convert(f32)
+    on every bf16 dot operand and hoists the loop-invariant weight
+    converts out of the layer scan, so the reported temp size carries a
+    full f32 copy of the (bf16) weights. A TPU's MXU consumes bf16
+    directly — no such copy exists there. We subtract these to get the
+    TPU-comparable peak estimate (reported alongside the raw number).
+    """
+    total = 0
+    for m in _UPCAST_RE.finditer(hlo):
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        total += 4 * n
+    return total
+
+
+def dump_big_shapes(hlo: str, min_bytes: int = 2**28, top: int = 15):
+    sizes: dict[str, tuple[int, int]] = {}
+    for m in re.finditer(r"\b(f32|bf16|s32|u32|pred|f16|s8|u8)\[([0-9,]+)\]", hlo):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * _DTYPE_BYTES[dt]
+        if b >= min_bytes:
+            key = f"{dt}[{dims}]"
+            cur = sizes.get(key, (0, 0))
+            sizes[key] = (b, cur[1] + 1)
+    for k, (b, c) in sorted(sizes.items(), key=lambda kv: -kv[1][0])[:top]:
+        print(f"   {b/2**30:8.2f} GiB x{c:4d}  {k}")
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, strategy: str,
+             verbose: bool = True, dump_shapes: bool = False) -> dict:
+    import jax
+    from ..models.common import activation_sharding
+    from .cells import batch_axes, build_cell
+    from .hlo_cost import analyze_hlo
+    from .mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, strategy=strategy)
+    if shape.startswith("sample"):
+        # pure-DP sampling: batch over every axis, no sequence parallelism
+        act_ctx = activation_sharding(
+            tuple(mesh.shape.keys()), mesh_sizes=dict(mesh.shape))
+    else:
+        act_ctx = activation_sharding(
+            batch_axes(mesh), seq_axes=("model",),
+            seq_divisor=dict(mesh.shape).get("model", 1),
+            mesh_sizes=dict(mesh.shape))
+    with mesh, act_ctx:
+        lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                          donate_argnums=cell.donate_argnums).lower(
+            *cell.args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware per-device costs (XLA's cost_analysis counts while
+    # bodies once — see hlo_cost.py)
+    cost = analyze_hlo(hlo)
+    coll = {k: float(v) for k, v in cost.coll_bytes.items()}
+    coll_total = cost.collective_total
+
+    arg_b = getattr(ma, "argument_size_in_bytes", 0)
+    out_b = getattr(ma, "output_size_in_bytes", 0)
+    tmp_b = getattr(ma, "temp_size_in_bytes", 0)
+    alias_b = getattr(ma, "alias_size_in_bytes", 0)
+    peak = arg_b + out_b + tmp_b - alias_b
+    upcast = cpu_upcast_bytes(hlo)
+    peak_tpu = peak - upcast
+
+    flops = float(cost.flops)
+    bytes_acc = float(cost.bytes)
+    mf = model_flops(arch, shape)
+
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_acc / HBM_BW
+    t_coll = coll_total / ICI_BW
+    dominant = max(
+        (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+
+    rec = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "chips": int(chips), "strategy": strategy,
+        "compile_s": round(t1 - t0, 1),
+        "memory": {
+            "argument_bytes": int(arg_b), "output_bytes": int(out_b),
+            "temp_bytes": int(tmp_b), "alias_bytes": int(alias_b),
+            "peak_bytes": int(peak),
+            "cpu_upcast_bytes": int(upcast),
+            "peak_tpu_est_bytes": int(peak_tpu),
+            "fits_16GiB": bool(peak_tpu <= HBM_BYTES),
+        },
+        "cost": {"flops_per_device": flops, "bytes_per_device": bytes_acc},
+        "collectives": coll,
+        "collective_bytes_per_device": coll_total,
+        "roofline": {
+            "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops_total": mf,
+            "useful_flops_ratio": (mf / (flops * chips)) if flops else 0.0,
+        },
+    }
+    if verbose:
+        print(f"== {arch} x {shape}  mesh={'(2,16,16)' if multi_pod else '(16,16)'} "
+              f"strategy={strategy}  compile={rec['compile_s']}s")
+        print(f"   memory/device: args={arg_b/2**30:.2f}GiB out={out_b/2**30:.2f}GiB "
+              f"temp={tmp_b/2**30:.2f}GiB peak={peak/2**30:.2f}GiB "
+              f"(cpu-f32-upcast {upcast/2**30:.2f}GiB; tpu-est "
+              f"{peak_tpu/2**30:.2f}GiB) fits16GiB={rec['memory']['fits_16GiB']}")
+        print(f"   cost/device: {flops/1e9:.1f} GFLOPs, {bytes_acc/2**30:.2f} GiB accessed")
+        print(f"   collectives: " + (", ".join(
+            f"{k}={v/2**20:.1f}MiB" for k, v in sorted(coll.items())) or "none"))
+        print(f"   roofline: compute={t_comp*1e3:.2f}ms memory={t_mem*1e3:.2f}ms "
+              f"collective={t_coll*1e3:.2f}ms dominant={dominant} "
+              f"useful_flops={rec['roofline']['useful_flops_ratio']*100:.1f}%")
+        sys.stdout.flush()
+    if dump_shapes:
+        dump_big_shapes(hlo)
+        sys.stdout.flush()
+    return rec
+
+
+def all_cells():
+    from ..configs import ARCHS, get_meta
+    for arch in ARCHS:
+        meta = get_meta(arch)
+        for shape in meta.shapes:
+            yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--strategy", default=None,
+                    help="default: fsdp_tp for train cells, serve_2d for serving")
+    ap.add_argument("--out", default=None, help="append JSON lines here")
+    ap.add_argument("--dump-shapes", action="store_true")
+    args = ap.parse_args()
+
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               strategy=args.strategy,
+                               dump_shapes=args.dump_shapes)
+            except Exception as e:  # a failure here is a bug in the system
+                print(f"!! FAIL {arch} x {shape} multi_pod={mp}: {type(e).__name__}: {e}")
+                failures.append((arch, shape, mp, str(e)))
+                continue
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        for f4 in failures:
+            print("  ", f4[:3])
+        sys.exit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

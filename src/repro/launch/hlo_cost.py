@@ -1,0 +1,221 @@
+"""Trip-count-aware cost analysis over post-optimization HLO text.
+
+Why: ``compiled.cost_analysis()`` counts a while-loop body ONCE, but our
+models run scan-over-layers (x88 for granite) and scan-over-chunks — so
+XLA's numbers under-count FLOPs/bytes by the trip count, and the
+FSDP weight all-gathers that live *inside* the layer scan would vanish
+from the collective tally. XLA does record the static trip count
+(``backend_config={"known_trip_count":{"n":...}}``), so this module
+re-derives module-level totals by walking the call graph with
+multiplicities:
+
+    ENTRY --(x1)--> fusion/call computations
+          --(xN)--> while body/condition computations
+
+Costs per instruction:
+    flops            2 * prod(result_dims) * prod(lhs contracting dims)
+                     for dot; convolutions are absent from our models.
+    transcendentals  result elements of exp/log/tanh/rsqrt/power/logistic
+    bytes            operands + results of every top-level (unfused)
+                     instruction except free ops (parameter/constant/
+                     tuple/gte/bitcast/reshape) — mirrors HloCostAnalysis.
+    collective bytes result-shape bytes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute
+                     (one entry per *-start; *-done skipped).
+
+Everything is computed per SPMD partition = per device, matching the
+denominators in the roofline formulas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\(")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLED_BRACED = re.compile(
+    r"(branch_computations|calls)=\{([^}]*)\}")
+_CALLED_SINGLE = re.compile(
+    r"(body|condition|calls|to_apply)=%([\w.\-]+)")
+
+_TRANSCEND = {"exponential", "log", "tanh", "rsqrt", "power", "logistic",
+              "sqrt", "cosine", "sine", "exponential-minus-one", "log-plus-one"}
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "reshape", "iota", "partition-id", "replica-id",
+         "custom-call"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)  # (callee, mult)
+    fused: bool = False  # called via fusion => bytes not counted inside
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    transcendentals: float
+    bytes: float
+    coll_bytes: dict
+    per_comp: dict
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+
+def _parse_operand_shapes(line: str, shapes: dict) -> list[str]:
+    """Shapes of %operand references on an instruction line (args only)."""
+    args = line.split("(", 1)[1]
+    # cut trailing attribute clauses that also contain %refs (to_apply=...)
+    out = []
+    for m in re.finditer(r"%([\w.\-]+)", args):
+        nm = m.group(1)
+        if nm in shapes:
+            out.append(shapes[nm])
+    return out
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry: str | None = None
+    shapes: dict[str, str] = {}
+    fused_names: set[str] = set()
+
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{"):
+            cur = _Comp(hdr.group(2))
+            comps[cur.name] = cur
+            if hdr.group(1):
+                entry = cur.name
+            shapes = {}
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode = m.group(1), m.group(2), m.group(3)
+        shapes[name] = shape_str
+        elems, rbytes = _shape_elems_bytes(shape_str)
+
+        # call graph edges
+        if opcode == "while":
+            t = _TRIP.search(line)
+            w_mult = int(t.group(1)) if t else 1
+        edges: list[tuple[str, str]] = []
+        for cm in _CALLED_SINGLE.finditer(line):
+            edges.append((cm.group(1), cm.group(2)))
+        for cm in _CALLED_BRACED.finditer(line):
+            for c in cm.group(2).split(","):
+                edges.append((cm.group(1), c.strip().lstrip("%")))
+        for attr, callee in edges:
+            if opcode == "while" and attr in ("body", "condition"):
+                cur.calls.append((callee, w_mult))
+            elif opcode == "fusion" and attr == "calls":
+                cur.calls.append((callee, 1))
+                fused_names.add(callee)
+            elif opcode in ("call", "conditional", "map", "custom-call"):
+                cur.calls.append((callee, 1))
+            # reduce/scatter/sort to_apply lambdas: negligible, skip
+
+        if opcode == "dot":
+            lhs_ops = _parse_operand_shapes(line, shapes)
+            contract = 1
+            cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            if cd and lhs_ops:
+                dims_str = _SHAPE_RE.search(lhs_ops[0])
+                if dims_str and dims_str.group(2):
+                    ldims = [int(x) for x in dims_str.group(2).split(",")]
+                    for i in (int(x) for x in cd.group(1).split(",") if x):
+                        if i < len(ldims):
+                            contract *= ldims[i]
+            cur.flops += 2.0 * elems * contract
+        elif opcode in _TRANSCEND:
+            cur.transcendentals += elems
+
+        if opcode in _FREE:
+            continue
+        obytes = sum(_shape_elems_bytes(s)[1]
+                     for s in _parse_operand_shapes(line, shapes))
+        cur.bytes += rbytes + obytes
+
+        for kind in _COLLECTIVES:
+            if opcode == kind or opcode == kind + "-start":
+                cur.coll_bytes[kind] = cur.coll_bytes.get(kind, 0) + rbytes
+                break
+
+    # propagate multiplicities from ENTRY
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is not None:
+        stack = [(entry, 1.0)]
+        while stack:
+            name, m_ = stack.pop()
+            if name not in comps:
+                continue
+            mult[name] += m_
+            for callee, k in comps[name].calls:
+                stack.append((callee, m_ * k))
+
+    tot = HloCost(0.0, 0.0, 0.0, {}, {})
+    for name, c in comps.items():
+        m_ = mult.get(name, 0.0)
+        if m_ == 0.0:
+            continue
+        tot.flops += m_ * c.flops
+        tot.transcendentals += m_ * c.transcendentals
+        if name not in fused_names:
+            tot.bytes += m_ * c.bytes
+        for k, v in c.coll_bytes.items():
+            tot.coll_bytes[k] = tot.coll_bytes.get(k, 0.0) + m_ * v
+        tot.per_comp[name] = {
+            "mult": m_, "flops": c.flops, "bytes": c.bytes,
+            "coll": dict(c.coll_bytes),
+        }
+    return tot

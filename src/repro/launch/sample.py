@@ -1,0 +1,76 @@
+"""Diffusion sampling driver: SA-Solver over any backbone in denoiser mode.
+
+    PYTHONPATH=src python -m repro.launch.sample --arch dit-s --smoke \
+        --batch 8 --seq 64 --nfe 20 --tau 1.0
+
+This is the paper's technique as a first-class serving feature: the
+backbone (any arch built with denoiser_latent) is the x0-prediction model
+x_theta; SA-Solver (Algorithm 1) drives the reverse variance-controlled
+SDE. Works for the transformer family natively and for rwkv6/zamba2 via
+their bidirectional denoiser adaptation.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke
+from ..core import SASolver, SASolverConfig, get_schedule
+from ..models import build_model, init_params
+
+
+def build_denoiser(arch: str, smoke: bool, latent: int | None):
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    if getattr(cfg, "denoiser_latent", None) is None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, denoiser_latent=latent or 16)
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_defs(), jnp.float32)
+    return cfg, model, params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dit-s")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--latent", type=int, default=None)
+    ap.add_argument("--nfe", type=int, default=20)
+    ap.add_argument("--tau", type=float, default=1.0)
+    ap.add_argument("--predictor", type=int, default=3)
+    ap.add_argument("--corrector", type=int, default=3)
+    ap.add_argument("--schedule", default="vp_linear")
+    args = ap.parse_args()
+
+    cfg, model, params = build_denoiser(args.arch, args.smoke, args.latent)
+    dz = cfg.denoiser_latent
+    sched = get_schedule(args.schedule)
+    scfg = SASolverConfig(
+        n_steps=args.nfe - 1, predictor_order=args.predictor,
+        corrector_order=args.corrector, tau=args.tau,
+    )
+    solver = SASolver(sched, scfg)
+
+    def model_fn(x, t):
+        return model.denoise(params, x, t)
+
+    xT = solver.init_noise(jax.random.PRNGKey(1), (args.batch, args.seq, dz))
+    sample_jit = jax.jit(lambda x, k: solver.sample(model_fn, x, k))
+    t0 = time.perf_counter()
+    x0 = jax.block_until_ready(sample_jit(xT, jax.random.PRNGKey(2)))
+    t1 = time.perf_counter()
+    x0b = jax.block_until_ready(sample_jit(xT, jax.random.PRNGKey(3)))
+    t2 = time.perf_counter()
+    print(f"arch={cfg.name} latent={dz} NFE={scfg.nfe} tau={args.tau} "
+          f"P{args.predictor}C{args.corrector}")
+    print(f"compile+run {t1-t0:.2f}s, steady {t2-t1:.2f}s; "
+          f"out mean={float(jnp.mean(x0)):.4f} std={float(jnp.std(x0)):.4f} "
+          f"finite={bool(jnp.all(jnp.isfinite(x0)))}")
+    assert bool(jnp.all(jnp.isfinite(x0)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,426 @@
+"""Mamba2 (SSD) block and the Zamba2 hybrid (arXiv:2411.15242).
+
+Mamba2 state-space recurrence, per head h with state  h_state in R^{P x N}:
+
+    a_t   = exp(dt_t * A_h)                      (A_h < 0, scalar per head)
+    h_t   = a_t * h_{t-1} + dt_t * (x_t  B_t^T)  (outer product, P x N)
+    y_t   = h_t C_t + D_h * x_t                  (contraction over N)
+
+Note y_t reads the *post-update* state (the diagonal/current token is
+included), unlike the RWKV6 convention. Two evaluation paths:
+
+  - ``ssd_sequential``: exact lax.scan (oracle + decode).
+  - ``ssd_chunked``: chunked "segsum" evaluation (the SSD algorithm of the
+    Mamba2 paper): per-head scalar decay makes the intra-chunk pairwise
+    matrix [C, C] — cheap, and all exponents <= 0 (overflow-safe).
+
+Zamba2 stacks Mamba2 blocks and applies ONE shared transformer block (full
+attention + MLP over concat(hidden, initial-embedding), 2*d wide) every
+``shared_period`` blocks — parameters shared across applications, projected
+back to d. KV cache exists only for the shared-attention applications, so
+long-context decode memory is O(n_shared_apps * S) not O(L * S).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import AttentionConfig, attn_defs, cache_shape, gqa_forward
+from .common import (ParamDef, mlp_apply, mlp_defs, rms_norm, shard_batch_dim,
+                     softmax_cross_entropy)
+
+__all__ = ["Mamba2Config", "Zamba2Config", "Zamba2", "ssd_sequential", "ssd_chunked"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_inner: int = 512        # expand * d_model
+    head_dim: int = 64        # P
+    n_groups: int = 1         # G (B, C shared per group)
+    d_state: int = 64         # N
+    conv_width: int = 4
+    chunk_size: int = 32
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# SSD recurrence
+# ---------------------------------------------------------------------------
+
+
+def ssd_sequential(x, dt, A, B, C, D, h0):
+    """x [B,T,H,P]; dt [B,T,H]; A [H]; B,C [B,T,G,N]; D [H]; h0 [B,H,P,N]."""
+    Bb, T, H, P = x.shape
+    G = B.shape[2]
+    rep = H // G
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bm = jnp.repeat(B.astype(jnp.float32), rep, axis=2)   # [B,T,H,N]
+    Cm = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                              # [B,H,P],[B,H],[B,H,N]
+        a = jnp.exp(dtt * A)                               # [B,H]
+        upd = dtt[..., None, None] * (xt[..., :, None] * bt[..., None, :])
+        h = a[..., None, None] * h + upd                   # [B,H,P,N]
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct) + D[None, :, None] * xt
+        return h, y
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (x, dt, Bm, Cm))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), inputs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def _segsum(logd):
+    """logd [..., C] -> pairwise inclusive-exclusive sums S[t,s] =
+    sum_{u=s+1..t} logd[u], lower-triangular (t >= s), else -inf."""
+    C = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    S = cs[..., :, None] - cs[..., None, :]                # [..., t, s]
+    mask = jnp.tril(jnp.ones((C, C), bool), k=0)
+    return jnp.where(mask, S, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, h0, chunk: int = 32):
+    """Chunked SSD; identical results to ``ssd_sequential``.
+
+    lax.scan over chunks: live memory is one chunk's [B,H,C,C] segsum
+    matrix and the running state, never the whole sequence in f32 (inputs
+    may be bf16 and are upcast per chunk)."""
+    Bb, T, H, P = x.shape
+    if T % chunk != 0:
+        raise ValueError(f"T={T} not divisible by chunk={chunk}")
+    n = T // chunk
+    G = B.shape[2]
+    rep = H // G
+    N = B.shape[3]
+
+    def resh(a):  # [B,T,...] -> [n,B,C,...]
+        return jnp.swapaxes(a.reshape(Bb, n, chunk, *a.shape[2:]), 0, 1)
+
+    @jax.checkpoint
+    def body(h, inp):
+        xc, dtc, Bc, Cc = inp
+        xc = xc.astype(jnp.float32)                        # [B,C,H,P]
+        dtc = dtc.astype(jnp.float32)                      # [B,C,H]
+        Bm = jnp.repeat(Bc.astype(jnp.float32), rep, axis=2)  # [B,C,H,N]
+        Cm = jnp.repeat(Cc.astype(jnp.float32), rep, axis=2)
+        logd = dtc * A                                     # [B,C,H] <= 0
+        logd_t = jnp.moveaxis(logd, -1, -2)                # [B,H,C]
+        Lcum = jnp.cumsum(logd_t, axis=-1)
+        Ltot = Lcum[..., -1]                               # [B,H]
+        seg = jnp.exp(_segsum(logd_t))                     # [B,H,C,C]
+        CB = jnp.einsum("bthx,bshx->bhts", Cm, Bm)
+        y = jnp.einsum("bhts,bsh,bshp->bthp", CB * seg, dtc, xc)
+        # cross-chunk read of entering state (decay includes step t)
+        w_in = jnp.moveaxis(jnp.exp(Lcum), -1, -2)         # [B,C,H]
+        y = y + jnp.einsum("bth,bthx,bhpx->bthp", w_in, Cm, h)
+        y = y + D[None, None, :, None] * xc
+        # state update
+        w_end = jnp.moveaxis(jnp.exp(Ltot[..., None] - Lcum), -1, -2)
+        dS = jnp.einsum("bth,bth,bthp,bthx->bhpx", w_end, dtc, xc, Bm)
+        h = jnp.exp(Ltot)[..., None, None] * h + dS
+        return h, y
+
+    h_fin, ys = jax.lax.scan(
+        body, h0.astype(jnp.float32),
+        (resh(x), resh(dt), resh(B), resh(C)),
+    )
+    y = jnp.swapaxes(ys, 0, 1).reshape(Bb, T, H, P)
+    return y, h_fin
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (functional)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_defs(d_model: int, m: Mamba2Config) -> dict:
+    di, G, N, H = m.d_inner, m.n_groups, m.d_state, m.n_heads
+    conv_dim = di + 2 * G * N
+    return {
+        "in_proj": ParamDef((d_model, 2 * di + 2 * G * N + H),
+                            ("embed", "ssm_heads"), "scaled"),
+        "conv_w": ParamDef((m.conv_width, conv_dim), (None, "ssm_heads"), "scaled", 0.5),
+        "conv_b": ParamDef((conv_dim,), ("ssm_heads",), "zeros"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), "normal", 0.5),
+        "A_log": ParamDef((H,), ("ssm_heads",), "normal", 0.5),
+        "D": ParamDef((H,), ("ssm_heads",), "normal", 0.5),
+        "norm": ParamDef((di,), ("ssm_heads",), "zeros"),
+        "out_proj": ParamDef((di, d_model), ("ssm_heads", "embed"), "scaled"),
+    }
+
+
+def _causal_conv(u, w, b, conv_state):
+    """Depthwise causal conv. u [B,T,Cd]; w [K,Cd]; conv_state [B,K-1,Cd]."""
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)  # [B,T+K-1,Cd]
+    out = sum(full[:, i : i + u.shape[1], :] * w[i].astype(u.dtype)
+              for i in range(K))
+    new_state = full[:, -(K - 1):, :] if K > 1 else conv_state
+    return jax.nn.silu(out + b.astype(u.dtype)), new_state
+
+
+def mamba2_apply(p, m: Mamba2Config, x, cache, *, chunked: bool):
+    """x [B,T,d]. cache: {"conv": [B,K-1,conv_dim], "h": [B,H,P,N]}."""
+    Bb, T, d = x.shape
+    di, G, N, H, P = m.d_inner, m.n_groups, m.d_state, m.n_heads, m.head_dim
+    proj = x @ p["in_proj"].astype(x.dtype)   # stays in compute dtype
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+    xs, Bv, Cv = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(Bb, T, H, P)
+    Bv = Bv.reshape(Bb, T, G, N)
+    Cv = Cv.reshape(Bb, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,T,H] f32
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # [H] < 0
+
+    if chunked and T % m.chunk_size == 0 and T > m.chunk_size:
+        y, h = ssd_chunked(xs, dt, A, Bv, Cv, p["D"], cache["h"], m.chunk_size)
+    else:
+        y, h = ssd_sequential(xs, dt, A, Bv, Cv, p["D"], cache["h"])
+    y = y.reshape(Bb, T, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "h": h}
+
+
+def mamba2_cache_shapes(m: Mamba2Config, batch: int, dtype=jnp.float32) -> dict:
+    conv_dim = m.d_inner + 2 * m.n_groups * m.d_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, m.conv_width - 1, conv_dim), dtype),
+        "h": jax.ShapeDtypeStruct((batch, m.n_heads, m.head_dim, m.d_state),
+                                  jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Zamba2Config:
+    name: str = "zamba2"
+    n_layers: int = 8            # number of Mamba2 blocks
+    d_model: int = 256
+    n_heads: int = 8             # shared attention heads (over 2*d)
+    n_kv_heads: int = 8
+    d_ff: int = 1024             # shared block MLP
+    vocab_size: int = 1024
+    mamba: Mamba2Config = Mamba2Config()
+    shared_period: int = 4       # apply shared block every k mamba blocks
+    rope_theta: float = 10000.0
+    remat: str = "none"
+    dtype: Any = jnp.bfloat16
+    cache_dtype: Any = jnp.bfloat16
+    denoiser_latent: int | None = None
+
+    @property
+    def n_shared_apps(self) -> int:
+        return self.n_layers // self.shared_period
+
+    def shared_attn_config(self) -> AttentionConfig:
+        d2 = 2 * self.d_model
+        return AttentionConfig(
+            d_model=d2, n_heads=self.n_heads, n_kv_heads=self.n_kv_heads,
+            head_dim=d2 // self.n_heads, rope_theta=self.rope_theta,
+            causal=True,
+        )
+
+    def param_count(self) -> tuple[int, int]:
+        d, m = self.d_model, self.mamba
+        di, G, N, H = m.d_inner, m.n_groups, m.d_state, m.n_heads
+        per_mamba = d * (2 * di + 2 * G * N + H) + m.conv_width * (di + 2 * G * N) \
+            + 3 * H + di + di * d
+        d2 = 2 * d
+        a = self.shared_attn_config()
+        shared = d2 * a.n_heads * a.head_dim * 2 + d2 * a.n_kv_heads * a.head_dim * 2 \
+            + 3 * d2 * self.d_ff + d2 * d
+        total = self.n_layers * per_mamba + shared + 2 * self.vocab_size * d
+        return total, total
+
+
+class Zamba2:
+    def __init__(self, cfg: Zamba2Config):
+        self.cfg = cfg
+        self.acfg = cfg.shared_attn_config()
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        d = cfg.d_model
+        stack = lambda defs, n: jax.tree.map(
+            lambda pd: ParamDef((n,) + pd.shape, (None,) + pd.axes, pd.init, pd.scale),
+            defs, is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+        block = {
+            "ln": ParamDef((d,), (None,), "zeros"),
+            "mamba": mamba2_defs(d, cfg.mamba),
+        }
+        return {
+            "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed"), "normal", 0.02),
+            "blocks": stack(block, cfg.n_layers),
+            "shared": {
+                "ln1": ParamDef((2 * d,), (None,), "zeros"),
+                "attn": attn_defs(self.acfg),
+                "ln2": ParamDef((2 * d,), (None,), "zeros"),
+                "mlp": mlp_defs(2 * d, cfg.d_ff, gated=True),
+                "out_proj": ParamDef((2 * d, d), (None, "embed"), "scaled", 0.1),
+            },
+            "ln_f": ParamDef((d,), (None,), "zeros"),
+            "lm_head": ParamDef((d, cfg.vocab_size), ("embed", "vocab"), "scaled"),
+        } | (
+            {} if cfg.denoiser_latent is None else {
+                "denoiser": {
+                    "in_proj": ParamDef((cfg.denoiser_latent, d),
+                                        (None, "embed"), "scaled"),
+                    "out_proj": ParamDef((d, cfg.denoiser_latent),
+                                         ("embed", None), "zeros"),
+                    "t_mlp1": ParamDef((256, d), (None, "embed"), "scaled"),
+                    "t_mlp2": ParamDef((d, d), ("embed", None), "scaled"),
+                }
+            }
+        )
+
+    # -- shared attention block -----------------------------------------
+    def _shared_block(self, p, x, emb0, kv_cache, cache_index):
+        h2 = jnp.concatenate([x, emb0], axis=-1)
+        a, kv_cache = gqa_forward(
+            p["attn"], self.acfg, rms_norm(h2, p["ln1"]),
+            cache=kv_cache, cache_index=cache_index,
+        )
+        h2 = h2 + a.astype(h2.dtype)
+        m = mlp_apply(p["mlp"], rms_norm(h2, p["ln2"]), "gelu", gated=True)
+        h2 = h2 + m.astype(h2.dtype)
+        return x + (h2 @ p["out_proj"]).astype(x.dtype), kv_cache
+
+    def _run(self, params, x, caches, *, chunked: bool, cache_index=None):
+        """Two-level scan: OUTER scan over shared-block groups (13 for the
+        81-layer config — a Python loop here duplicates the shared
+        attention block's HLO 13x: measured +50 GB of un-reused buffers),
+        INNER scan over the ``shared_period`` Mamba blocks of each group.
+        Shared-block params are loop-invariant in the outer scan."""
+        cfg = self.cfg
+        emb0 = x
+        idx = 0 if cache_index is None else cache_index
+        shared_kv = caches.get("shared_kv")
+        period = cfg.shared_period
+        n_groups = cfg.n_layers // period
+        n_main = n_groups * period
+        rem = cfg.n_layers - n_main
+
+        regroup = lambda tree: jax.tree.map(
+            lambda v: v[:n_main].reshape((n_groups, period) + v.shape[1:]),
+            tree)
+        tail = lambda tree: jax.tree.map(lambda v: v[n_main:], tree)
+
+        def mamba_scan(p_stack, xx, cache_stack):
+            def body(carry, layer_in):
+                lp, lc = layer_in
+                carry = shard_batch_dim(carry)  # pin batch at layer boundary
+                h = rms_norm(carry, lp["ln"])
+                out, lc = mamba2_apply(lp["mamba"], cfg.mamba, h, lc,
+                                       chunked=chunked)
+                return carry + out, lc
+            if cfg.remat == "full":
+                body = jax.checkpoint(body)
+            return jax.lax.scan(body, xx, (p_stack, cache_stack))
+
+        def group_body(xx, group_in):
+            gp, gc, kv = group_in
+            xx, mc = mamba_scan(gp, xx, gc)
+            xx, kv = self._shared_block(params["shared"], xx, emb0, kv, idx)
+            return xx, (mc, kv)
+
+        if cfg.remat == "full":
+            group_body = jax.checkpoint(group_body)
+        x, (mc_main, kv_out) = jax.lax.scan(
+            group_body, x,
+            (regroup(params["blocks"]), regroup(caches["mamba"]), shared_kv),
+        )
+        mc_main = jax.tree.map(
+            lambda v: v.reshape((n_main,) + v.shape[2:]), mc_main)
+        if rem:
+            x, mc_rem = mamba_scan(tail(params["blocks"]), x,
+                                   tail(caches["mamba"]))
+            mc_main = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), mc_main, mc_rem)
+        new_caches = {"mamba": mc_main}
+        if shared_kv is not None:
+            new_caches["shared_kv"] = kv_out
+        return x, new_caches
+
+    # -- public API --------------------------------------------------------
+    def cache_shapes(self, batch: int, s_max: int) -> dict:
+        cfg = self.cfg
+        mc = mamba2_cache_shapes(cfg.mamba, batch, cfg.cache_dtype)
+        L = cfg.n_layers
+        out = {
+            "mamba": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), mc),
+        }
+        if s_max > 0 and cfg.n_shared_apps > 0:
+            kv = cache_shape(self.acfg, batch, s_max, cfg.cache_dtype)
+            out["shared_kv"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (cfg.n_shared_apps,) + s.shape, s.dtype), kv)
+        return out
+
+    def init_cache(self, batch: int, s_max: int) -> dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, s_max))
+
+    def forward(self, params, batch):
+        x = params["embed"][batch["tokens"]].astype(self.cfg.dtype)
+        caches = self.init_cache(x.shape[0], 0)
+        # training path: full attention inside shared blocks, no kv cache
+        x, _ = self._run(params, x, caches, chunked=True)
+        logits = (rms_norm(x, params["ln_f"]) @ params["lm_head"]).astype(jnp.float32)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss_fn(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, batch, cache):
+        x = params["embed"][batch["tokens"]].astype(self.cfg.dtype)
+        x, cache = self._run(params, x, cache, chunked=True, cache_index=0)
+        logits = (rms_norm(x[:, -1:, :], params["ln_f"])
+                  @ params["lm_head"]).astype(jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, index):
+        x = params["embed"][tokens].astype(self.cfg.dtype)
+        x, cache = self._run(params, x, cache, chunked=False, cache_index=index)
+        logits = (rms_norm(x, params["ln_f"]) @ params["lm_head"]).astype(jnp.float32)
+        return logits, cache
+
+    # -- denoiser mode (SA-Solver integration) ---------------------------
+    def denoise(self, params, z, t):
+        """Mamba blocks run fwd + reversed and averaged; the shared attention
+        block drops its causal mask in denoiser mode (adaptation noted in
+        DESIGN.md). z [B,S,dz] -> x0-hat."""
+        from .transformer import timestep_embedding
+        cfg = self.cfg
+        assert cfg.denoiser_latent is not None
+        dp = params["denoiser"]
+        t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (z.shape[0],))
+        temb = timestep_embedding(t, 256)
+        tcond = jax.nn.silu(temb @ dp["t_mlp1"].astype(jnp.float32)) \
+            @ dp["t_mlp2"].astype(jnp.float32)
+        x = (z.astype(cfg.dtype) @ dp["in_proj"].astype(cfg.dtype))
+        x = x + tcond[:, None, :].astype(cfg.dtype)
+        caches = self.init_cache(z.shape[0], 0)
+        h_f, _ = self._run(params, x, caches, chunked=True)
+        h_b, _ = self._run(params, x[:, ::-1, :], caches, chunked=True)
+        h = 0.5 * (h_f + h_b[:, ::-1, :])
+        return (rms_norm(h, params["ln_f"])
+                @ dp["out_proj"].astype(h.dtype)).astype(jnp.float32)

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts block: top-k router + capacity-based dispatch.
+
+Dispatch is gather/scatter-based (GShard-style position truncation, no
+[T, E, C] one-hot monster): tokens pick top-k experts, each expert takes its
+first C tokens in sequence order, dropped tokens fall through on the
+residual. Expert weights are stacked [E, d, f] with the E axis sharded over
+the mesh "model" axis (expert parallelism); GSPMD inserts the token
+all-to-all/all-gather implied by resharding [T, d] -> [E, C, d].
+
+Aux load-balance loss is the Switch-Transformer form  E * sum_e f_e p_e.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ACTIVATIONS, ParamDef, mlp_apply, mlp_defs,
+                     shard_moe_dispatch)
+
+__all__ = ["MoEConfig", "moe_defs", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    n_shared: int = 0          # shared (always-on) experts, DeepSeek style
+    d_expert_ff: int = 2048
+    d_shared_ff: int = 2048    # total ff of the shared expert block
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    gated: bool = True
+    aux_weight: float = 0.01
+
+
+def moe_defs(d_model: int, cfg: MoEConfig) -> dict:
+    """Expert weights are 2D-sharded (experts x hidden-f): E over 'model'
+    (EP) and f over the data axes ("moe_ff" -> ('pod','data') in fsdp_tp).
+    Sharding f INSTEAD of d keeps ZeRO-3 storage density but removes the
+    per-(layer x microbatch) weight all-gather: x_e keeps full d, h comes
+    out f-sharded, and wo's f-contraction becomes partial sums + an
+    all-reduce of the (much smaller) activations — measured 38x less
+    collective traffic for deepseek train_4k (see EXPERIMENTS.md §Perf)."""
+    E, f = cfg.n_experts, cfg.d_expert_ff
+    d = {
+        "router": ParamDef((d_model, E), ("embed", None), "scaled"),
+        "wi": ParamDef((E, d_model, f), ("experts", None, "moe_ff"), "scaled"),
+        "wo": ParamDef((E, f, d_model), ("experts", "moe_ff", None), "scaled"),
+    }
+    if cfg.gated:
+        d["wg"] = ParamDef((E, d_model, f), ("experts", None, "moe_ff"), "scaled")
+    if cfg.n_shared > 0:
+        d["shared"] = mlp_defs(d_model, cfg.d_shared_ff, cfg.gated)
+    return d
+
+
+def moe_apply(p: dict, cfg: MoEConfig, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    GShard-style *grouped* dispatch: each batch row is an independent
+    routing group with its own capacity C = S*k/E*cf. The group dim of
+    [B, E, C, d] stays sharded over ('pod','data') while the expert dim is
+    sharded over 'model' — GSPMD lowers the group->expert reshard to the
+    canonical MoE all-to-all. (A single global-T cumsum would chain every
+    token through one serial dependency and force a replicated dispatch
+    tensor; grouped routing is what makes EP scale.)
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(S * k / E * cfg.capacity_factor))
+
+    def route(xr):
+        """xr [S, d] -> per-group dispatch tensors."""
+        logits = (xr @ p["router"].astype(xr.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)               # [S, E]
+        gate_k, idx_k = jax.lax.top_k(probs, k)               # [S, k]
+        gate_k = gate_k / jnp.maximum(jnp.sum(gate_k, -1, keepdims=True), 1e-9)
+        e_flat = idx_k.reshape(S * k)
+        g_flat = gate_k.reshape(S * k)
+        oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)       # [S*k, E]
+        pos = jnp.take_along_axis(
+            jnp.cumsum(oh, axis=0), e_flat[:, None], axis=1)[:, 0] - 1
+        keep = pos < C
+        dest = jnp.where(keep, e_flat * C + pos, E * C)       # sentinel: drop
+        tok_ids = jnp.repeat(jnp.arange(S), k)
+        dispatch = jnp.zeros((E * C,), jnp.int32).at[dest].set(
+            tok_ids, mode="drop")
+        gates_ec = jnp.zeros((E * C,), jnp.float32).at[dest].set(
+            g_flat, mode="drop")
+        x_e = xr[dispatch].reshape(E, C, d)
+        return x_e, gates_ec, dispatch, probs, idx_k
+
+    x_e, gates_ec, dispatch, probs, idx_k = jax.vmap(route)(x)  # [B,E,C,d] ..
+
+    # group->expert reshard (the MoE all-to-all): groups stay batch-sharded,
+    # experts take the model axis — must be pinned explicitly (see
+    # common.shard_moe_dispatch)
+    x_e = shard_moe_dispatch(x_e)
+    h = jnp.einsum("becd,edf->becf", x_e, p["wi"].astype(x.dtype))
+    if cfg.gated:
+        h = ACTIVATIONS[cfg.act](
+            jnp.einsum("becd,edf->becf", x_e, p["wg"].astype(x.dtype))) * h
+    else:
+        h = ACTIVATIONS[cfg.act](h)
+    h = shard_moe_dispatch(h)
+    y_e = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+    y_e = shard_moe_dispatch(y_e).reshape(B, E * C, d)
+
+    def combine(ye, gg, dd):
+        return jnp.zeros((S, d), x.dtype).at[dd].add(
+            (ye * gg[:, None].astype(ye.dtype)).astype(x.dtype), mode="drop")
+
+    out = jax.vmap(combine)(y_e, gates_ec, dispatch)
+
+    if cfg.n_shared > 0:
+        out = out + mlp_apply(p["shared"], x, cfg.act, cfg.gated).astype(x.dtype)
+
+    # Switch aux loss: fraction of routed slots per expert x mean prob
+    f_e = jnp.mean(jax.nn.one_hot(idx_k, E, dtype=jnp.float32), axis=(0, 1, 2)) * k
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_weight * E * jnp.sum(f_e * p_e)
+    return out, aux

@@ -1,0 +1,372 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+decay and token-shift ddlerp.
+
+Time-mixing recurrence, per head with state S in R^{hd x hd}:
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+where w_t = exp(-exp(w0 + lora(x-shifted))) in (0, 1) is the *data-dependent*
+per-channel decay — the Finch contribution over RWKV-5's static decay.
+
+Two equivalent evaluation paths:
+  - ``wkv_sequential``: exact lax.scan over time. O(T) steps; used as the
+    oracle (kernels/rwkv6_scan/ref.py wraps it) and for decode (T=1).
+  - ``wkv_chunked``: scan over chunks of size C with intra-chunk pairwise
+    log-decay differences. All pairwise ratios exp(L_{t-1}-L_s), s<=t are
+    <= 1, so this form is unconditionally overflow-safe (unlike the
+    factorized exp(L)·exp(-L) matmul form). The Pallas kernel mirrors this.
+
+Cache layout for serving: per layer
+    { "S": [B, H, hd, hd], "tm_shift": [B, d], "cm_shift": [B, d] }
+— O(1) in context length; this is why rwkv6 runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, shard_batch_dim, softmax_cross_entropy
+
+__all__ = ["RWKV6Config", "RWKV6", "wkv_sequential", "wkv_chunked"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    name: str = "rwkv6"
+    n_layers: int = 4
+    d_model: int = 256
+    head_dim: int = 64
+    d_ff: int = 896
+    vocab_size: int = 1024
+    decay_lora: int = 64
+    tshift_lora: int = 32
+    chunk_size: int = 32
+    remat: str = "none"
+    dtype: Any = jnp.bfloat16
+    use_pallas: bool = False
+    # denoiser mode (SA-Solver integration): continuous-latent heads +
+    # time conditioning; the causal recurrence is run fwd and on the
+    # time-reversed sequence and averaged (bidirectional adaptation).
+    denoiser_latent: int | None = None
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    def param_count(self) -> tuple[int, int]:
+        d, f, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab_size
+        tm = 4 * d * d + d * self.decay_lora * 2 + d * (5 * self.tshift_lora) \
+            + 5 * self.tshift_lora * d
+        cm = d * f + f * d + d * d
+        total = L * (tm + cm) + 2 * V * d
+        return total, total
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence
+# ---------------------------------------------------------------------------
+
+
+def wkv_sequential(r, k, v, logw, u, S0):
+    """Exact recurrence. r,k,v,logw: [B,T,H,hd]; u: [H,hd]; S0: [B,H,hd,hd].
+
+    Returns (y [B,T,H,hd], S_T). All math f32.
+    """
+    r, k, v = (a.astype(jnp.float32) for a in (r, k, v))
+    logw = logw.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, lw = inp  # [B,H,hd]
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[..., :, None] * kv)
+        S = jnp.exp(lw)[..., :, None] * S + kv
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    S, ys = jax.lax.scan(step, S0.astype(jnp.float32), inputs)
+    return jnp.moveaxis(ys, 0, 1), S
+
+
+def wkv_chunked(r, k, v, logw, u, S0, chunk: int = 32):
+    """Chunked evaluation, mathematically identical to ``wkv_sequential``.
+
+    Intra-chunk term uses pairwise decayed dot products
+        A[t,s] = sum_i r_t[i] k_s[i] exp(L_{t-1}[i] - L_s[i]),  s < t
+    with L the inclusive cumulative log-decay; all exponents are <= 0.
+
+    Structured as a lax.scan over chunks so live memory is ONE chunk's
+    pairwise tensor [B, C, C, H, hd], not the whole sequence's (43 GB at
+    32k/d2560 if materialized at once). Inputs may be bf16 (upcast per
+    chunk); logw should be f32 (decay precision).
+    """
+    B, T, H, hd = r.shape
+    if T % chunk != 0:
+        raise ValueError(f"T={T} must be divisible by chunk={chunk}")
+    n = T // chunk
+    u = u.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # strict lower
+
+    def resh(a):  # [B,T,H,hd] -> [n,B,C,H,hd] (scan axis leading)
+        return jnp.swapaxes(a.reshape(B, n, chunk, H, hd), 0, 1)
+
+    @jax.checkpoint
+    def body(S, inp):
+        rc, kc, vc, lwc = (a.astype(jnp.float32) for a in inp)  # [B,C,H,hd]
+        L = jnp.cumsum(lwc, axis=1)                       # inclusive
+        Lprev = L - lwc
+        Ltot = L[:, -1]                                   # [B,H,hd]
+        D = Lprev[:, :, None] - L[:, None, :]             # [B,C,C,H,hd]
+        D = jnp.where(tri[None, :, :, None, None], D, -jnp.inf)
+        # NOTE (EXPERIMENTS.md §Perf R2, refuted): holding this pairwise
+        # tensor in bf16 does NOT reduce the CPU-lowered bytes (XLA-CPU
+        # re-upcasts bf16 contractions to f32, adding conversion passes)
+        # and costs 3500x accuracy (1.4e-5 -> 4.9e-2). Kept f32; the real
+        # fix is kernels/rwkv6_scan.py, which never materializes D in HBM.
+        A = jnp.einsum("bthi,bshi,btshi->btsh", rc, kc, jnp.exp(D))
+        diag = jnp.einsum("bthi,hi,bthi->bth", rc, u, kc)
+        y = jnp.einsum("btsh,bshj->bthj", A, vc) + diag[..., None] * vc
+        y = y + jnp.einsum("bthi,bhij->bthj", rc * jnp.exp(Lprev), S)
+        k_dec = kc * jnp.exp(Ltot[:, None] - L)
+        S = jnp.exp(Ltot)[..., :, None] * S \
+            + jnp.einsum("bthi,bthj->bhij", k_dec, vc)
+        return S, y
+
+    S_fin, ys = jax.lax.scan(
+        body, S0.astype(jnp.float32),
+        (resh(r), resh(k), resh(v), resh(logw.astype(jnp.float32))),
+    )
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, T, H, hd)
+    return y, S_fin
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x, shift_state):
+    """sx_t = x_{t-1}; position 0 takes shift_state. x [B,T,d]."""
+    sx = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    return sx
+
+
+def group_norm(x, gamma, beta, n_groups, eps=64e-5):
+    """Per-head group norm over the flattened head dim. x [B,T,d]."""
+    B, T, d = x.shape
+    xg = x.reshape(B, T, n_groups, d // n_groups).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    out = xg.reshape(B, T, d) * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out
+
+
+class RWKV6:
+    def __init__(self, cfg: RWKV6Config):
+        self.cfg = cfg
+
+    # -- parameters ------------------------------------------------------
+    def _layer_defs(self) -> dict:
+        cfg = self.cfg
+        d, ts, dl, f = cfg.d_model, cfg.tshift_lora, cfg.decay_lora, cfg.d_ff
+        H, hd = cfg.n_heads, cfg.head_dim
+        return {
+            "ln1": ParamDef((d,), (None,), "ones"),
+            "ln1b": ParamDef((d,), (None,), "zeros"),
+            "ln2": ParamDef((d,), (None,), "ones"),
+            "ln2b": ParamDef((d,), (None,), "zeros"),
+            "tm": {
+                "mu_x": ParamDef((d,), (None,), "zeros"),
+                "mu": ParamDef((5, d), (None, None), "zeros"),
+                "ts_w1": ParamDef((d, 5 * ts), ("embed", None), "scaled", 0.1),
+                "ts_w2": ParamDef((5, ts, d), (None, None, "embed"), "scaled", 0.1),
+                "w0": ParamDef((d,), (None,), "normal", 0.5),
+                "wa": ParamDef((d, dl), ("embed", None), "scaled", 0.1),
+                "wb": ParamDef((dl, d), (None, "embed"), "scaled", 0.1),
+                "u": ParamDef((H, hd), ("heads", None), "normal", 0.5),
+                "wr": ParamDef((d, d), ("embed", "heads_flat"), "scaled"),
+                "wk": ParamDef((d, d), ("embed", "heads_flat"), "scaled"),
+                "wv": ParamDef((d, d), ("embed", "heads_flat"), "scaled"),
+                "wg": ParamDef((d, d), ("embed", "heads_flat"), "scaled"),
+                "wo": ParamDef((d, d), ("heads_flat", "embed"), "scaled"),
+                "gn_g": ParamDef((d,), (None,), "ones"),
+                "gn_b": ParamDef((d,), (None,), "zeros"),
+            },
+            "cm": {
+                "mu_k": ParamDef((d,), (None,), "zeros"),
+                "mu_r": ParamDef((d,), (None,), "zeros"),
+                "wk": ParamDef((d, f), ("embed", "mlp"), "scaled"),
+                "wv": ParamDef((f, d), ("mlp", "embed"), "scaled"),
+                "wr": ParamDef((d, d), ("embed", None), "scaled"),
+            },
+        }
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        stack = lambda defs: jax.tree.map(
+            lambda pd: ParamDef((cfg.n_layers,) + pd.shape, (None,) + pd.axes,
+                                pd.init, pd.scale),
+            defs, is_leaf=lambda x: isinstance(x, ParamDef),
+        )
+        return {
+            "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              "normal", 0.02),
+            "ln_in": ParamDef((cfg.d_model,), (None,), "ones"),
+            "ln_inb": ParamDef((cfg.d_model,), (None,), "zeros"),
+            "blocks": stack(self._layer_defs()),
+            "ln_f": ParamDef((cfg.d_model,), (None,), "ones"),
+            "ln_fb": ParamDef((cfg.d_model,), (None,), "zeros"),
+            "lm_head": ParamDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                "scaled"),
+        } | (
+            {} if cfg.denoiser_latent is None else {
+                "denoiser": {
+                    "in_proj": ParamDef((cfg.denoiser_latent, cfg.d_model),
+                                        (None, "embed"), "scaled"),
+                    "out_proj": ParamDef((cfg.d_model, cfg.denoiser_latent),
+                                         ("embed", None), "zeros"),
+                    "t_mlp1": ParamDef((256, cfg.d_model), (None, "embed"), "scaled"),
+                    "t_mlp2": ParamDef((cfg.d_model, cfg.d_model),
+                                       ("embed", None), "scaled"),
+                }
+            }
+        )
+
+    # -- blocks ----------------------------------------------------------
+    def _time_mix(self, p, x, shift_state, S0, *, chunked: bool):
+        cfg = self.cfg
+        B, T, d = x.shape
+        H, hd = cfg.n_heads, cfg.head_dim
+        xf = x.astype(jnp.float32)
+        sx = _token_shift(xf, shift_state) - xf              # (sx - x)
+
+        z = xf + sx * p["mu_x"]
+        dd = jnp.tanh(z @ p["ts_w1"]).reshape(B, T, 5, -1)   # [B,T,5,ts]
+        deltas = jnp.einsum("btfk,fkd->btfd", dd, p["ts_w2"])  # [B,T,5,d]
+        mix = p["mu"][None, None] + deltas                   # [B,T,5,d]
+        xw, xk, xv, xr, xg = [xf + sx * mix[:, :, i] for i in range(5)]
+
+        logw = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["wa"]) @ p["wb"])
+        logw = jnp.clip(logw, -8.0, -1e-5)
+        r = (xr @ p["wr"]).reshape(B, T, H, hd)
+        k = (xk @ p["wk"]).reshape(B, T, H, hd)
+        v = (xv @ p["wv"]).reshape(B, T, H, hd)
+        g = jax.nn.silu(xg @ p["wg"])
+        logw = logw.reshape(B, T, H, hd)
+
+        if cfg.use_pallas and chunked:
+            from ..kernels import ops as kops
+            y, S = kops.wkv(r, k, v, logw, p["u"], S0, chunk=cfg.chunk_size,
+                            mode="kernel")
+        elif chunked and T % cfg.chunk_size == 0 and T > cfg.chunk_size:
+            y, S = wkv_chunked(r, k, v, logw, p["u"], S0, cfg.chunk_size)
+        else:
+            y, S = wkv_sequential(r, k, v, logw, p["u"], S0)
+        y = group_norm(y.reshape(B, T, d), p["gn_g"], p["gn_b"], H)
+        out = ((y * g) @ p["wo"]).astype(x.dtype)
+        return out, xf[:, -1, :], S
+
+    def _channel_mix(self, p, x, shift_state):
+        xf = x.astype(jnp.float32)
+        sx = _token_shift(xf, shift_state) - xf
+        xk = xf + sx * p["mu_k"]
+        xr = xf + sx * p["mu_r"]
+        kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+        out = (jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])).astype(x.dtype)
+        return out, xf[:, -1, :]
+
+    def _block(self, p, x, cache, *, chunked: bool):
+        from .common import layer_norm
+        h = layer_norm(x, p["ln1"], p["ln1b"])
+        tm_out, tm_shift, S = self._time_mix(
+            p["tm"], h, cache["tm_shift"], cache["S"], chunked=chunked
+        )
+        x = x + tm_out
+        h = layer_norm(x, p["ln2"], p["ln2b"])
+        cm_out, cm_shift = self._channel_mix(p["cm"], h, cache["cm_shift"])
+        x = x + cm_out
+        return x, {"S": S, "tm_shift": tm_shift, "cm_shift": cm_shift}
+
+    def _run(self, params, x, caches, *, chunked: bool):
+        from .common import layer_norm
+        cfg = self.cfg
+        x = layer_norm(x, params["ln_in"], params["ln_inb"])
+
+        def body(carry, layer_in):
+            xx = carry
+            lp, lcache = layer_in
+            xx = shard_batch_dim(xx)  # pin batch->data at layer boundary
+            xx, out_cache = self._block(lp, xx, lcache, chunked=chunked)
+            return xx, out_cache
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+        x = layer_norm(x, params["ln_f"], params["ln_fb"])
+        return x, new_caches
+
+    # -- public API --------------------------------------------------------
+    def cache_shapes(self, batch: int, s_max: int = 0) -> dict:
+        cfg = self.cfg
+        L, H, hd, d = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.d_model
+        return {
+            "S": jax.ShapeDtypeStruct((L, batch, H, hd, hd), jnp.float32),
+            "tm_shift": jax.ShapeDtypeStruct((L, batch, d), jnp.float32),
+            "cm_shift": jax.ShapeDtypeStruct((L, batch, d), jnp.float32),
+        }
+
+    def init_cache(self, batch: int, s_max: int = 0) -> dict:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, s_max))
+
+    def forward(self, params, batch):
+        x = params["embed"][batch["tokens"]].astype(self.cfg.dtype)
+        caches = self.init_cache(x.shape[0])
+        x, _ = self._run(params, x, caches, chunked=True)
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss_fn(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    def prefill(self, params, batch, cache):
+        x = params["embed"][batch["tokens"]].astype(self.cfg.dtype)
+        x, cache = self._run(params, x, cache, chunked=True)
+        logits = (x[:, -1:, :] @ params["lm_head"]).astype(jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, index=None):
+        del index  # state carries all context
+        x = params["embed"][tokens].astype(self.cfg.dtype)
+        x, cache = self._run(params, x, cache, chunked=False)
+        logits = (x @ params["lm_head"]).astype(jnp.float32)
+        return logits, cache
+
+    # -- denoiser mode (SA-Solver integration) ---------------------------
+    def denoise(self, params, z, t):
+        """z [B,S,dz] -> x0-hat. Causal recurrence run forward AND on the
+        reversed sequence, averaged (the bidirectional adaptation recorded
+        in DESIGN.md §Arch-applicability)."""
+        from .transformer import timestep_embedding
+        cfg = self.cfg
+        assert cfg.denoiser_latent is not None
+        dp = params["denoiser"]
+        t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (z.shape[0],))
+        temb = timestep_embedding(t, 256)
+        tcond = jax.nn.silu(temb @ dp["t_mlp1"].astype(jnp.float32)) \
+            @ dp["t_mlp2"].astype(jnp.float32)
+        x = (z.astype(cfg.dtype) @ dp["in_proj"].astype(cfg.dtype))
+        x = x + tcond[:, None, :].astype(cfg.dtype)
+        caches = self.init_cache(z.shape[0])
+        h_f, _ = self._run(params, x, caches, chunked=True)
+        h_b, _ = self._run(params, x[:, ::-1, :], caches, chunked=True)
+        h = 0.5 * (h_f + h_b[:, ::-1, :])
+        return (h @ dp["out_proj"].astype(h.dtype)).astype(jnp.float32)

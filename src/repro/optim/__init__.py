@@ -1,0 +1,220 @@
+"""Optimizers + LR schedules, functional (no external deps).
+
+- ``adamw``: standard AdamW with selectable state dtype (f32 default,
+  bf16 for memory-tight configs).
+- ``adafactor``: factored second moment (Shazeer & Stern) — the only
+  optimizer whose state fits for deepseek-v3-671b on the production mesh
+  (2 x O(sqrt) factors instead of 2 x full moments).
+- ``chain`` of gradient transforms: clip_by_global_norm -> optimizer.
+- ZeRO-1: ``zero1_specs`` shards optimizer state over the 'data' axis
+  (parameters stay whole; only m/v shards), the standard memory/throughput
+  trade at DP >= 8.
+
+API mirrors optax: init(params) -> state; update(grads, state, params) ->
+(updates, state); apply_updates(params, updates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "adamw", "adafactor", "clip_by_global_norm", "chain", "apply_updates",
+    "cosine_schedule", "linear_warmup_cosine", "zero1_specs", "global_norm",
+    "Optimizer",
+]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None, step=None):
+        g = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+        return jax.tree.map(lambda x: x * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step_f
+        bc2 = 1.0 - b2 ** step_f
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            m32 = b1 * m32 + (1 - b1) * g
+            v32 = b2 * v32 + (1 - b2) * g * g
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), m32.astype(state_dtype), v32.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    lr: float | Callable = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Factored 2nd moment for >=2D params; full for 1D. No 1st moment."""
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(st, params)
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - step_f ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + 1e-30)
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + 1e-30)
+                news = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), news
+
+        flat, treedef = jax.tree.flatten(params)
+        gflat = treedef.flatten_up_to(grads)
+        sflat = treedef.flatten_up_to(state)
+        out = [upd(g, s, p) for g, s, p in zip(gflat, sflat, flat)]
+        updates = treedef.unflatten([o[0] for o in out])
+        news = treedef.unflatten([o[1] for o in out])
+        return updates, news
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params, step):
+        new_states = []
+        for o, s in zip(opts, state):
+            grads, s = o.update(grads, s, params, step)
+            new_states.append(s)
+        return grads, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        step_f = step.astype(jnp.float32)
+        warm = base_lr * step_f / max(warmup, 1)
+        return jnp.where(step_f < warmup, warm, cos(step - warmup))
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 optimizer-state sharding
+# ---------------------------------------------------------------------------
+
+
+def zero1_specs(param_specs, mesh, axis: str = "data"):
+    """PartitionSpecs for AdamW state: shard the largest *unsharded* dim of
+    each moment over ``axis`` (params keep their own specs). Falls back to
+    the param's spec when no dim divides."""
+    from jax.sharding import PartitionSpec as P
+    size = dict(mesh.shape)[axis]
+
+    def spec_for(ps, shape):
+        used = set(a for a in jax.tree.leaves(tuple(ps)) if a)
+        if axis in used or size <= 1:
+            return ps
+        dims = list(ps) + [None] * (len(shape) - len(tuple(ps)))
+        # largest unassigned dim divisible by the axis size
+        cands = [(shape[i], i) for i in range(len(shape))
+                 if dims[i] is None and shape[i] % size == 0]
+        if not cands:
+            return ps
+        _, i = max(cands)
+        dims[i] = axis
+        return P(*dims)
+
+    def tree_specs(shapes):
+        return jax.tree.map(spec_for, param_specs, shapes)
+
+    return tree_specs

@@ -1,0 +1,25 @@
+"""Distribution utilities beyond plain GSPMD specs.
+
+- ``pipeline``: GPipe-style pipeline parallelism as shard_map + ppermute
+  with 1F1B-ish microbatch rotation.
+- ``compression``: int8-quantized gradient all-reduce with error feedback.
+- re-exports the partition-spec machinery from models.common so callers
+  have one import point.
+"""
+
+from ..models.common import (
+    STRATEGIES,
+    batch_spec,
+    constrain,
+    mesh_shape_dict,
+    resolve_spec,
+    specs_for,
+)
+from .compression import compressed_psum, make_compressed_grad_transform
+from .pipeline import pipeline_apply
+
+__all__ = [
+    "STRATEGIES", "batch_spec", "constrain", "mesh_shape_dict",
+    "resolve_spec", "specs_for", "pipeline_apply", "compressed_psum",
+    "make_compressed_grad_transform",
+]

@@ -1,0 +1,81 @@
+"""int8 gradient compression with error feedback.
+
+At 1000+ nodes the data-parallel gradient all-reduce is the dominant
+inter-pod collective; int8 quantization cuts its bytes 4x (vs f32 grads)
+at the cost of quantization noise. Error feedback (Seide et al. / EF-SGD)
+keeps the *accumulated* quantization error in a local residual buffer and
+re-adds it before the next quantization, which restores convergence to the
+uncompressed fixed point (tested in tests/test_parallel.py on a quadratic
+and on the toy LM).
+
+Two entry points:
+- ``compressed_psum(x, axis)``: drop-in for jax.lax.psum inside shard_map —
+  quantize -> psum int32 -> dequantize. (The scale is psum-maxed first so
+  all shards agree.)
+- ``make_compressed_grad_transform()``: an optimizer-chain element that
+  applies quantize+EF *outside* any collective: with GSPMD pjit there is no
+  user-visible psum to replace, so production use compresses the gradient
+  *before* it enters the (XLA-inserted) all-reduce by quantizing the
+  per-shard partial sums; the EF residual lives in optimizer state and is
+  sharded like the params.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import Optimizer
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum",
+           "make_compressed_grad_transform"]
+
+
+def quantize_int8(x, scale=None):
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.max(jnp.abs(x32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis: str):
+    """Quantized all-reduce for use inside shard_map."""
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x.astype(jnp.float32))), axis) / 127.0
+    scale = scale + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    return total.astype(jnp.float32) * scale
+
+
+def make_compressed_grad_transform(enabled: bool = True) -> Optimizer:
+    """Optimizer-chain element: g <- Q(g + residual); residual <- input - g."""
+
+    def init(params):
+        if not enabled:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params=None, step=None):
+        if not enabled:
+            return grads, state
+
+        def one(g, r):
+            target = g.astype(jnp.float32) + r
+            q, s = quantize_int8(target)
+            out = dequantize_int8(q, s)
+            return out.astype(g.dtype), target - out
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(state)
+        outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        new_g = treedef.unflatten([o[0] for o in outs])
+        new_r = treedef.unflatten([o[1] for o in outs])
+        return new_g, new_r
+
+    return Optimizer(init, update)

@@ -1,0 +1,129 @@
+"""Property tests for the exponentially-weighted Adams coefficient engine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import get_schedule, timestep_grid
+from repro.core.coefficients import (build_tables, exp_monomial_integrals,
+                                     lagrange_coeff_matrix)
+
+
+@given(a=st.floats(-4.0, 6.0), h=st.floats(1e-3, 3.0),
+       k=st.integers(0, 5))
+@settings(max_examples=200, deadline=None)
+def test_exp_monomial_integrals_vs_quadrature(a, h, k):
+    """I_k = int_{-h}^0 e^{au} u^k du against high-res Simpson."""
+    I = exp_monomial_integrals(a, h, k)[k]
+    u = np.linspace(-h, 0.0, 4001)
+    f = np.exp(a * u) * u**k
+    ref = np.trapezoid(f, u)
+    assert I == pytest.approx(ref, rel=2e-4, abs=1e-10)
+
+
+@given(n=st.integers(1, 5), seed=st.integers(0, 10_000))
+@settings(max_examples=100, deadline=None)
+def test_lagrange_partition_of_unity(n, seed):
+    rng = np.random.default_rng(seed)
+    nodes = np.sort(rng.uniform(-3, 3, size=n))
+    if n > 1 and np.min(np.diff(nodes)) < 1e-2:
+        return  # ill-conditioned nodes aren't used by the solver grids
+    C = lagrange_coeff_matrix(nodes)
+    # sum_j l_j(u) = 1 for all u  <=>  column sums of C = e_0
+    colsum = C.sum(axis=0)
+    assert colsum[0] == pytest.approx(1.0, abs=1e-8)
+    assert np.allclose(colsum[1:], 0.0, atol=1e-8)
+    # l_j(node_i) = delta_ij
+    for j in range(n):
+        vals = sum(C[j, m] * nodes**m for m in range(n))
+        expect = np.zeros(n)
+        expect[j] = 1.0
+        assert np.allclose(vals, expect, atol=1e-7)
+
+
+@pytest.mark.parametrize("tau", [0.0, 0.5, 1.0, 1.6])
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_predictor_coefficient_sum_identity(tau, order):
+    """sum_j b_j = alpha_{i+1} (1 - e^{-(1+tau^2) h})  — from Lemma B.10's
+    first equality (interpolating the constant function 1)."""
+    s = get_schedule("vp_linear")
+    ts = timestep_grid(s, 12, kind="logsnr")
+    tb = build_tables(s, ts, tau=tau, predictor_order=order)
+    lam = s.lam(ts)
+    alpha = s.alpha(ts)
+    for i in range(len(ts) - 1):
+        h = lam[i + 1] - lam[i]
+        expect = alpha[i + 1] * (1.0 - np.exp(-(1.0 + tau * tau) * h))
+        assert tb.pred[i].sum() == pytest.approx(expect, rel=1e-9)
+
+
+@pytest.mark.parametrize("tau", [0.0, 0.8])
+def test_corrector_coefficient_sum_identity(tau):
+    s = get_schedule("vp_linear")
+    ts = timestep_grid(s, 10, kind="logsnr")
+    tb = build_tables(s, ts, tau=tau, predictor_order=3, corrector_order=3)
+    lam = s.lam(ts)
+    alpha = s.alpha(ts)
+    for i in range(len(ts) - 1):
+        h = lam[i + 1] - lam[i]
+        expect = alpha[i + 1] * (1.0 - np.exp(-(1.0 + tau * tau) * h))
+        total = tb.corr_new[i] + tb.corr[i].sum()
+        assert total == pytest.approx(expect, rel=1e-9)
+
+
+def test_noise_scale_matches_prop_42():
+    """sigma~_i = sigma_{i+1} sqrt(1 - e^{-2 tau^2 h}) (Eq. 11)."""
+    s = get_schedule("vp_linear")
+    ts = timestep_grid(s, 8, kind="logsnr")
+    tau = 0.9
+    tb = build_tables(s, ts, tau=tau, predictor_order=2)
+    lam, sig = s.lam(ts), s.sigma(ts)
+    for i in range(len(ts) - 1):
+        h = lam[i + 1] - lam[i]
+        expect = sig[i + 1] * np.sqrt(-np.expm1(-2 * tau * tau * h))
+        assert tb.noise[i] == pytest.approx(expect, rel=1e-9)
+    # tau = 0: deterministic
+    tb0 = build_tables(s, ts, tau=0.0, predictor_order=2)
+    assert np.all(tb0.noise == 0.0)
+
+
+def test_decay_identity():
+    """decay_i = (sigma_{i+1}/sigma_i) e^{-tau^2 h} (Eq. 14)."""
+    s = get_schedule("vp_cosine")
+    ts = timestep_grid(s, 7, kind="logsnr")
+    tau = 1.2
+    tb = build_tables(s, ts, tau=tau, predictor_order=1)
+    lam, sig = s.lam(ts), s.sigma(ts)
+    for i in range(len(ts) - 1):
+        h = lam[i + 1] - lam[i]
+        expect = sig[i + 1] / sig[i] * np.exp(-tau * tau * h)
+        assert tb.decay[i] == pytest.approx(expect, rel=1e-9)
+
+
+def test_coefficients_vs_quadrature_eq15():
+    """b_{i-j} from the analytic recursion == direct quadrature of Eq. (15)."""
+    s = get_schedule("vp_linear")
+    ts = timestep_grid(s, 6, kind="logsnr")
+    tau = 0.7
+    order = 3
+    tb = build_tables(s, ts, tau=tau, predictor_order=order)
+    lam = s.lam(ts)
+    sig = s.sigma(ts)
+    a = 1.0 + tau * tau
+    for i in range(order - 1, len(ts) - 1):
+        lam_next = lam[i + 1]
+        nodes = np.array([lam[i - j] for j in range(order)])
+        grid = np.linspace(lam[i], lam_next, 20001)
+        for j in range(order):
+            lj = np.ones_like(grid)
+            for m in range(order):
+                if m != j:
+                    lj *= (grid - nodes[m]) / (nodes[j] - nodes[m])
+            integrand = np.exp(-a * (lam_next - grid)) * a * np.exp(lam_next) \
+                * np.exp(-(lam_next - grid) * 0) * lj
+            # Eq. 15 weight: e^{-tau^2 (lam_next - lam)} (1+tau^2) e^{lam}
+            integrand = np.exp(-tau * tau * (lam_next - grid)) * a \
+                * np.exp(grid) * lj
+            ref = sig[i + 1] * np.trapezoid(integrand, grid)
+            assert tb.pred[i, j] == pytest.approx(ref, rel=1e-5), (i, j)

@@ -1,0 +1,109 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref, sa_update_ref, wkv_ref
+from repro.kernels.rwkv6_scan import rwkv6_wkv
+from repro.kernels.sa_update import sa_update
+
+
+@pytest.mark.parametrize("shape", [(64,), (4, 100, 7), (2, 33, 5, 3), (1,)])
+@pytest.mark.parametrize("P", [1, 3, 5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sa_update_sweep(shape, P, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    buf = jax.random.normal(ks[1], (P,) + shape, dtype)
+    xi = jax.random.normal(ks[2], shape, dtype)
+    coeffs = jnp.asarray([0.9, 0.1] + [0.3 / (j + 1) for j in range(P)],
+                         jnp.float32)
+    out = sa_update(x, buf, xi, coeffs, tile=128)
+    ref = sa_update_ref(x, buf, xi, coeffs[0], coeffs[1], coeffs[2:])
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,K,S,hd,bq,bk", [
+    (2, 4, 4, 128, 64, 32, 32),    # MHA
+    (1, 8, 2, 256, 32, 64, 64),    # GQA 4:1
+    (2, 4, 1, 64, 16, 16, 16),     # MQA
+    (1, 2, 2, 128, 128, 64, 32),   # bq != bk
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, K, S, hd, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, K, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, K, S, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32))
+    k = jax.random.normal(ks[1], (1, 2, 64, 32))
+    v = jax.random.normal(ks[2], (1, 2, 64, 32))
+    out = flash_attention(q, k, v, causal=False, bq=32, bk=32)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,T,H,hd,chunk", [
+    (2, 64, 3, 16, 16),
+    (1, 128, 2, 32, 32),
+    (3, 32, 1, 8, 16),
+])
+def test_rwkv6_kernel_sweep(B, T, H, hd, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hd))),
+                    -8.0, -1e-5)
+    u = jax.random.normal(ks[4], (H, hd))
+    S0 = jax.random.normal(ks[5], (B, H, hd, hd))
+    y, S = rwkv6_wkv(r, k, v, logw, u, S0, chunk=chunk)
+    y_ref, S_ref = wkv_ref(r, k, v, logw, u, S0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_kernel_bf16_inputs():
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    B, T, H, hd = 1, 32, 2, 16
+    r = jax.random.normal(ks[0], (B, T, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, T, H, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, T, H, hd), jnp.bfloat16)
+    logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (B, T, H, hd))),
+                    -8.0, -1e-5)
+    u = jax.random.normal(ks[4], (H, hd))
+    S0 = jnp.zeros((B, H, hd, hd))
+    y, S = rwkv6_wkv(r, k, v, logw, u, S0, chunk=16)
+    y_ref, _ = wkv_ref(r, k, v, logw, u, S0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_ops_dispatch_cpu_uses_jnp():
+    """On CPU 'auto' must route to the jnp oracle (interpret mode is a
+    Python emulator — correct but slow for production paths)."""
+    from repro.kernels import ops
+    assert not ops.on_tpu()
+    x = jnp.ones((8,))
+    buf = jnp.ones((2, 8))
+    xi = jnp.zeros((8,))
+    coeffs = jnp.asarray([1.0, 0.0, 0.5, 0.5])
+    out = ops.sa_update(x, buf, xi, coeffs)
+    np.testing.assert_allclose(np.asarray(out), 2.0)

@@ -1,0 +1,140 @@
+"""Distribution tests under 8 fake devices (run in subprocesses so the
+device count doesn't leak into the rest of the suite)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.compression import (dequantize_int8,
+                                        make_compressed_grad_transform,
+                                        quantize_int8)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, n_dev: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jnp.linspace(-3, 3, 1000)
+    q, s = quantize_int8(x)
+    err = float(jnp.max(jnp.abs(dequantize_int8(q, s) - x)))
+    assert err <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_converges_where_naive_quant_stalls():
+    """EF-quantized gradient descent reaches the optimum of a quadratic."""
+    w = {"w": jnp.array([2.0, -1.5, 0.5, 3.0])}
+    t = make_compressed_grad_transform()
+    st = t.init(w)
+    for _ in range(400):
+        g = jax.grad(lambda p: 0.5 * jnp.sum(p["w"] ** 2))(w)
+        gq, st = t.update(g, st, w)
+        w = jax.tree.map(lambda p, u: p - 0.1 * u, w, gq)
+    assert float(jnp.max(jnp.abs(w["w"]))) < 1e-2
+
+
+def test_pipeline_matches_sequential():
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from repro.parallel.pipeline import pipeline_apply
+mesh = jax.make_mesh((4,), ("stage",), devices=jax.devices()[:4])
+n_stages, layers_per, d = 4, 2, 8
+Ws = jax.random.normal(jax.random.PRNGKey(0), (n_stages, layers_per, d, d)) * 0.1
+def block_fn(params, x):
+    for i in range(layers_per):
+        x = jnp.tanh(x @ params[i])
+    return x
+x_micro = jax.random.normal(jax.random.PRNGKey(1), (6, 3, d))
+out = pipeline_apply(block_fn, Ws, x_micro, mesh)
+ref = x_micro
+for s in range(n_stages):
+    ref = jax.vmap(lambda xm: block_fn(Ws[s], xm))(ref)
+import numpy as np
+assert float(jnp.max(jnp.abs(out - ref))) < 1e-5
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_compressed_psum_matches_psum():
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.parallel.compression import compressed_psum
+mesh = jax.make_mesh((8,), ("d",), devices=jax.devices())
+x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+f = shard_map(lambda v: compressed_psum(v, "d"), mesh=mesh,
+              in_specs=P("d"), out_specs=P("d"))
+g = shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
+              in_specs=P("d"), out_specs=P("d"))
+a, b = f(x), g(x)
+rel = float(jnp.max(jnp.abs(a - b)) / (jnp.max(jnp.abs(b)) + 1e-9))
+assert rel < 0.02, rel   # int8 quantization noise bound
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_distributed_loss_equals_single_device():
+    """The distribution layer must not change the math: smoke-config
+    train loss on a (2,2) mesh with fsdp_tp + activation sharding equals
+    the single-device loss."""
+    out = run_sub("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_smoke
+from repro.models import build_model, init_params
+from repro.models.common import activation_sharding, specs_for, tree_defs_map
+from repro.launch.mesh import make_test_mesh
+
+cfg = get_smoke("starcoder2-3b")
+model = build_model(cfg)
+params = init_params(jax.random.PRNGKey(0), model.param_defs(), jnp.float32)
+batch = {"tokens": jnp.arange(128).reshape(4, 32) % cfg.vocab_size,
+         "labels": jnp.ones((4, 32), jnp.int32)}
+ref = float(model.loss_fn(params, batch))
+
+mesh = make_test_mesh((2, 2), ("data", "model"))
+specs = specs_for(model.param_defs(), "fsdp_tp", mesh)
+pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+params_d = jax.device_put(params, pshard)
+batch_d = jax.device_put(batch, NamedSharding(mesh, P(("data",), None)))
+with mesh, activation_sharding(("data",), seq_axes=("model",), seq_divisor=2):
+    dist = float(jax.jit(model.loss_fn)(params_d, batch_d))
+assert abs(dist - ref) < 2e-4, (dist, ref)
+print("OK", ref, dist)
+""")
+    assert "OK" in out
+
+
+def test_zero1_and_cache_specs_build():
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_test_mesh
+from repro.launch.cells import cache_specs
+from repro.configs import get_smoke
+from repro.models import build_model
+mesh = make_test_mesh((2, 2), ("data", "model"))
+for arch in ("starcoder2-3b", "rwkv6-3b", "zamba2-7b", "deepseek-v3-671b"):
+    m = build_model(get_smoke(arch))
+    cs = m.cache_shapes(4, 32)
+    specs = cache_specs(cs, mesh)
+    assert jax.tree.structure(specs) == jax.tree.structure(cs)
+print("OK")
+""")
+    assert "OK" in out

@@ -1,0 +1,64 @@
+import numpy as np
+import pytest
+
+from repro.core import get_schedule, timestep_grid
+from repro.core.schedules import VESchedule, VPCosineSchedule, VPLinearSchedule
+
+ALL = ["vp_linear", "vp_cosine", "ve"]
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_lambda_monotone_decreasing_in_t(name):
+    s = get_schedule(name)
+    ts = np.linspace(s.t_end, s.t_start, 300)
+    lam = s.lam(ts)
+    assert np.all(np.diff(lam) < 0)  # lambda decreases as t increases
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_t_of_lam_inverse(name):
+    s = get_schedule(name)
+    ts = np.linspace(s.t_end, s.t_start, 50)
+    back = s.t_of_lam(s.lam(ts))
+    assert np.allclose(back, ts, rtol=1e-6, atol=1e-8)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_alpha_sigma_consistency(name):
+    s = get_schedule(name)
+    ts = np.linspace(s.t_end, s.t_start, 50)
+    if isinstance(s, VESchedule):
+        assert np.allclose(s.alpha(ts), 1.0)
+    else:
+        # VP: alpha^2 + sigma^2 = 1
+        assert np.allclose(s.alpha(ts) ** 2 + s.sigma(ts) ** 2, 1.0, atol=1e-10)
+
+
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("kind", ["time", "logsnr", "karras"])
+def test_grids_strictly_decreasing(name, kind):
+    s = get_schedule(name)
+    ts = timestep_grid(s, 25, kind=kind)
+    assert len(ts) == 26
+    assert np.all(np.diff(ts) < 0)
+    assert ts[0] == pytest.approx(s.t_start)
+    assert ts[-1] == pytest.approx(s.t_end)
+
+
+def test_jnp_matches_numpy():
+    import jax.numpy as jnp
+    for name in ALL:
+        s = get_schedule(name)
+        ts = np.linspace(s.t_end, s.t_start, 17)
+        np.testing.assert_allclose(
+            np.asarray(s.lam_j(jnp.asarray(ts))), s.lam(ts), rtol=2e-4)  # f32 device math
+
+
+def test_grid_validation():
+    s = get_schedule("vp_linear")
+    with pytest.raises(ValueError):
+        timestep_grid(s, 0)
+    with pytest.raises(ValueError):
+        timestep_grid(s, 5, t_start=0.1, t_end=0.5)
+    with pytest.raises(ValueError):
+        timestep_grid(s, 5, kind="bogus")

@@ -1,0 +1,150 @@
+"""End-to-end behaviour: oracle correctness, metric sanity, MoE invariants,
+and the paper's full loop in miniature (train a tiny denoiser, then sample
+with SA-Solver and verify distribution recovery)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GMM, SASolver, SASolverConfig, get_schedule
+from repro.core.metrics import energy_distance, gaussian_w2, sliced_w2
+from repro.core.oracle import perturb_model
+from repro.data import latent_batch
+from repro.models import LMConfig, MoEConfig, TransformerLM, init_params
+from repro.models.moe import moe_apply, moe_defs
+from repro.optim import adamw, apply_updates, chain, clip_by_global_norm
+
+
+# ----------------------------------------------------------------- oracle
+def test_gmm_score_matches_autodiff():
+    sched = get_schedule("vp_linear")
+    g = GMM.default_2d()
+    t = 0.4
+    a, s = float(sched.alpha(t)), float(sched.sigma(t))
+
+    def log_pt(x):
+        mu = jnp.asarray(g.means) * a
+        var = (a * jnp.asarray(g.stds)) ** 2 + s**2
+        logw = jnp.log(jnp.asarray(g.weights))
+        logp = logw - 0.5 * jnp.sum(
+            (x[None] - mu) ** 2 / var + jnp.log(2 * jnp.pi * var), axis=-1)
+        return jax.nn.logsumexp(logp)
+
+    x = jnp.asarray([0.7, -1.2])
+    want = jax.grad(log_pt)(x)
+    got = g.score(sched, x, jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+def test_gmm_sampling_matches_moments():
+    g = GMM.default_2d()
+    s = g.sample(jax.random.PRNGKey(0), 20000)
+    np.testing.assert_allclose(np.asarray(jnp.mean(s, 0)), g.mean(),
+                               atol=0.06)
+    np.testing.assert_allclose(np.asarray(jnp.var(s, 0)), g.cov_diag(),
+                               atol=0.12)
+
+
+def test_perturbed_model_rms_magnitude():
+    sched = get_schedule("vp_linear")
+    g = GMM.default_2d()
+    base = g.model_fn(sched, "data")
+    pert = perturb_model(base, dim=2, delta=0.3)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2048, 2))
+    diff = pert(x, jnp.asarray(0.5)) - base(x, jnp.asarray(0.5))
+    rms = float(jnp.sqrt(jnp.mean(jnp.sum(diff**2, -1) / 2)))
+    assert 0.1 < rms < 0.9
+
+
+def test_metrics_sane():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2048, 3))
+    y = jax.random.normal(jax.random.PRNGKey(1), (2048, 3))
+    z = 2.0 + jax.random.normal(jax.random.PRNGKey(2), (2048, 3))
+    assert sliced_w2(x, y, key) < sliced_w2(x, z, key)
+    assert energy_distance(x, y) < energy_distance(x, z)
+    assert gaussian_w2(x, np.zeros(3), np.ones(3)) < \
+        gaussian_w2(z, np.zeros(3), np.ones(3))
+
+
+# -------------------------------------------------------------------- moe
+def test_moe_invariants():
+    cfg = MoEConfig(n_experts=4, top_k=2, d_expert_ff=32, n_shared=1,
+                    d_shared_ff=32)
+    defs = moe_defs(16, cfg)
+    p = init_params(jax.random.PRNGKey(0), defs, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 16))
+    out, aux = moe_apply(p, cfg, x)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert 0 < float(aux) < cfg.aux_weight * cfg.n_experts * 2.0
+    g = jax.grad(lambda pp: jnp.sum(moe_apply(pp, cfg, x)[0]))(p)
+    assert all(bool(jnp.all(jnp.isfinite(v))) for v in jax.tree.leaves(g))
+
+
+def test_moe_capacity_drops_dont_nan():
+    cfg = MoEConfig(n_experts=4, top_k=2, d_expert_ff=16,
+                    capacity_factor=0.25)  # aggressive drops
+    defs = moe_defs(8, cfg)
+    p = init_params(jax.random.PRNGKey(0), defs, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 8))
+    out, aux = moe_apply(p, cfg, x)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ------------------------------------------------------ train -> sample
+def test_train_denoiser_then_sample_end_to_end():
+    """~150 steps of denoiser training on a low-rank latent field; SA-Solver
+    samples must get far closer (sliced W2) to the data than prior noise."""
+    sched = get_schedule("vp_linear")
+    dz, S = 8, 16
+    cfg = LMConfig(name="tiny-dit", n_layers=2, d_model=64, n_heads=4,
+                   n_kv_heads=4, d_ff=128, vocab_size=8, rope_type="none",
+                   act="gelu", gated_mlp=False, denoiser_latent=dz,
+                   dtype=jnp.float32)
+    model = TransformerLM(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_defs(), jnp.float32)
+    opt = chain(clip_by_global_norm(1.0), adamw(2e-3, weight_decay=0.0))
+    opt_state = opt.init(params)
+
+    def loss_fn(p, x0, key):
+        kt, kn = jax.random.split(key)
+        t = jax.random.uniform(kt, (x0.shape[0],), minval=1e-3, maxval=1.0)
+        eps = jax.random.normal(kn, x0.shape)
+        a = sched.alpha_j(t)[:, None, None]
+        s = sched.sigma_j(t)[:, None, None]
+        xt = a * x0 + s * eps
+        pred = model.denoise(p, xt, t)
+        return jnp.mean((pred - x0) ** 2)
+
+    @jax.jit
+    def step(p, o, x0, key, i):
+        l, g = jax.value_and_grad(loss_fn)(p, x0, key)
+        upd, o = opt.update(g, o, p, i)
+        return apply_updates(p, upd), o, l
+
+    SHIFT = 1.0  # mean-shift makes the target clearly non-prior-like
+    losses = []
+    for i in range(200):
+        x0 = jnp.asarray(latent_batch(dz, S, 32, step=i)["x0"]) + SHIFT
+        params, opt_state, l = step(params, opt_state, x0,
+                                    jax.random.PRNGKey(100 + i),
+                                    jnp.asarray(i))
+        losses.append(float(l))
+    # the denoising objective has a large irreducible floor (high-t terms
+    # are noise-matching); a 25% drop at this scale means the score is
+    # learning — the REAL check is the sampling-quality one below
+    assert losses[-1] < 0.75 * losses[0], (losses[0], losses[-1])
+
+    solver = SASolver(sched, SASolverConfig(
+        n_steps=12, predictor_order=2, corrector_order=1, tau=0.4))
+    n = 256
+    xT = solver.init_noise(jax.random.PRNGKey(5), (n, S, dz))
+    samples = solver.sample(lambda x, t: model.denoise(params, x, t),
+                            xT, jax.random.PRNGKey(6))
+    data = jnp.asarray(latent_batch(dz, S, n, step=999)["x0"]) + SHIFT
+    key = jax.random.PRNGKey(7)
+    d_trained = sliced_w2(samples.reshape(n, -1), data.reshape(n, -1), key)
+    d_noise = sliced_w2(xT.reshape(n, -1), data.reshape(n, -1), key)
+    assert d_trained < 0.5 * d_noise, (d_trained, d_noise)
