@@ -1,34 +1,27 @@
 """Paper Fig. 2 / Tables 4, 6, 10: SA-Solver vs baseline samplers.
 
 Claim reproduced: SA-Solver (tuned tau) matches the best deterministic
-solvers at low NFE and beats every baseline at moderate NFE."""
+solvers at low NFE and beats every baseline at moderate NFE. Every sampler
+is selected through the plan/execute registry at a shared NFE budget
+(``SamplerSpec.from_nfe`` handles the per-family steps conversion)."""
 
 import jax
 
-from repro.core import timestep_grid
-from repro.core.baselines import (ddim, ddpm_ancestral, dpm_solver_pp_2m,
-                                  edm_heun, edm_stochastic, euler_maruyama)
-
-from .common import SCHED, data_model, print_table, prior, quality, sa_run
+from .common import baseline_run, print_table, quality, sa_run
 
 KEY = jax.random.PRNGKey(0)
 NFES = [8, 15, 23, 31, 47, 63]
 
 
 def run():
-    model = data_model()
     rows = []
-
-    def run_baseline(fn, nfe, **kw):
-        ts = timestep_grid(SCHED, nfe - 1, kind="logsnr")
-        return fn(model, prior(), KEY, SCHED, ts, **kw)
-
     samplers = {
-        "DDIM(0)": lambda n: run_baseline(ddim, n, eta=0.0),
-        "DDPM(anc)": lambda n: run_baseline(ddpm_ancestral, n),
-        "DPM++(2M)": lambda n: run_baseline(dpm_solver_pp_2m, n),
-        "EDM-Heun": lambda n: run_baseline(edm_heun, (n + 1) // 2),  # 2 NFE/step
-        "Euler-Maruyama": lambda n: run_baseline(euler_maruyama, n, tau=1.0),
+        "DDIM(0)": lambda n: baseline_run("ddim", n, key=KEY, eta=0.0),
+        "DDPM(anc)": lambda n: baseline_run("ddpm_ancestral", n, key=KEY),
+        "DPM++(2M)": lambda n: baseline_run("dpm_solver_pp_2m", n, key=KEY),
+        "EDM-Heun": lambda n: baseline_run("edm_heun", n, key=KEY),
+        "Euler-Maruyama": lambda n: baseline_run("euler_maruyama", n,
+                                                 key=KEY, tau=1.0),
         "SA-Solver(t0.4)": lambda n: sa_run(n, 3, 3, 0.4),
         "SA-Solver(t1.0)": lambda n: sa_run(n, 3, 3, 1.0),
     }

@@ -17,10 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GMM, SASolverConfig, get_schedule, timestep_grid
-from repro.core.coefficients import build_tables
+from repro.core import GMM, get_schedule
 from repro.core.metrics import gaussian_w2, sliced_w2
-from repro.core.solver import sample as sa_sample
+from repro.core.samplers import SamplerSpec, build_plan, sample as plan_sample
 
 SCHED = get_schedule("vp_linear")
 GMM_TARGET = GMM.default_2d()
@@ -28,12 +27,21 @@ N_SAMPLES = 8192
 DIM = 2
 
 
+_MODEL_CACHE: dict = {}
+
+
 def data_model(parameterization="data", delta: float = 0.0):
-    fn = GMM_TARGET.model_fn(SCHED, parameterization)
-    if delta > 0:
-        from repro.core.oracle import perturb_model
-        fn = perturb_model(fn, DIM, delta)
-    return fn
+    # memoized: the sampler compile cache keys on id(model_fn), so handing
+    # out one closure per config lets repeated runs (tau/NFE sweeps) reuse
+    # the compiled executor instead of retracing per call
+    key = (parameterization, delta)
+    if key not in _MODEL_CACHE:
+        fn = GMM_TARGET.model_fn(SCHED, parameterization)
+        if delta > 0:
+            from repro.core.oracle import perturb_model
+            fn = perturb_model(fn, DIM, delta)
+        _MODEL_CACHE[key] = fn
+    return _MODEL_CACHE[key]
 
 
 def prior(key=jax.random.PRNGKey(11), n=N_SAMPLES):
@@ -46,16 +54,21 @@ def target_samples(key=jax.random.PRNGKey(12), n=N_SAMPLES):
 
 def sa_run(nfe: int, p: int, c: int, tau, *, parameterization="data",
            delta: float = 0.0, key=jax.random.PRNGKey(0), grid="logsnr"):
-    """One SA-Solver run; NFE = steps + 1 (PEC)."""
-    n = nfe - 1
-    ts = timestep_grid(SCHED, n, kind=grid)
-    tb = build_tables(SCHED, ts, tau=tau, predictor_order=p,
-                      corrector_order=c, parameterization=parameterization)
-    cfg = SASolverConfig(n_steps=n, predictor_order=p, corrector_order=c,
-                         tau=tau, parameterization=parameterization,
-                         denoise_final=False)
-    return sa_sample(data_model(parameterization, delta), prior(), key,
-                     tb, cfg)
+    """One SA-Solver run through the registry; NFE = steps + 1 (PEC)."""
+    spec = SamplerSpec.from_nfe(
+        "sa", nfe, schedule=SCHED, grid=grid, tau=tau, predictor_order=p,
+        corrector_order=c, parameterization=parameterization,
+        denoise_final=False)
+    return plan_sample(build_plan(spec), data_model(parameterization, delta),
+                       prior(), key)
+
+
+def baseline_run(name: str, nfe: int, *, key=jax.random.PRNGKey(0),
+                 grid="logsnr", **spec_kw):
+    """One baseline run through the registry at a given NFE budget."""
+    spec = SamplerSpec.from_nfe(name, nfe, schedule=SCHED, grid=grid,
+                                **spec_kw)
+    return plan_sample(build_plan(spec), data_model(), prior(), key)
 
 
 def quality(x) -> dict:

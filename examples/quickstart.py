@@ -1,16 +1,17 @@
-"""Quickstart: sample a Gaussian-mixture with SA-Solver in ~20 lines.
+"""Quickstart: sample a Gaussian-mixture through the sampler registry.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Uses the analytic oracle (exact x0-posterior) as the "diffusion model", so
 the solver is the only approximation — swap ``model_fn`` for any network
-with the same (x, t) -> x0-hat signature.
+with the same (x, t) -> x0-hat signature. Any registered sampler name
+works in ``make_sampler`` ("sa", "ddim", "dpm_solver_pp_2m", ...); the
+``nfe=`` keyword fixes the model-evaluation budget across all of them.
 """
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import GMM, SASolver, SASolverConfig, get_schedule
+from repro.core import GMM, get_schedule, list_samplers, make_sampler
 from repro.core.metrics import sliced_w2
 
 
@@ -19,19 +20,21 @@ def main():
     target = GMM.default_2d()
     model_fn = target.model_fn(schedule, "data")   # exact E[x0 | x_t]
 
-    config = SASolverConfig(
-        n_steps=19,            # NFE = 20
+    sampler = make_sampler(
+        "sa",                  # any of list_samplers()
+        schedule=schedule,
+        nfe=20,                # model-evaluation budget (PEC: 19 steps + 1)
         predictor_order=3,
         corrector_order=3,
         tau=1.0,               # full SDE stochasticity
     )
-    solver = SASolver(schedule, config)
 
-    x_T = solver.init_noise(jax.random.PRNGKey(0), (4096, 2))
-    x_0 = solver.sample(model_fn, x_T, jax.random.PRNGKey(1))
+    x_T = sampler.init_noise(jax.random.PRNGKey(0), (4096, 2))
+    x_0 = sampler.sample(model_fn, x_T, jax.random.PRNGKey(1))
 
     ref = target.sample(jax.random.PRNGKey(2), 4096)
-    print(f"sampled {x_0.shape[0]} points with NFE={config.nfe}")
+    print(f"registry: {list_samplers()}")
+    print(f"sampled {x_0.shape[0]} points with NFE={sampler.nfe}")
     print(f"sliced-W2 to target: {sliced_w2(x_0, ref, jax.random.PRNGKey(3)):.5f}")
     print(f"(prior baseline:     "
           f"{sliced_w2(x_T, ref, jax.random.PRNGKey(3)):.5f})")

@@ -1,12 +1,16 @@
-"""Batched diffusion serving: requests arrive with different prompts
-(conditioning latents), get micro-batched, and are sampled TOGETHER in one
-SA-Solver loop — the serving pattern the dry-run lowers at 512 devices.
+"""Batched diffusion serving on the plan/execute sampler registry:
+requests arrive with different prompts (conditioning latents), get
+micro-batched, and are sampled TOGETHER via ``sample_batched`` (one vmapped
+solver loop, one compilation per bucket) — the serving pattern the dry-run
+lowers at 512 devices.
 
     PYTHONPATH=src python examples/serve_diffusion.py --requests 12 --nfe 15
 
-Demonstrates: request batching with ragged arrival, per-request RNG
-(fold_in by request id — no cross-request noise correlation), and a
-backbone selected by --arch (any zoo member in denoiser mode).
+Demonstrates: runtime solver selection (--sampler picks any registry
+entry), request batching with ragged arrival, per-request RNG (fold_in by
+request id — no cross-request noise correlation), streamed intermediate
+previews (--stream: per-step denoised snapshots from the trajectory hook),
+and a backbone selected by --arch (any zoo member in denoiser mode).
 """
 
 import argparse
@@ -17,14 +21,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke
-from repro.core import SASolver, SASolverConfig, get_schedule
+from repro.core import get_schedule
+from repro.core.samplers import SamplerSpec, Sampler, list_samplers
 from repro.models import build_model, init_params
 
 
 class DiffusionServer:
-    """Compile once per (batch, seq) bucket; serve request batches."""
+    """Plan once per sampler config; compile once per (batch, seq) bucket."""
 
-    def __init__(self, arch: str, nfe: int, tau: float, latent: int = 8):
+    def __init__(self, arch: str, sampler: str, nfe: int, tau: float,
+                 latent: int = 8, stream: bool = False):
         cfg = get_smoke(arch)
         if getattr(cfg, "denoiser_latent", None) is None:
             cfg = dataclasses.replace(cfg, denoiser_latent=latent)
@@ -32,46 +38,44 @@ class DiffusionServer:
         self.model = build_model(cfg)
         self.params = init_params(jax.random.PRNGKey(0),
                                   self.model.param_defs(), jnp.float32)
-        self.solver = SASolver(get_schedule("vp_linear"), SASolverConfig(
-            n_steps=nfe - 1, predictor_order=3, corrector_order=1, tau=tau))
-        self._compiled = {}
-
-    def _fn(self, batch, seq):
-        key = (batch, seq)
-        if key not in self._compiled:
-            dz = self.cfg.denoiser_latent
-
-            def serve(request_ids):
-                def one_noise(rid):
-                    return self.solver.init_noise(
-                        jax.random.fold_in(jax.random.PRNGKey(7), rid),
-                        (seq, dz))
-                xT = jax.vmap(one_noise)(request_ids)
-                k = jax.random.fold_in(jax.random.PRNGKey(8),
-                                       request_ids[0])
-                return self.solver.sample(
-                    lambda x, t: self.model.denoise(self.params, x, t),
-                    xT, k)
-
-            self._compiled[key] = jax.jit(serve)
-        return self._compiled[key]
+        self.sampler = Sampler(SamplerSpec.from_nfe(
+            sampler, nfe, schedule=get_schedule("vp_linear"),
+            predictor_order=3, corrector_order=1, tau=tau))
+        self.stream = stream
+        # sample_batched vmaps over requests, so the model_fn sees one
+        # request (seq, dz) at a time; the backbone wants a batch axis
+        self._model_fn = lambda x, t: self.model.denoise(
+            self.params, x[None], t)[0]
 
     def serve_batch(self, request_ids, seq: int):
-        fn = self._fn(len(request_ids), seq)
-        return fn(jnp.asarray(request_ids))
+        """One vmapped solve for the whole bucket, one RNG per request."""
+        rids = jnp.asarray(request_ids)
+        dz = self.cfg.denoiser_latent
+        noise_keys = jax.vmap(
+            lambda r: jax.random.fold_in(jax.random.PRNGKey(7), r))(rids)
+        xT = jax.vmap(
+            lambda k: self.sampler.init_noise(k, (seq, dz)))(noise_keys)
+        solve_keys = jax.vmap(
+            lambda r: jax.random.fold_in(jax.random.PRNGKey(8), r))(rids)
+        return self.sampler.sample_batched(
+            self._model_fn, xT, solve_keys, trajectory=self.stream)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dit-s")
+    ap.add_argument("--sampler", default="sa", choices=list_samplers())
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--nfe", type=int, default=15)
     ap.add_argument("--tau", type=float, default=0.6)
+    ap.add_argument("--stream", action="store_true",
+                    help="also return per-step denoised previews")
     args = ap.parse_args()
 
-    server = DiffusionServer(args.arch, args.nfe, args.tau)
+    server = DiffusionServer(args.arch, args.sampler, args.nfe, args.tau,
+                             stream=args.stream)
     pending = list(range(args.requests))
     done = 0
     t0 = time.perf_counter()
@@ -79,14 +83,24 @@ def main():
         batch, pending = pending[:args.batch], pending[args.batch:]
         while len(batch) < args.batch:      # pad the tail bucket
             batch.append(batch[-1])
-        out = jax.block_until_ready(server.serve_batch(batch, args.seq))
+        out = server.serve_batch(batch, args.seq)
+        if args.stream:
+            out, traj = out
+            previews = jax.block_until_ready(traj["x0"])
+            # stream: preview quality per step for the first request
+            steps = previews.shape[1]
+            stds = [float(jnp.std(previews[0, s])) for s in range(steps)]
+            print(f"  stream req {batch[0]}: x0-preview std per step "
+                  f"{['%.2f' % s for s in stds[:6]]}...")
+        out = jax.block_until_ready(out)
         assert bool(jnp.all(jnp.isfinite(out)))
         done += len(set(batch))
         print(f"served batch {sorted(set(batch))}: out {out.shape}, "
               f"std={float(jnp.std(out)):.3f}")
     dt = time.perf_counter() - t0
     print(f"\n{done} requests in {dt:.2f}s "
-          f"({done * args.nfe / dt:.1f} model-evals/s, NFE={args.nfe}, "
+          f"({done * server.sampler.nfe / dt:.1f} model-evals/s, "
+          f"NFE={server.sampler.nfe}, sampler={args.sampler}, "
           f"arch={server.cfg.name})")
 
 

@@ -2,16 +2,29 @@
 
 The paper's contribution, as a composable JAX module:
 
+- unified plan/execute sampler registry (SA + all baselines)      samplers/
 - variance-controlled diffusion SDE family (tau schedules)        tau.py
 - exact semi-linear solution machinery / Adams coefficients       coefficients.py
-- SA-Predictor / SA-Corrector, Algorithm 1                        solver.py
+- SA-Predictor / SA-Corrector, Algorithm 1 (legacy shim)          solver.py
 - noise schedules + timestep grids                                schedules.py
-- baselines the paper compares against                            baselines.py
+- baselines the paper compares against (legacy shims)             baselines.py
 - analytic oracles + metrics for validation                       oracle.py, metrics.py
+
+Sampling entry point: ``make_sampler(name, nfe=..., ...)`` — see
+``repro.core.samplers`` and the top-level README.
 """
 
 from .coefficients import SolverTables, build_tables, exp_monomial_integrals
 from .oracle import GMM, gaussian_oracle, perturb_model
+from . import samplers
+from .samplers import (
+    Sampler,
+    SamplerPlan,
+    SamplerSpec,
+    list_samplers,
+    make_sampler,
+    register_sampler,
+)
 from .schedules import (
     EDMSchedule,
     NoiseSchedule,
@@ -25,6 +38,13 @@ from .solver import SASolver, SASolverConfig, sample
 from .tau import BandedTau, ConstantTau, DDIMEtaTau, TauSchedule
 
 __all__ = [
+    "samplers",
+    "Sampler",
+    "SamplerPlan",
+    "SamplerSpec",
+    "make_sampler",
+    "register_sampler",
+    "list_samplers",
     "SASolver",
     "SASolverConfig",
     "sample",

@@ -1,22 +1,24 @@
 """Baseline samplers the paper compares SA-Solver against (§6.4).
 
-All baselines share the signature
+.. deprecated::
+    These free functions are thin shims over the unified plan/execute
+    registry (``repro.core.samplers``) — each builds the family's plan for
+    the given explicit grid and runs the shared jitted executor. New code
+    should use ``make_sampler(name, ...)`` directly.
+
+All baselines share the legacy signature
 
     sampler(model_fn, x_T, key, schedule, ts, **kw) -> x_0
 
 where ``ts`` is a decreasing float64 grid (from ``timestep_grid``) and
-``model_fn(x, t)`` is a *data-prediction* model unless stated otherwise.
-Host-side per-interval constants are precomputed in float64 and closed over
-as f32 jnp arrays, mirroring the SA-Solver implementation so microbenchmarks
-compare like with like.
+``model_fn(x, t)`` is a *data-prediction* model. Host-side per-interval
+constants are precomputed in float64 and shipped as f32 device arrays,
+mirroring the SA-Solver implementation so microbenchmarks compare like
+with like.
 """
 
 from __future__ import annotations
 
-import math
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .schedules import NoiseSchedule
@@ -31,152 +33,40 @@ __all__ = [
 ]
 
 
-def _consts(schedule: NoiseSchedule, ts: np.ndarray):
+def _run(name: str, model_fn, x_T, key, schedule: NoiseSchedule, ts, **spec_kw):
+    from .samplers import SamplerSpec, build_plan, sample
+
     ts = np.asarray(ts, dtype=np.float64)
-    return dict(
-        ts=jnp.asarray(ts, jnp.float32),
-        alphas=jnp.asarray(schedule.alpha(ts), jnp.float32),
-        sigmas=jnp.asarray(schedule.sigma(ts), jnp.float32),
-        lams=jnp.asarray(schedule.lam(ts), jnp.float32),
-        lams64=schedule.lam(ts),
-        alphas64=schedule.alpha(ts),
-        sigmas64=schedule.sigma(ts),
-    )
+    spec = SamplerSpec(
+        name=name, schedule=schedule, n_steps=len(ts) - 1,
+        ts=tuple(float(t) for t in ts), **spec_kw)
+    return sample(build_plan(spec), model_fn, x_T, key)
 
 
 def ddim(model_fn, x_T, key, schedule, ts, eta: float = 0.0):
     """DDIM-eta (Eq. 19), generalized (alpha, sigma) form."""
-    c = _consts(schedule, ts)
-    M = len(ts) - 1
-
-    # ancestral std: eta * sqrt(sig_next^2/sig_i^2 * (1 - a_i^2/a_next^2))
-    a64, s64 = c["alphas64"], c["sigmas64"]
-    with np.errstate(invalid="ignore"):
-        var = (eta**2) * (s64[1:] ** 2 / s64[:-1] ** 2) * (1.0 - a64[:-1] ** 2 / a64[1:] ** 2)
-    sig_hat = jnp.asarray(np.sqrt(np.clip(var, 0.0, None)), jnp.float32)
-    # deterministic direction scale: sqrt(sig_next^2 - sig_hat^2)
-    dir_scale = jnp.asarray(
-        np.sqrt(np.clip(s64[1:] ** 2 - np.clip(var, 0.0, None), 0.0, None)), jnp.float32
-    )
-
-    def step(x, per):
-        i, k = per
-        a_i, s_i = c["alphas"][i], c["sigmas"][i]
-        a_n = c["alphas"][i + 1]
-        x0 = model_fn(x, c["ts"][i]).astype(jnp.float32)
-        eps = (x - a_i * x0) / s_i
-        xi = jax.random.normal(k, x.shape, jnp.float32)
-        return a_n * x0 + dir_scale[i] * eps + sig_hat[i] * xi, None
-
-    keys = jax.random.split(key, M)
-    x, _ = jax.lax.scan(step, x_T.astype(jnp.float32), (jnp.arange(M), keys))
-    return model_fn(x, c["ts"][M]).astype(jnp.float32) if False else x
+    return _run("ddim", model_fn, x_T, key, schedule, ts, eta=eta)
 
 
 def dpm_solver_pp_2m(model_fn, x_T, key, schedule, ts):
     """DPM-Solver++(2M), data prediction, deterministic (official multistep
     second-order update; first step is DDIM)."""
-    del key
-    c = _consts(schedule, ts)
-    M = len(ts) - 1
-    lam64 = c["lams64"]
-    h = jnp.asarray(lam64[1:] - lam64[:-1], jnp.float32)           # [M]
-    h_prev = jnp.asarray(
-        np.concatenate([[np.nan], lam64[1:-1] - lam64[:-2]]), jnp.float32
-    )
-
-    def step(carry, i):
-        x, x0_prev = carry
-        x0 = model_fn(x, c["ts"][i]).astype(jnp.float32)
-        a_n, s_n, s_i = c["alphas"][i + 1], c["sigmas"][i + 1], c["sigmas"][i]
-        phi = 1.0 - jnp.exp(-h[i])
-
-        def first(_):
-            return a_n * phi * x0
-
-        def multi(_):
-            r = h_prev[i] / h[i]
-            D = x0 + (x0 - x0_prev) / (2.0 * r)
-            return a_n * phi * D
-
-        upd = jax.lax.cond(i == 0, first, multi, None)
-        x_next = (s_n / s_i) * x + upd
-        return (x_next, x0), None
-
-    (x, _), _ = jax.lax.scan(
-        step, (x_T.astype(jnp.float32), jnp.zeros_like(x_T, jnp.float32)), jnp.arange(M)
-    )
-    return x
+    return _run("dpm_solver_pp_2m", model_fn, x_T, key, schedule, ts)
 
 
 def euler_maruyama(model_fn, x_T, key, schedule, ts, tau: float = 1.0):
-    """Euler-Maruyama on the variance-controlled SDE (Eq. 9) in lambda-time.
-
-    x_{i+1} = x_i + [ (dlog a/dlam)_i x_i - (1+tau^2)(x_i - a_i x0_i) ] dlam
-              + tau sigma_i sqrt(2 dlam) xi
-    with per-interval exact slope dlog a / dlam from the grid.
-    """
-    c = _consts(schedule, ts)
-    M = len(ts) - 1
-    la64 = np.log(c["alphas64"])
-    dlam = jnp.asarray(c["lams64"][1:] - c["lams64"][:-1], jnp.float32)
-    slope = jnp.asarray((la64[1:] - la64[:-1]) / (c["lams64"][1:] - c["lams64"][:-1]), jnp.float32)
-
-    def step(x, per):
-        i, k = per
-        a_i, s_i = c["alphas"][i], c["sigmas"][i]
-        x0 = model_fn(x, c["ts"][i]).astype(jnp.float32)
-        drift = slope[i] * x - (1.0 + tau**2) * (x - a_i * x0)
-        xi = jax.random.normal(k, x.shape, jnp.float32)
-        return x + drift * dlam[i] + tau * s_i * jnp.sqrt(2.0 * dlam[i]) * xi, None
-
-    keys = jax.random.split(key, M)
-    x, _ = jax.lax.scan(step, x_T.astype(jnp.float32), (jnp.arange(M), keys))
-    return x
+    """Euler-Maruyama on the variance-controlled SDE (Eq. 9) in lambda-time."""
+    return _run("euler_maruyama", model_fn, x_T, key, schedule, ts, tau=tau)
 
 
 def ddpm_ancestral(model_fn, x_T, key, schedule, ts):
     """Ancestral (posterior) sampling == DDIM with eta = 1."""
-    return ddim(model_fn, x_T, key, schedule, ts, eta=1.0)
-
-
-def _edm_space(schedule: NoiseSchedule, ts: np.ndarray):
-    """EDM change of variables: xt_tilde = x/alpha, time = sigma_EDM."""
-    ts64 = np.asarray(ts, dtype=np.float64)
-    sig = np.exp(-schedule.lam(ts64))
-    return jnp.asarray(ts64, jnp.float32), jnp.asarray(sig, jnp.float32), jnp.asarray(
-        schedule.alpha(ts64), jnp.float32
-    )
+    return _run("ddpm_ancestral", model_fn, x_T, key, schedule, ts)
 
 
 def edm_heun(model_fn, x_T, key, schedule, ts):
-    """EDM deterministic Heun (2nd order) in the scaled space.
-
-    d x~/d sig~ = (x~ - x0_hat)/sig~ ;  x~ = x / alpha_t.
-    """
-    del key
-    tsj, sig, alph = _edm_space(schedule, ts)
-    M = len(ts) - 1
-
-    def d(x_t, i):
-        x0 = model_fn(x_t * alph[i], tsj[i]).astype(jnp.float32)
-        return (x_t - x0) / sig[i]
-
-    def step(x_t, i):
-        di = d(x_t, i)
-        dt = sig[i + 1] - sig[i]
-        x_e = x_t + dt * di
-
-        def heun(_):
-            dn = d(x_e, i + 1)
-            return x_t + dt * 0.5 * (di + dn)
-
-        x_next = jax.lax.cond(sig[i + 1] > 1e-8, heun, lambda _: x_e, None)
-        return x_next, None
-
-    x_t = x_T.astype(jnp.float32) / alph[0]
-    x_t, _ = jax.lax.scan(step, x_t, jnp.arange(M))
-    return x_t * alph[M]
+    """EDM deterministic Heun (2nd order) in the scaled space."""
+    return _run("edm_heun", model_fn, x_T, key, schedule, ts)
 
 
 def edm_stochastic(
@@ -185,51 +75,6 @@ def edm_stochastic(
     s_noise: float = 1.003,
 ):
     """EDM stochastic sampler (Karras Alg. 2) adapted to the scaled space."""
-    tsj, sig, alph = _edm_space(schedule, ts)
-    M = len(ts) - 1
-    gamma_max = math.sqrt(2.0) - 1.0
-    gammas = jnp.where(
-        (sig[:-1] >= s_tmin) & (sig[:-1] <= s_tmax),
-        jnp.minimum(s_churn / M, gamma_max),
-        0.0,
-    )
-
-    def d(x_t, s_val, t_val):
-        x0 = model_fn(x_t * _alpha_of_sig(s_val), t_val).astype(jnp.float32)
-        return (x_t - x0) / s_val
-
-    # alpha as a function of sigma_EDM: alpha = 1/sqrt(1+sig^2) for VP,
-    # 1 for VE. Use the grid's alpha via interpolation-free exact relation:
-    ve = bool(np.allclose(np.asarray(alph), 1.0))
-
-    def _alpha_of_sig(s_val):
-        return jnp.float32(1.0) if ve else 1.0 / jnp.sqrt(1.0 + s_val**2)
-
-    def _t_of_sig_host(s_val):  # only grid values needed; churn perturbs sigma
-        return s_val  # t conditioning uses the *grid* t below
-
-    def step(carry, per):
-        x_t, _ = carry
-        i, k = per
-        g = gammas[i]
-        s_i = sig[i]
-        s_hat = s_i * (1.0 + g)
-        xi = jax.random.normal(k, x_t.shape, jnp.float32)
-        x_hat = x_t + jnp.sqrt(jnp.maximum(s_hat**2 - s_i**2, 0.0)) * s_noise * xi
-        # Heun from s_hat to sig[i+1]; model conditioned at grid t (the churn
-        # offset in t is second-order; noted in DESIGN.md adaptation list)
-        di = d(x_hat, s_hat, tsj[i])
-        dt = sig[i + 1] - s_hat
-        x_e = x_hat + dt * di
-
-        def heun(_):
-            dn = d(x_e, sig[i + 1], tsj[i + 1])
-            return x_hat + dt * 0.5 * (di + dn)
-
-        x_next = jax.lax.cond(sig[i + 1] > 1e-8, heun, lambda _: x_e, None)
-        return (x_next, 0.0), None
-
-    x_t = x_T.astype(jnp.float32) / alph[0]
-    keys = jax.random.split(key, M)
-    (x_t, _), _ = jax.lax.scan(step, (x_t, 0.0), (jnp.arange(M), keys))
-    return x_t * alph[M]
+    return _run("edm_stochastic", model_fn, x_T, key, schedule, ts,
+                s_churn=s_churn, s_tmin=s_tmin, s_tmax=s_tmax,
+                s_noise=s_noise)

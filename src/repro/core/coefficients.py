@@ -127,6 +127,9 @@ class SolverTables:
     predictor_order: int
     corrector_order: int
     parameterization: str
+    #: schedule values on the grid (M+1,); used by the trajectory hook
+    alphas: np.ndarray | None = None
+    sigmas: np.ndarray | None = None
 
     @property
     def n_steps(self) -> int:
@@ -248,4 +251,5 @@ def build_tables(
         pred=pred, corr_new=corr_new, corr=corr,
         predictor_order=P, corrector_order=Cn,
         parameterization=parameterization,
+        alphas=alphas, sigmas=sigmas,
     )

@@ -1,0 +1,51 @@
+"""repro.core.samplers — unified plan/execute sampling API.
+
+    from repro.core import samplers
+
+    s = samplers.make_sampler("sa", nfe=20, tau=0.4)   # or any baseline
+    x0 = s.sample(model_fn, s.init_noise(k0, (4096, 2)), k1)
+
+One registry covers SA-Solver ("sa") and the paper's six baselines
+("ddim", "ddpm_ancestral", "dpm_solver_pp_2m", "euler_maruyama",
+"edm_heun", "edm_stochastic"); ``list_samplers()`` enumerates them. See
+``base`` for the spec -> plan -> execute protocol and the compile cache,
+``sa`` / ``baselines`` for the families.
+"""
+
+from .base import (
+    Sampler,
+    SamplerFamily,
+    SamplerPlan,
+    SamplerSpec,
+    build_plan,
+    clear_compile_cache,
+    compile_cache_stats,
+    get_family,
+    list_samplers,
+    make_sampler,
+    register_sampler,
+    sample,
+    sample_batched,
+)
+
+# importing the family modules registers them
+from . import sa as _sa_family  # noqa: F401
+from . import baselines as _baseline_families  # noqa: F401
+from .sa import tables_to_arrays
+
+__all__ = [
+    "Sampler",
+    "SamplerFamily",
+    "SamplerPlan",
+    "SamplerSpec",
+    "build_plan",
+    "clear_compile_cache",
+    "compile_cache_stats",
+    "get_family",
+    "list_samplers",
+    "make_sampler",
+    "register_sampler",
+    "sample",
+    "sample_batched",
+    "tables_to_arrays",
+]

@@ -1,0 +1,357 @@
+"""Plan/execute sampler API: one registry for SA-Solver and every baseline.
+
+The sampling stack is split into three phases so serving can select,
+configure, compile-cache, and swap solvers at runtime without code changes:
+
+1. **Spec** — a frozen, hashable :class:`SamplerSpec` naming a registered
+   sampler family plus all hyperparameters (grid, tau/eta, orders,
+   parameterization). ``SamplerSpec.from_nfe`` converts a model-evaluation
+   budget into the family's step count (PEC vs PECE vs 2-evals-per-step
+   Heun all differ), so "NFE" means the same thing for every sampler.
+2. **Plan** — :func:`build_plan` runs the family's host-side float64
+   precompute (timestep grid, coefficient tables, per-interval constants)
+   once and packages it as a :class:`SamplerPlan` whose ``arrays`` dict is
+   a device-ready pytree of f32 ``jnp`` arrays. Plans are cached by spec.
+3. **Execute** — :func:`sample` looks up a pure jitted executor in an LRU
+   compile cache keyed on (family statics, shape, dtype, model_fn
+   identity) and runs it with ``plan.arrays`` passed as *traced arguments*
+   — so re-planning with a different tau / grid / coefficient table reuses
+   the compiled step loop, only a different step count retraces.
+   :func:`sample_batched` vmaps the executor over a leading key axis for
+   fleet-style generation; ``trajectory=True`` additionally returns the
+   per-step state and denoised previews (stacked ``lax.scan`` outputs) so
+   serving can stream intermediates.
+
+Registering a new sampler::
+
+    register_sampler(SamplerFamily(
+        name="my_solver",
+        plan=my_plan_fn,        # spec -> (arrays: dict[str, jnp], host: dict)
+        execute=my_exec_fn,     # (statics, arrays, model_fn, x, key, trajectory)
+        statics=lambda spec: (),  # trace-relevant spec fields only
+        nfe_of=lambda spec: spec.n_steps,
+        steps_from_nfe=lambda nfe, kw: max(1, nfe),
+    ))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..schedules import NoiseSchedule, get_schedule, timestep_grid
+from ..tau import TauSchedule
+
+__all__ = [
+    "SamplerSpec",
+    "SamplerPlan",
+    "SamplerFamily",
+    "Sampler",
+    "register_sampler",
+    "get_family",
+    "make_sampler",
+    "list_samplers",
+    "build_plan",
+    "sample",
+    "sample_batched",
+    "compile_cache_stats",
+    "clear_compile_cache",
+]
+
+ModelFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+# --------------------------------------------------------------------- spec
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Frozen, hashable description of one configured sampler.
+
+    Families read the subset of fields they understand; the rest keep their
+    defaults and are ignored. ``schedule`` is a registry name ("vp_linear")
+    or a (frozen) :class:`NoiseSchedule` instance. ``ts`` overrides the
+    (grid, n_steps) construction with an explicit decreasing grid — used by
+    the legacy shims and by grid-search callers.
+    """
+
+    name: str = "sa"
+    schedule: Any = "vp_linear"
+    n_steps: int = 20
+    grid: str = "logsnr"  # "time" | "logsnr" | "karras"
+    rho: float = 7.0
+    t_start: float | None = None
+    t_end: float | None = None
+    ts: tuple[float, ...] | None = None
+    parameterization: str = "data"  # "data" | "noise"
+    # SA-Solver family
+    tau: Any = 1.0  # float or TauSchedule
+    predictor_order: int = 3
+    corrector_order: int = 3
+    mode: str = "PEC"  # "PEC" | "PECE"
+    combine: str = "einsum"  # "einsum" | "kernel"
+    denoise_final: bool = True
+    # DDIM family
+    eta: float = 0.0
+    # EDM stochastic family
+    s_churn: float = 40.0
+    s_tmin: float = 0.05
+    s_tmax: float = 50.0
+    s_noise: float = 1.003
+
+    def resolve_schedule(self) -> NoiseSchedule:
+        if isinstance(self.schedule, NoiseSchedule):
+            return self.schedule
+        return get_schedule(self.schedule)
+
+    def grid_ts(self) -> np.ndarray:
+        """The decreasing float64 solve grid ``t_0 > ... > t_M``."""
+        if self.ts is not None:
+            ts = np.asarray(self.ts, dtype=np.float64)
+            if len(ts) != self.n_steps + 1:
+                raise ValueError(
+                    f"explicit ts has {len(ts)} points but n_steps="
+                    f"{self.n_steps} needs {self.n_steps + 1}")
+            return ts
+        return timestep_grid(
+            self.resolve_schedule(), self.n_steps, kind=self.grid,
+            t_start=self.t_start, t_end=self.t_end, rho=self.rho)
+
+    @property
+    def nfe(self) -> int:
+        """Model evaluations this spec will spend (family-exact)."""
+        return get_family(self.name).nfe_of(self)
+
+    @classmethod
+    def from_nfe(cls, name: str, nfe: int, **kw) -> "SamplerSpec":
+        """Build a spec whose step count spends (at most) ``nfe`` model
+        evaluations — the conversion is per-family (PEC: NFE = M + 1,
+        PECE: 2M + 1, DDIM-like: M, Heun-like: 2M)."""
+        if nfe < 1:
+            raise ValueError("nfe must be >= 1")
+        n_steps = get_family(name).steps_from_nfe(nfe, kw)
+        return cls(name=name, n_steps=n_steps, **kw)
+
+    def replace(self, **kw) -> "SamplerSpec":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------- plan
+@dataclasses.dataclass(frozen=True, eq=False)
+class SamplerPlan:
+    """Host precompute, packaged for the device.
+
+    ``arrays`` is the device-ready pytree (dict of f32 jnp arrays) handed
+    to the jitted executor as traced arguments; ``host`` keeps float64
+    artifacts (the grid, coefficient tables) for introspection and
+    ``init_noise``; ``statics`` are the trace-relevant hashables the
+    executor branches on (part of the compile-cache key).
+    """
+
+    spec: SamplerSpec
+    arrays: dict
+    host: dict
+    statics: tuple
+
+    @property
+    def ts(self) -> np.ndarray:
+        return self.host["ts"]
+
+
+# ----------------------------------------------------------------- registry
+@dataclasses.dataclass(frozen=True)
+class SamplerFamily:
+    name: str
+    #: spec -> (arrays: dict[str, jnp.ndarray], host: dict)
+    plan: Callable[[SamplerSpec], tuple]
+    #: (statics, arrays, model_fn, x, key, trajectory) -> x0 | (x0, traj)
+    execute: Callable
+    #: spec -> hashable tuple of the fields the executor branches on
+    statics: Callable[[SamplerSpec], tuple]
+    nfe_of: Callable[[SamplerSpec], int]
+    steps_from_nfe: Callable[[int, dict], int]
+
+
+_REGISTRY: dict[str, SamplerFamily] = {}
+
+
+def register_sampler(family: SamplerFamily) -> SamplerFamily:
+    if not isinstance(family, SamplerFamily):
+        raise TypeError("register_sampler takes a SamplerFamily")
+    _REGISTRY[family.name] = family
+    return family
+
+
+def get_family(name: str) -> SamplerFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampler {name!r}; registered: {list_samplers()}")
+
+
+def list_samplers() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------------------- plan caching
+_PLAN_CACHE: OrderedDict = OrderedDict()
+_PLAN_CACHE_MAX = 128
+
+
+def build_plan(spec: SamplerSpec) -> SamplerPlan:
+    """Resolve a spec into its (cached) device-ready plan."""
+    try:
+        plan = _PLAN_CACHE.get(spec)
+    except TypeError:  # unhashable field (e.g. a raw np.ndarray ts)
+        plan = None
+        spec_key = None
+    else:
+        spec_key = spec
+    if plan is not None:
+        _PLAN_CACHE.move_to_end(spec_key)
+        return plan
+    family = get_family(spec.name)
+    arrays, host = family.plan(spec)
+    if "ts" not in host:
+        host["ts"] = spec.grid_ts()
+    plan = SamplerPlan(spec=spec, arrays=arrays, host=host,
+                       statics=family.statics(spec))
+    if spec_key is not None:
+        _PLAN_CACHE[spec_key] = plan
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAX:
+            _PLAN_CACHE.popitem(last=False)
+    return plan
+
+
+# ------------------------------------------------------------ compile cache
+_COMPILE_CACHE: OrderedDict = OrderedDict()
+_COMPILE_CACHE_MAX = 64
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def compile_cache_stats() -> dict:
+    return dict(_CACHE_STATS, size=len(_COMPILE_CACHE))
+
+
+def clear_compile_cache() -> None:
+    _COMPILE_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
+              trajectory: bool, batched: bool):
+    """LRU-cached jitted executor.
+
+    Keyed on (family name, executor statics, shape, dtype, model_fn
+    identity, trajectory, batched). ``plan.arrays`` are traced arguments,
+    so two plans of the same family/statics (different tau, grid, or
+    coefficient values at the same step count) share one compilation; a
+    different step count changes argument shapes and retraces inside the
+    same entry via ``jax.jit``'s own cache.
+    """
+    key = (plan.spec.name, plan.statics, tuple(shape),
+           jnp.dtype(dtype).name, id(model_fn), trajectory, batched)
+    entry = _COMPILE_CACHE.get(key)
+    if entry is not None:
+        _COMPILE_CACHE.move_to_end(key)
+        _CACHE_STATS["hits"] += 1
+        return entry[0]
+    _CACHE_STATS["misses"] += 1
+    family = get_family(plan.spec.name)
+    statics = plan.statics
+
+    if batched:
+        def run(arrays, xs, keys):
+            return jax.vmap(
+                lambda x, k: family.execute(
+                    statics, arrays, model_fn, x, k, trajectory)
+            )(xs, keys)
+    else:
+        def run(arrays, x, k):
+            return family.execute(statics, arrays, model_fn, x, k, trajectory)
+
+    fn = jax.jit(run)
+    # keep model_fn alive so its id cannot be recycled under this entry
+    _COMPILE_CACHE[key] = (fn, model_fn)
+    while len(_COMPILE_CACHE) > _COMPILE_CACHE_MAX:
+        _COMPILE_CACHE.popitem(last=False)
+    return fn
+
+
+# -------------------------------------------------------------- entrypoints
+def sample(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
+           key: jax.Array, *, trajectory: bool = False):
+    """Run one sampler end-to-end: ``x_T -> x_0``.
+
+    With ``trajectory=True`` returns ``(x_0, traj)`` where ``traj`` is a
+    dict of per-step stacked outputs — ``traj["x"]`` the state after each
+    step and ``traj["x0"]`` the step's denoised preview, both
+    ``[n_steps, *x_T.shape]`` — for streaming/debugging.
+    """
+    fn = _compiled(plan, model_fn, x_T.shape, x_T.dtype, trajectory, False)
+    return fn(plan.arrays, x_T, key)
+
+
+def sample_batched(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
+                   keys: jax.Array, *, trajectory: bool = False):
+    """Fleet-style generation: vmap the executor over a leading key axis.
+
+    ``keys`` is a stacked PRNG-key array ``[K, ...]`` and ``x_T`` carries a
+    matching leading axis ``[K, *shape]`` (one initial noise per key).
+    """
+    if x_T.shape[0] != keys.shape[0]:
+        raise ValueError(
+            f"leading axes must match: x_T {x_T.shape[0]} vs keys "
+            f"{keys.shape[0]}")
+    fn = _compiled(plan, model_fn, x_T.shape[1:], x_T.dtype, trajectory, True)
+    return fn(plan.arrays, x_T, keys)
+
+
+# ------------------------------------------------------------ bound sampler
+class Sampler:
+    """A spec bound to its plan — the one-stop object callers hold.
+
+    ``make_sampler("sa", nfe=20, tau=0.4)`` -> plan once, then
+    ``.sample`` / ``.sample_batched`` reuse the shared compile cache.
+    """
+
+    def __init__(self, spec: SamplerSpec):
+        self.spec = spec
+        self.plan = build_plan(spec)
+        self.schedule = spec.resolve_schedule()
+
+    @property
+    def nfe(self) -> int:
+        return self.spec.nfe
+
+    def sample(self, model_fn: ModelFn, x_T: jnp.ndarray, key: jax.Array,
+               *, trajectory: bool = False):
+        return sample(self.plan, model_fn, x_T, key, trajectory=trajectory)
+
+    def sample_batched(self, model_fn: ModelFn, x_T: jnp.ndarray,
+                       keys: jax.Array, *, trajectory: bool = False):
+        return sample_batched(self.plan, model_fn, x_T, keys,
+                              trajectory=trajectory)
+
+    def init_noise(self, key: jax.Array, shape, dtype=jnp.float32):
+        scale = self.schedule.prior_scale(float(self.plan.ts[0]))
+        return scale * jax.random.normal(key, shape, dtype)
+
+    def __repr__(self) -> str:
+        return f"Sampler({self.spec!r})"
+
+
+def make_sampler(name: str, **kw) -> Sampler:
+    """Registry front door. ``nfe=`` routes through ``SamplerSpec.from_nfe``
+    (per-family NFE -> steps conversion); all other keywords are
+    ``SamplerSpec`` fields."""
+    if "nfe" in kw:
+        spec = SamplerSpec.from_nfe(name, kw.pop("nfe"), **kw)
+    else:
+        spec = SamplerSpec(name=name, **kw)
+    return Sampler(spec)

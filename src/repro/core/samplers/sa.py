@@ -1,0 +1,148 @@
+"""SA-Solver (paper Algorithm 1) on the plan/execute protocol.
+
+The plan phase runs ``coefficients.build_tables`` (host float64 — the
+exponentially-weighted Adams coefficients cancel at O(h^s) and must not be
+computed in f32) and ships the tables as f32 device arrays. The executor
+is the same single ``lax.scan`` the legacy ``repro.core.solver.sample``
+ran — in fact the legacy entry point is now a shim over this executor, so
+the two paths are bitwise identical by construction.
+
+Statics (compile-cache key): parameterization, corrector on/off, PECE,
+einsum-vs-Pallas combine, denoise_final. tau, the grid, and the
+coefficient values are *data*, so tau sweeps at a fixed step count reuse
+one compilation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..coefficients import SolverTables, build_tables
+from .base import SamplerFamily, SamplerSpec, register_sampler
+
+__all__ = ["plan_sa", "execute_sa", "tables_to_arrays", "sa_statics"]
+
+
+def tables_to_arrays(tables: SolverTables) -> dict:
+    """f32 device view of the host-f64 coefficient tables."""
+    f32 = lambda a: jnp.asarray(a, dtype=jnp.float32)
+    arrays = dict(
+        ts=f32(tables.ts),
+        decay=f32(tables.decay),
+        noise=f32(tables.noise),
+        pred=f32(tables.pred),
+        corr_new=f32(tables.corr_new),
+        corr=f32(tables.corr),
+    )
+    if tables.alphas is not None:
+        arrays["alphas"] = f32(tables.alphas)
+        arrays["sigmas"] = f32(tables.sigmas)
+    return arrays
+
+
+def plan_sa(spec: SamplerSpec):
+    schedule = spec.resolve_schedule()
+    ts = spec.grid_ts()
+    tables = build_tables(
+        schedule, ts,
+        tau=spec.tau,
+        predictor_order=spec.predictor_order,
+        corrector_order=spec.corrector_order,
+        parameterization=spec.parameterization,
+    )
+    return tables_to_arrays(tables), {"ts": ts, "tables": tables}
+
+
+def sa_statics(spec: SamplerSpec) -> tuple:
+    use_corrector = spec.corrector_order > 0
+    return (
+        spec.parameterization,
+        use_corrector,
+        spec.mode == "PECE" and use_corrector,
+        spec.combine == "kernel",
+        spec.denoise_final and spec.parameterization == "data",
+    )
+
+
+def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
+    """Algorithm 1 as one scan; see repro.core.solver for the step math."""
+    parameterization, use_corrector, pece, use_kernel, denoise = statics
+    P = dev["pred"].shape[1]  # buffer rows = max(pred order, corr order)
+    M = dev["decay"].shape[0]
+
+    x = x_T.astype(jnp.float32)
+    e0 = model_fn(x, dev["ts"][0]).astype(jnp.float32)
+    buffer = jnp.zeros((P,) + x.shape, dtype=jnp.float32).at[0].set(e0)
+
+    def combine(decay_i, x_prev, coeffs, buf, noise_i, xi, extra=None):
+        if extra is not None:
+            # corrector: fold the predicted-point eval in as one more buffer
+            c_new, e_new = extra
+            coeffs = jnp.concatenate([c_new[None], coeffs])
+            buf = jnp.concatenate([e_new[None], buf], axis=0)
+        if use_kernel:
+            from ...kernels.sa_update import sa_update
+            cvec = jnp.concatenate([decay_i[None], noise_i[None], coeffs])
+            return sa_update(x_prev, buf, xi, cvec)
+        # sum_j coeffs[j] * buf[j]  — einsum keeps it a single contraction
+        acc = jnp.einsum("p,p...->...", coeffs, buf)
+        return decay_i * x_prev + acc + noise_i * xi
+
+    def step(carry, per_step):
+        x, buf = carry
+        (i, step_key) = per_step
+        xi = jax.random.normal(step_key, x.shape, jnp.float32)
+        decay_i = dev["decay"][i]
+        noise_i = dev["noise"][i]
+        t_next = dev["ts"][i + 1]
+
+        x_pred = combine(decay_i, x, dev["pred"][i], buf, noise_i, xi)
+        e_new = model_fn(x_pred, t_next).astype(jnp.float32)
+        if use_corrector:
+            x_next = combine(
+                decay_i, x, dev["corr"][i], buf, noise_i, xi,
+                extra=(dev["corr_new"][i], e_new),
+            )
+            if pece:
+                e_new = model_fn(x_next, t_next).astype(jnp.float32)
+        else:
+            x_next = x_pred
+        buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
+        if trajectory:
+            if parameterization == "data":
+                x0_hat = e_new
+            else:  # eps-hat -> x0-hat at t_{i+1}
+                x0_hat = (x_next - dev["sigmas"][i + 1] * e_new) \
+                    / dev["alphas"][i + 1]
+            return (x_next, buf), {"x": x_next, "x0": x0_hat}
+        return (x_next, buf), None
+
+    keys = jax.random.split(key, M)
+    (x, buffer), traj = jax.lax.scan(step, (x, buffer), (jnp.arange(M), keys))
+
+    if denoise:
+        x = buffer[0]
+    if trajectory:
+        return x, traj
+    return x
+
+
+def _sa_nfe(spec: SamplerSpec) -> int:
+    per_step = 2 if (spec.mode == "PECE" and spec.corrector_order > 0) else 1
+    return spec.n_steps * per_step + 1
+
+
+def _sa_steps_from_nfe(nfe: int, kw: dict) -> int:
+    pece = kw.get("mode", "PEC") == "PECE" and kw.get("corrector_order", 3) > 0
+    return max(1, (nfe - 1) // (2 if pece else 1))
+
+
+register_sampler(SamplerFamily(
+    name="sa",
+    plan=plan_sa,
+    execute=execute_sa,
+    statics=sa_statics,
+    nfe_of=_sa_nfe,
+    steps_from_nfe=_sa_steps_from_nfe,
+))

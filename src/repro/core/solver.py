@@ -1,21 +1,23 @@
-"""SA-Solver (paper Algorithm 1) as a single jitted lax.scan.
+"""SA-Solver (paper Algorithm 1) — legacy surface over the samplers API.
+
+.. deprecated::
+    New code should go through the unified plan/execute registry::
+
+        from repro.core import samplers
+        s = samplers.make_sampler("sa", nfe=20, tau=0.4)
+        x0 = s.sample(model_fn, x_T, key)
+
+    ``SASolver`` / ``sample`` remain as thin shims: they build the same
+    coefficient tables as before and hand them to the registry's jitted
+    executor (``repro.core.samplers.sa.execute_sa``), so legacy callers
+    produce bitwise-identical outputs to ``make_sampler("sa")`` and share
+    its compile cache.
 
 The model is evaluated once per step (plus one initial evaluation):
-NFE = n_steps + 1. Coefficient tables come from ``coefficients.build_tables``
-(float64 host precompute); the scan carries
-
-    x        : current solver state, f32
-    buffer   : [P_max, *shape] stacked model evaluations, slot 0 = newest
-               (i.e. slot j holds x_theta(x_{t_{i-j}}, t_{i-j}))
-
-Per step i (computing x_{t_{i+1}}):
-    1. xi ~ N(0, I)                                      (one draw per step)
-    2. x_pred = decay_i * x + sum_j pred[i, j] * buffer[j] + noise_i * xi
-    3. e_new  = model(x_pred, t_{i+1})
-    4. x_corr = decay_i * x + corr_new[i] * e_new
-               + sum_j corr[i, j] * buffer[j] + noise_i * xi   (same xi)
-    5. buffer <- shift-in e_new
-The corrector is compiled out entirely when corrector_order == 0.
+NFE = n_steps + 1 for PEC, 2*n_steps + 1 for PECE. Coefficient tables come
+from ``coefficients.build_tables`` (float64 host precompute); the executor
+is a single jitted ``lax.scan`` — see ``samplers/sa.py`` for the step
+math and ``coefficients.py`` for the derivation.
 
 ``model_fn(x, t) -> prediction`` must match ``tables.parameterization``
 ("data": returns x0-hat; "noise": returns eps-hat). Use
@@ -29,7 +31,6 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .coefficients import SolverTables, build_tables
 from .schedules import NoiseSchedule, timestep_grid
@@ -68,7 +69,8 @@ class SASolverConfig:
 
 
 class SASolver:
-    """Bind (schedule, config) -> reusable jitted sampler."""
+    """Bind (schedule, config) -> reusable jitted sampler. (Legacy shim;
+    prefer ``samplers.make_sampler("sa", ...)``.)"""
 
     def __init__(self, schedule: NoiseSchedule, config: SASolverConfig):
         self.schedule = schedule
@@ -94,15 +96,28 @@ class SASolver:
         return scale * jax.random.normal(key, shape, dtype)
 
 
-def _tables_to_device(tables: SolverTables):
-    f32 = lambda a: jnp.asarray(a, dtype=jnp.float32)
-    return dict(
-        ts=f32(tables.ts),
-        decay=f32(tables.decay),
-        noise=f32(tables.noise),
-        pred=f32(tables.pred),
-        corr_new=f32(tables.corr_new),
-        corr=f32(tables.corr),
+def _plan_from_tables(tables: SolverTables, config: SASolverConfig):
+    """Package prebuilt tables as a SamplerPlan (no recompute)."""
+    from .samplers.base import SamplerPlan, SamplerSpec
+    from .samplers.sa import sa_statics, tables_to_arrays
+
+    spec = SamplerSpec(
+        name="sa",
+        n_steps=tables.n_steps,
+        ts=tuple(float(t) for t in tables.ts),
+        parameterization=tables.parameterization,
+        tau=config.tau,
+        predictor_order=tables.predictor_order,
+        corrector_order=tables.corrector_order,
+        mode=config.mode,
+        combine=config.combine,
+        denoise_final=config.denoise_final,
+    )
+    return SamplerPlan(
+        spec=spec,
+        arrays=tables_to_arrays(tables),
+        host={"ts": tables.ts, "tables": tables},
+        statics=sa_statics(spec),
     )
 
 
@@ -113,58 +128,9 @@ def sample(
     tables: SolverTables,
     config: SASolverConfig,
 ) -> jnp.ndarray:
-    """Run Algorithm 1. Differentiable w.r.t. nothing (sampling only)."""
-    dev = _tables_to_device(tables)
-    P = tables.pred.shape[1]  # buffer rows = max(pred order, corr order)
-    M = tables.n_steps
-    use_corrector = tables.corrector_order > 0
-    pece = config.mode == "PECE"
+    """Run Algorithm 1 with prebuilt ``tables``. (Legacy shim: routes
+    through the registry executor and its compile cache.)"""
+    from .samplers.base import sample as registry_sample
 
-    x = x_T.astype(jnp.float32)
-    e0 = model_fn(x, dev["ts"][0]).astype(jnp.float32)
-    buffer = jnp.zeros((P,) + x.shape, dtype=jnp.float32).at[0].set(e0)
-
-    use_kernel = config.combine == "kernel"
-
-    def combine(decay_i, x_prev, coeffs, buf, noise_i, xi, extra=None):
-        if extra is not None:
-            # corrector: fold the predicted-point eval in as one more buffer
-            c_new, e_new = extra
-            coeffs = jnp.concatenate([c_new[None], coeffs])
-            buf = jnp.concatenate([e_new[None], buf], axis=0)
-        if use_kernel:
-            from ..kernels.sa_update import sa_update
-            cvec = jnp.concatenate([decay_i[None], noise_i[None], coeffs])
-            return sa_update(x_prev, buf, xi, cvec)
-        # sum_j coeffs[j] * buf[j]  — einsum keeps it a single contraction
-        acc = jnp.einsum("p,p...->...", coeffs, buf)
-        return decay_i * x_prev + acc + noise_i * xi
-
-    def step(carry, per_step):
-        x, buf = carry
-        (i, step_key) = per_step
-        xi = jax.random.normal(step_key, x.shape, jnp.float32)
-        decay_i = dev["decay"][i]
-        noise_i = dev["noise"][i]
-        t_next = dev["ts"][i + 1]
-
-        x_pred = combine(decay_i, x, dev["pred"][i], buf, noise_i, xi)
-        e_new = model_fn(x_pred, t_next).astype(jnp.float32)
-        if use_corrector:
-            x_next = combine(
-                decay_i, x, dev["corr"][i], buf, noise_i, xi,
-                extra=(dev["corr_new"][i], e_new),
-            )
-            if pece:
-                e_new = model_fn(x_next, t_next).astype(jnp.float32)
-        else:
-            x_next = x_pred
-        buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
-        return (x_next, buf), None
-
-    keys = jax.random.split(key, M)
-    (x, buffer), _ = jax.lax.scan(step, (x, buffer), (jnp.arange(M), keys))
-
-    if config.denoise_final and tables.parameterization == "data":
-        x = buffer[0]
-    return x
+    return registry_sample(_plan_from_tables(tables, config),
+                           model_fn, x_T, key)

@@ -1,13 +1,16 @@
-"""Diffusion sampling driver: SA-Solver over any backbone in denoiser mode.
+"""Diffusion sampling driver: any registered sampler over any backbone.
 
     PYTHONPATH=src python -m repro.launch.sample --arch dit-s --smoke \
-        --batch 8 --seq 64 --nfe 20 --tau 1.0
+        --sampler sa --batch 8 --seq 64 --nfe 20 --tau 1.0
 
 This is the paper's technique as a first-class serving feature: the
 backbone (any arch built with denoiser_latent) is the x0-prediction model
-x_theta; SA-Solver (Algorithm 1) drives the reverse variance-controlled
-SDE. Works for the transformer family natively and for rwkv6/zamba2 via
-their bidirectional denoiser adaptation.
+x_theta, and ``--sampler`` selects any entry in the plan/execute registry
+(SA-Solver Algorithm 1 by default, or any baseline) at runtime without
+code changes. ``--nfe`` is routed through ``SamplerSpec.from_nfe`` so the
+model-evaluation budget means the same thing for every sampler and mode
+(PEC: NFE = steps + 1, PECE: 2*steps + 1, DDIM-like: steps, Heun-like:
+2*steps).
 """
 
 import argparse
@@ -17,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, get_smoke
-from ..core import SASolver, SASolverConfig, get_schedule
+from ..core import get_schedule
+from ..core.samplers import SamplerSpec, Sampler, list_samplers
 from ..models import build_model, init_params
 
 
@@ -38,34 +42,41 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--latent", type=int, default=None)
+    ap.add_argument("--sampler", default="sa", choices=list_samplers())
     ap.add_argument("--nfe", type=int, default=20)
     ap.add_argument("--tau", type=float, default=1.0)
     ap.add_argument("--predictor", type=int, default=3)
     ap.add_argument("--corrector", type=int, default=3)
+    ap.add_argument("--mode", default="PEC", choices=["PEC", "PECE"])
+    ap.add_argument("--grid", default="logsnr",
+                    choices=["time", "logsnr", "karras"])
     ap.add_argument("--schedule", default="vp_linear")
     args = ap.parse_args()
 
     cfg, model, params = build_denoiser(args.arch, args.smoke, args.latent)
     dz = cfg.denoiser_latent
-    sched = get_schedule(args.schedule)
-    scfg = SASolverConfig(
-        n_steps=args.nfe - 1, predictor_order=args.predictor,
-        corrector_order=args.corrector, tau=args.tau,
+    spec = SamplerSpec.from_nfe(
+        args.sampler, args.nfe,
+        schedule=get_schedule(args.schedule), grid=args.grid,
+        tau=args.tau, predictor_order=args.predictor,
+        corrector_order=args.corrector, mode=args.mode,
     )
-    solver = SASolver(sched, scfg)
+    sampler = Sampler(spec)
 
     def model_fn(x, t):
         return model.denoise(params, x, t)
 
-    xT = solver.init_noise(jax.random.PRNGKey(1), (args.batch, args.seq, dz))
-    sample_jit = jax.jit(lambda x, k: solver.sample(model_fn, x, k))
+    xT = sampler.init_noise(jax.random.PRNGKey(1), (args.batch, args.seq, dz))
     t0 = time.perf_counter()
-    x0 = jax.block_until_ready(sample_jit(xT, jax.random.PRNGKey(2)))
+    x0 = jax.block_until_ready(
+        sampler.sample(model_fn, xT, jax.random.PRNGKey(2)))
     t1 = time.perf_counter()
-    x0b = jax.block_until_ready(sample_jit(xT, jax.random.PRNGKey(3)))
+    x0b = jax.block_until_ready(
+        sampler.sample(model_fn, xT, jax.random.PRNGKey(3)))
     t2 = time.perf_counter()
-    print(f"arch={cfg.name} latent={dz} NFE={scfg.nfe} tau={args.tau} "
-          f"P{args.predictor}C{args.corrector}")
+    print(f"arch={cfg.name} latent={dz} sampler={args.sampler} "
+          f"NFE={sampler.nfe} (requested {args.nfe}) steps={spec.n_steps} "
+          f"tau={args.tau} P{args.predictor}C{args.corrector} {args.mode}")
     print(f"compile+run {t1-t0:.2f}s, steady {t2-t1:.2f}s; "
           f"out mean={float(jnp.mean(x0)):.4f} std={float(jnp.std(x0)):.4f} "
           f"finite={bool(jnp.all(jnp.isfinite(x0)))}")

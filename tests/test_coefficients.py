@@ -1,45 +1,14 @@
-"""Property tests for the exponentially-weighted Adams coefficient engine."""
+"""Identity tests for the exponentially-weighted Adams coefficient engine.
+
+(The hypothesis-based property tests live in
+``test_coefficients_properties.py`` so this module still runs on a bare
+environment without hypothesis installed.)"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import get_schedule, timestep_grid
-from repro.core.coefficients import (build_tables, exp_monomial_integrals,
-                                     lagrange_coeff_matrix)
-
-
-@given(a=st.floats(-4.0, 6.0), h=st.floats(1e-3, 3.0),
-       k=st.integers(0, 5))
-@settings(max_examples=200, deadline=None)
-def test_exp_monomial_integrals_vs_quadrature(a, h, k):
-    """I_k = int_{-h}^0 e^{au} u^k du against high-res Simpson."""
-    I = exp_monomial_integrals(a, h, k)[k]
-    u = np.linspace(-h, 0.0, 4001)
-    f = np.exp(a * u) * u**k
-    ref = np.trapezoid(f, u)
-    assert I == pytest.approx(ref, rel=2e-4, abs=1e-10)
-
-
-@given(n=st.integers(1, 5), seed=st.integers(0, 10_000))
-@settings(max_examples=100, deadline=None)
-def test_lagrange_partition_of_unity(n, seed):
-    rng = np.random.default_rng(seed)
-    nodes = np.sort(rng.uniform(-3, 3, size=n))
-    if n > 1 and np.min(np.diff(nodes)) < 1e-2:
-        return  # ill-conditioned nodes aren't used by the solver grids
-    C = lagrange_coeff_matrix(nodes)
-    # sum_j l_j(u) = 1 for all u  <=>  column sums of C = e_0
-    colsum = C.sum(axis=0)
-    assert colsum[0] == pytest.approx(1.0, abs=1e-8)
-    assert np.allclose(colsum[1:], 0.0, atol=1e-8)
-    # l_j(node_i) = delta_ij
-    for j in range(n):
-        vals = sum(C[j, m] * nodes**m for m in range(n))
-        expect = np.zeros(n)
-        expect[j] = 1.0
-        assert np.allclose(vals, expect, atol=1e-7)
+from repro.core.coefficients import build_tables
 
 
 @pytest.mark.parametrize("tau", [0.0, 0.5, 1.0, 1.6])

@@ -9,6 +9,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # whole-model mesh lowering is heavyweight
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

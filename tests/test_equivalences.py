@@ -71,7 +71,7 @@ def test_dpmpp2m_agreement_is_third_order():
 def test_unipc_structure_corrector_improves_over_predictor():
     """UniPC-p == SA-Solver(p, p) at tau=0; sanity: the corrector lowers
     error vs the bare predictor at equal NFE (Table 2's pattern)."""
-    ref = sa(640, 3, 3)
+    ref = sa(320, 3, 3)
     e_pred = float(jnp.mean(jnp.linalg.norm(sa(24, 3, 0) - ref, axis=-1)))
     e_pc = float(jnp.mean(jnp.linalg.norm(sa(24, 3, 3) - ref, axis=-1)))
     assert e_pc < e_pred

@@ -32,8 +32,10 @@ c1 = jax.jit(one).lower(W, x).compile()
 c10 = jax.jit(scanned).lower(W, x).compile()
 a1 = analyze_hlo(c1.as_text())
 a10 = analyze_hlo(c10.as_text())
-assert a1.flops == c1.cost_analysis()["flops"], (a1.flops,)
-assert a1.bytes == c1.cost_analysis()["bytes accessed"]
+ca = c1.cost_analysis()
+ca = ca[0] if isinstance(ca, list) else ca  # list-of-dicts on older jax
+assert a1.flops == ca["flops"], (a1.flops,)
+assert a1.bytes == ca["bytes accessed"]
 assert abs(a10.flops - 10 * a1.flops) < 1e-6, (a10.flops, a1.flops)
 assert a10.transcendentals == 10 * 64 * 512
 print("OK")

@@ -29,6 +29,7 @@ def test_sa_update_sweep(shape, P, dtype):
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,H,K,S,hd,bq,bk", [
     (2, 4, 4, 128, 64, 32, 32),    # MHA
     (1, 8, 2, 256, 32, 64, 64),    # GQA 4:1
@@ -58,6 +59,7 @@ def test_flash_attention_noncausal():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,T,H,hd,chunk", [
     (2, 64, 3, 16, 16),
     (1, 128, 2, 32, 32),
@@ -80,6 +82,7 @@ def test_rwkv6_kernel_sweep(B, T, H, hd, chunk):
                                atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_rwkv6_kernel_bf16_inputs():
     ks = jax.random.split(jax.random.PRNGKey(4), 6)
     B, T, H, hd = 1, 32, 2, 16

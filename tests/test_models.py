@@ -30,6 +30,7 @@ def make_batch(cfg, key, B=2, S=32):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_smoke_forward_and_train_step(arch):
     cfg = get_smoke(arch)
@@ -51,6 +52,7 @@ def test_smoke_forward_and_train_step(arch):
     assert bool(jnp.isfinite(loss2))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_prefill_matches_forward(arch):
     cfg = get_smoke(arch)
@@ -75,6 +77,7 @@ def test_prefill_matches_forward(arch):
     assert bool(jnp.all(jnp.isfinite(lg2)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_decode_matches_forward_token_by_token(arch):
     """Greedy decode equivalence: running the full sequence through
@@ -116,6 +119,7 @@ def test_decode_matches_forward_token_by_token(arch):
                                rtol=3e-3, atol=3e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["dit-s", "rwkv6-3b", "zamba2-7b",
                                   "starcoder2-3b"])
 def test_denoiser_mode(arch):

@@ -46,6 +46,7 @@ def test_error_feedback_converges_where_naive_quant_stalls():
     assert float(jnp.max(jnp.abs(w["w"]))) < 1e-2
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     out = run_sub("""
 import jax, jax.numpy as jnp
@@ -69,6 +70,7 @@ print("OK")
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_compressed_psum_matches_psum():
     out = run_sub("""
 import jax, jax.numpy as jnp
@@ -89,6 +91,7 @@ print("OK")
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_distributed_loss_equals_single_device():
     """The distribution layer must not change the math: smoke-config
     train loss on a (2,2) mesh with fsdp_tp + activation sharding equals

@@ -1,0 +1,234 @@
+"""Unified plan/execute sampler API: registry round-trip, NFE accounting,
+compile-cache behaviour, trajectory hook, batched entry, and the
+bitwise-regression contract against the legacy SASolver surface."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GMM, SASolver, SASolverConfig, get_schedule,
+                        samplers, timestep_grid)
+from repro.core.samplers import (SamplerSpec, Sampler, build_plan,
+                                 list_samplers, make_sampler)
+
+SCHED = get_schedule("vp_linear")
+GMM2 = GMM.default_2d()
+MODEL = GMM2.model_fn(SCHED, "data")
+XT = jax.random.normal(jax.random.PRNGKey(9), (256, 2))
+KEY = jax.random.PRNGKey(0)
+
+ALL = ["ddim", "ddpm_ancestral", "dpm_solver_pp_2m", "edm_heun",
+       "edm_stochastic", "euler_maruyama", "sa"]
+
+
+def test_registry_lists_all_families():
+    assert list_samplers() == ALL
+
+
+def test_unknown_sampler_raises():
+    with pytest.raises(ValueError, match="unknown sampler"):
+        make_sampler("nope")
+
+
+# ------------------------------------------------------ registry round-trip
+@pytest.mark.parametrize("name", ALL)
+def test_round_trip_every_sampler_on_gmm_oracle(name):
+    """list_samplers -> make_sampler -> sample: every family reaches the
+    GMM target (far closer than the prior) through the same call path."""
+    from repro.core.metrics import sliced_w2
+    s = make_sampler(name, schedule=SCHED, nfe=32, tau=1.0)
+    x0 = s.sample(MODEL, XT, KEY)
+    assert x0.shape == XT.shape
+    assert bool(jnp.all(jnp.isfinite(x0)))
+    target = GMM2.sample(jax.random.PRNGKey(5), XT.shape[0])
+    mkey = jax.random.PRNGKey(6)
+    assert sliced_w2(x0, target, mkey) < 0.5 * sliced_w2(XT, target, mkey)
+
+
+# ---------------------------------------------------------- NFE accounting
+@pytest.mark.parametrize("name,kw,per_step,offset", [
+    ("sa", dict(mode="PEC"), 1, 1),
+    ("sa", dict(mode="PECE", corrector_order=3), 2, 1),
+    ("sa", dict(mode="PECE", corrector_order=0), 1, 1),
+    ("ddim", {}, 1, 0),
+    ("ddpm_ancestral", {}, 1, 0),
+    ("dpm_solver_pp_2m", {}, 1, 0),
+    ("euler_maruyama", {}, 1, 0),
+    ("edm_heun", {}, 2, 0),
+    ("edm_stochastic", {}, 2, 0),
+])
+def test_nfe_accounting_from_nfe(name, kw, per_step, offset):
+    """NFE = per_step * n_steps + offset, and from_nfe never overspends
+    (equality up to the family's step granularity)."""
+    for nfe in (7, 12, 21):
+        spec = SamplerSpec.from_nfe(name, nfe, **kw)
+        assert spec.nfe == per_step * spec.n_steps + offset
+        assert spec.nfe <= nfe
+        assert spec.nfe > nfe - 2 * per_step  # tight up to rounding
+
+
+@pytest.mark.parametrize("name,kw,want_nfe", [
+    ("sa", dict(mode="PEC", corrector_order=3), 9),
+    ("sa", dict(mode="PECE", corrector_order=3), 17),
+    ("ddim", {}, 8),
+    ("euler_maruyama", {}, 8),
+])
+def test_nfe_accounting_matches_runtime_eval_count(name, kw, want_nfe):
+    """The spec's claimed NFE equals the number of model evaluations the
+    compiled executor actually performs (counted host-side via
+    jax.debug.callback, which fires once per runtime evaluation)."""
+    calls = []
+
+    def counting_model(x, t):
+        jax.debug.callback(lambda: calls.append(1))
+        return MODEL(x, t)
+
+    s = make_sampler(name, schedule=SCHED, n_steps=8, tau=0.5, **kw)
+    assert s.nfe == want_nfe
+    x0 = jax.block_until_ready(s.sample(counting_model, XT[:64], KEY))
+    jax.effects_barrier()
+    assert bool(jnp.all(jnp.isfinite(x0)))
+    assert len(calls) == want_nfe
+
+
+# -------------------------------------------------------- bitwise identity
+@pytest.mark.parametrize("p,c,tau,mode", [
+    (3, 3, 1.0, "PEC"),
+    (2, 2, 0.6, "PECE"),
+    (3, 0, 0.0, "PEC"),
+])
+def test_sa_bitwise_identical_to_legacy_solver(p, c, tau, mode):
+    """The registry "sa" path and the legacy SASolver.sample produce
+    bitwise-equal outputs for the same PRNG key."""
+    cfg = SASolverConfig(n_steps=10, predictor_order=p, corrector_order=c,
+                         tau=tau, mode=mode)
+    legacy = SASolver(SCHED, cfg).sample(MODEL, XT, KEY)
+    s = make_sampler("sa", schedule=SCHED, n_steps=10, predictor_order=p,
+                     corrector_order=c, tau=tau, mode=mode)
+    new = s.sample(MODEL, XT, KEY)
+    assert legacy.dtype == new.dtype
+    assert bool(jnp.all(legacy == new))
+
+
+def test_legacy_explicit_tables_route_is_bitwise_too():
+    """The free-function shim with prebuilt tables (the benchmark path)
+    matches the spec-planned path bitwise."""
+    from repro.core.coefficients import build_tables
+    from repro.core.solver import sample as legacy_sample
+    ts = timestep_grid(SCHED, 12, kind="logsnr")
+    tb = build_tables(SCHED, ts, tau=0.8, predictor_order=3,
+                      corrector_order=2)
+    cfg = SASolverConfig(n_steps=12, predictor_order=3, corrector_order=2,
+                         tau=0.8, denoise_final=False)
+    a = legacy_sample(MODEL, XT, KEY, tb, cfg)
+    s = make_sampler("sa", schedule=SCHED, n_steps=12, predictor_order=3,
+                     corrector_order=2, tau=0.8, denoise_final=False)
+    b = s.sample(MODEL, XT, KEY)
+    assert bool(jnp.all(a == b))
+
+
+# ----------------------------------------------------------- compile cache
+def test_second_sample_hits_compile_cache_no_retrace():
+    """Same (sampler, shape, dtype, model_fn): the second call must not
+    re-trace; a re-planned tau at the same step count must not either
+    (coefficients are traced arguments, not baked constants)."""
+    samplers.clear_compile_cache()
+    traces = {"n": 0}
+
+    def traced_model(x, t):
+        traces["n"] += 1  # python body runs only while tracing
+        return MODEL(x, t)
+
+    s1 = make_sampler("sa", schedule=SCHED, n_steps=6, tau=0.5)
+    s1.sample(traced_model, XT, KEY)
+    first = traces["n"]
+    assert first > 0
+    s1.sample(traced_model, XT, jax.random.PRNGKey(42))
+    assert traces["n"] == first  # cache hit, zero retrace
+    assert samplers.compile_cache_stats()["hits"] == 1
+
+    # different tau, same structure -> new plan, same compiled executor
+    s2 = make_sampler("sa", schedule=SCHED, n_steps=6, tau=1.3)
+    s2.sample(traced_model, XT, KEY)
+    assert traces["n"] == first
+    assert samplers.compile_cache_stats()["hits"] == 2
+
+    # different shape -> retrace (new entry)
+    s1.sample(traced_model, XT[:32], KEY)
+    assert traces["n"] > first
+
+
+def test_plan_cache_reuses_plans():
+    spec = SamplerSpec(name="ddim", schedule=SCHED, n_steps=9, eta=0.3)
+    assert build_plan(spec) is build_plan(spec)
+
+
+# -------------------------------------------------- trajectory + batching
+@pytest.mark.parametrize("name", ["sa", "ddim", "dpm_solver_pp_2m",
+                                  "euler_maruyama", "edm_heun",
+                                  "edm_stochastic"])
+def test_trajectory_hook_streams_per_step_previews(name):
+    s = make_sampler(name, schedule=SCHED, n_steps=7, tau=0.5)
+    x0, traj = s.sample(MODEL, XT[:64], KEY, trajectory=True)
+    assert set(traj) == {"x", "x0"}
+    assert traj["x"].shape == (7, 64, 2)
+    assert traj["x0"].shape == (7, 64, 2)
+    assert bool(jnp.all(jnp.isfinite(traj["x0"])))
+    # the preview sequence ends at (or denoises beyond) the final state
+    assert float(jnp.max(jnp.abs(traj["x"][-1] - x0))) < 1.0
+
+
+def test_sa_noise_param_trajectory_previews_are_x0_scale():
+    model_eps = GMM2.model_fn(SCHED, "noise")
+    s = make_sampler("sa", schedule=SCHED, n_steps=16, tau=0.0,
+                     parameterization="noise", predictor_order=2,
+                     corrector_order=0, denoise_final=False)
+    _, traj = s.sample(model_eps, XT[:64], KEY, trajectory=True)
+    # late previews should live near the data manifold (|x| <= ~3)
+    assert float(jnp.mean(jnp.abs(traj["x0"][-1]))) < 4.0
+
+
+def test_sample_batched_vmaps_over_keys():
+    s = make_sampler("sa", schedule=SCHED, n_steps=6, tau=1.0)
+    K = 3
+    keys = jax.random.split(jax.random.PRNGKey(11), K)
+    xTs = jax.vmap(lambda k: s.init_noise(k, (128, 2)))(keys)
+    out = s.sample_batched(MODEL, xTs, keys)
+    assert out.shape == (K, 128, 2)
+    # distinct keys -> distinct stochastic paths
+    assert float(jnp.max(jnp.abs(out[0] - out[1]))) > 1e-3
+    # and it matches the unbatched executor per element
+    one = s.sample(MODEL, xTs[0], keys[0])
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(one),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sample_batched_rejects_mismatched_axes():
+    s = make_sampler("ddim", schedule=SCHED, n_steps=4)
+    keys = jax.random.split(KEY, 3)
+    with pytest.raises(ValueError, match="leading axes"):
+        s.sample_batched(MODEL, XT[:2], keys)
+
+
+# ------------------------------------------------------------ spec surface
+def test_explicit_ts_override():
+    ts = timestep_grid(SCHED, 8, kind="karras")
+    spec = SamplerSpec(name="sa", schedule=SCHED, n_steps=8,
+                       ts=tuple(float(t) for t in ts), tau=0.0)
+    x = samplers.sample(build_plan(spec), MODEL, XT[:64], KEY)
+    assert bool(jnp.all(jnp.isfinite(x)))
+    np.testing.assert_allclose(build_plan(spec).ts, ts)
+
+
+def test_explicit_ts_length_mismatch_raises():
+    with pytest.raises(ValueError, match="n_steps"):
+        SamplerSpec(name="sa", n_steps=5, ts=(1.0, 0.5, 0.1)).grid_ts()
+
+
+def test_kernel_combine_path_through_registry():
+    a = make_sampler("sa", schedule=SCHED, n_steps=6, tau=0.7,
+                     combine="einsum").sample(MODEL, XT[:64], KEY)
+    b = make_sampler("sa", schedule=SCHED, n_steps=6, tau=0.7,
+                     combine="kernel").sample(MODEL, XT[:64], KEY)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-4

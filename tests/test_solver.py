@@ -14,7 +14,7 @@ from repro.core.solver import sample as sa_sample
 SCHED = get_schedule("vp_linear")
 GMM2 = GMM.default_2d()
 MODEL = GMM2.model_fn(SCHED, "data")
-XT = jax.random.normal(jax.random.PRNGKey(9), (384, 2))
+XT = jax.random.normal(jax.random.PRNGKey(9), (256, 2))
 KEY = jax.random.PRNGKey(0)
 
 
@@ -28,7 +28,7 @@ def run(n, p, c, tau=0.0, xT=XT, model=MODEL, **kw):
 
 @pytest.fixture(scope="module")
 def reference():
-    return run(640, 3, 3)
+    return run(320, 3, 3)
 
 
 @pytest.mark.parametrize("p,c,want", [(1, 0, 1.0), (2, 0, 2.0), (3, 0, 3.0),
@@ -37,7 +37,7 @@ def test_convergence_order_tau0(p, c, want, reference):
     """Theorems 5.1 / 5.2 at tau=0: global order s (predictor) / s+1
     (corrector). Observed order from a 20->80 step Richardson fit."""
     errs = []
-    for n in (20, 40, 80):
+    for n in (20, 80):
         x = run(n, p, c)
         errs.append(float(jnp.mean(jnp.linalg.norm(x - reference, axis=-1))))
     order = np.log2(errs[0] / errs[-1]) / 2.0
@@ -61,17 +61,21 @@ def test_stochastic_convergence_in_distribution():
     assert dists[0] > 3 * max(dists[1], dists[2]), dists
 
 
+GAUSS3 = gaussian_oracle(SCHED, mean=0.8, std=0.5, dim=3)
+GAUSS3_MODEL = GAUSS3.model_fn(SCHED, "data")
+
+
 @pytest.mark.parametrize("tau", [0.0, 0.6, 1.0, 1.4])
 def test_marginal_preservation_across_tau(tau):
     """Prop 4.1: every member of the variance-controlled family shares the
     same marginals. Gaussian target => sample mean/var must match for all
-    tau at sufficient steps."""
-    g = gaussian_oracle(SCHED, mean=0.8, std=0.5, dim=3)
-    model = g.model_fn(SCHED, "data")
-    xT = jax.random.normal(jax.random.PRNGKey(3), (8192, 3))
-    ts = timestep_grid(SCHED, 48, kind="logsnr")
+    tau at sufficient steps (one shared model_fn => one shared compile;
+    tau only changes the planned tables)."""
+    model = GAUSS3_MODEL
+    xT = jax.random.normal(jax.random.PRNGKey(3), (4096, 3))
+    ts = timestep_grid(SCHED, 32, kind="logsnr")
     tb = build_tables(SCHED, ts, tau=tau, predictor_order=3, corrector_order=3)
-    cfg = SASolverConfig(n_steps=48, predictor_order=3, corrector_order=3,
+    cfg = SASolverConfig(n_steps=32, predictor_order=3, corrector_order=3,
                          tau=tau, denoise_final=False)
     x0 = sa_sample(model, xT, jax.random.PRNGKey(4), tb, cfg)
     assert float(jnp.mean(x0)) == pytest.approx(0.8, abs=0.03)
@@ -81,7 +85,7 @@ def test_marginal_preservation_across_tau(tau):
 def test_kernel_combine_matches_einsum():
     # f32 reduction-order differences (einsum contraction vs the kernel's
     # sequential accumulate) compound over 10 steps: allow 1e-4
-    for (p, c, tau) in [(3, 0, 0.0), (3, 2, 0.7), (2, 3, 1.0)]:
+    for (p, c, tau) in [(3, 0, 0.0), (2, 3, 1.0)]:
         a = run(10, p, c, tau=tau, combine="einsum")
         b = run(10, p, c, tau=tau, combine="kernel")
         assert float(jnp.max(jnp.abs(a - b))) < 1e-4
@@ -95,7 +99,7 @@ def test_warmup_uses_low_order_start():
 
 
 def test_pece_mode_runs_and_improves_or_matches():
-    ref = run(640, 3, 3)
+    ref = run(320, 3, 3)
     pec = run(16, 2, 2, mode="PEC")
     pece = run(16, 2, 2, mode="PECE")
     e1 = float(jnp.mean(jnp.linalg.norm(pec - ref, axis=-1)))
@@ -122,7 +126,7 @@ def test_noise_prediction_parameterization_runs():
                          tau=0.0, parameterization="noise",
                          denoise_final=False)
     x = sa_sample(model_eps, XT, KEY, tb, cfg)
-    ref = run(640, 3, 3)
+    ref = run(320, 3, 3)
     err = float(jnp.mean(jnp.linalg.norm(x - ref, axis=-1)))
     assert err < 0.2  # converges to the same target
 

@@ -39,7 +39,7 @@ def test_gmm_score_matches_autodiff():
 
 def test_gmm_sampling_matches_moments():
     g = GMM.default_2d()
-    s = g.sample(jax.random.PRNGKey(0), 20000)
+    s = g.sample(jax.random.PRNGKey(0), 8192)
     np.testing.assert_allclose(np.asarray(jnp.mean(s, 0)), g.mean(),
                                atol=0.06)
     np.testing.assert_allclose(np.asarray(jnp.var(s, 0)), g.cov_diag(),
@@ -59,9 +59,9 @@ def test_perturbed_model_rms_magnitude():
 
 def test_metrics_sane():
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (2048, 3))
-    y = jax.random.normal(jax.random.PRNGKey(1), (2048, 3))
-    z = 2.0 + jax.random.normal(jax.random.PRNGKey(2), (2048, 3))
+    x = jax.random.normal(key, (1024, 3))
+    y = jax.random.normal(jax.random.PRNGKey(1), (1024, 3))
+    z = 2.0 + jax.random.normal(jax.random.PRNGKey(2), (1024, 3))
     assert sliced_w2(x, y, key) < sliced_w2(x, z, key)
     assert energy_distance(x, y) < energy_distance(x, z)
     assert gaussian_w2(x, np.zeros(3), np.ones(3)) < \
@@ -69,6 +69,7 @@ def test_metrics_sane():
 
 
 # -------------------------------------------------------------------- moe
+@pytest.mark.slow
 def test_moe_invariants():
     cfg = MoEConfig(n_experts=4, top_k=2, d_expert_ff=32, n_shared=1,
                     d_shared_ff=32)
@@ -83,6 +84,7 @@ def test_moe_invariants():
     assert all(bool(jnp.all(jnp.isfinite(v))) for v in jax.tree.leaves(g))
 
 
+@pytest.mark.slow
 def test_moe_capacity_drops_dont_nan():
     cfg = MoEConfig(n_experts=4, top_k=2, d_expert_ff=16,
                     capacity_factor=0.25)  # aggressive drops
@@ -94,6 +96,7 @@ def test_moe_capacity_drops_dont_nan():
 
 
 # ------------------------------------------------------ train -> sample
+@pytest.mark.slow
 def test_train_denoiser_then_sample_end_to_end():
     """~150 steps of denoiser training on a low-rank latent field; SA-Solver
     samples must get far closer (sliced W2) to the data than prior noise."""
