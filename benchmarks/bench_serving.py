@@ -1,0 +1,153 @@
+"""Serving throughput: requests/s and model-evals/s across bucket sizes
+and mesh shapes, plus the compile-cache contract the hot path depends on.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke
+    PYTHONPATH=src python benchmarks/bench_serving.py --devices 8
+
+Reports (CSV-ish tables, matching benchmarks/common.py style):
+
+- **bucket sweep** — one engine per bucket size, same request stream:
+  shows the pad-waste vs executable-count trade (small buckets pad less
+  but dispatch more; big buckets amortize dispatch but pad ragged tails).
+- **mesh sweep** (``--devices N`` with N > 1, fake host devices) — the
+  same stream served via ``sample_sharded`` with the request axis on
+  meshes of growing data-axis size.
+- **cache contract** (always; asserted under ``--smoke``) — after the
+  engine warms its buckets, a tau sweep must add ZERO compile-cache
+  misses and zero retraces: tau lives in the traced coefficient tables,
+  so re-planning cannot re-compile. This is the guard against silently
+  regressing to retrace-per-batch.
+
+``--devices`` must be handled before jax imports, so heavy imports live
+inside main().
+"""
+
+import argparse
+import os
+import time
+
+
+def _args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + assert the cache contract (CI)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="fake host devices (enables the mesh sweep)")
+    ap.add_argument("--arch", default="dit-s")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--nfe", type=int, default=None)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = _args(argv)
+    if args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core import get_schedule
+    from repro.core.samplers import (SamplerSpec, clear_compile_cache,
+                                     compile_cache_stats)
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.serve import build_denoiser_model_fn
+    from repro.serve import ServeEngine
+
+    try:
+        from .common import print_table  # python -m benchmarks.bench_serving
+    except ImportError:
+        from common import print_table  # python benchmarks/bench_serving.py
+
+    n_req = args.requests or (6 if args.smoke else 22)
+    seq = args.seq or (16 if args.smoke else 32)
+    nfe = args.nfe or (6 if args.smoke else 15)
+    cfg, model_fn = build_denoiser_model_fn(args.arch, 8, smoke=True)
+    schedule = get_schedule("vp_linear")
+    shape = (seq, cfg.denoiser_latent)
+    model_key = ("bench", cfg.name)
+
+    def spec_for(tau):
+        return SamplerSpec.from_nfe("sa", nfe, schedule=schedule,
+                                    predictor_order=3, corrector_order=1,
+                                    tau=tau)
+
+    def serve_stream(engine, taus=(0.6,)):
+        for i in range(n_req):
+            engine.submit(spec_for(taus[i % len(taus)]), shape)
+        t0 = time.perf_counter()
+        res = engine.run()
+        dt = time.perf_counter() - t0
+        assert len(res) == n_req
+        return dt
+
+    # ----------------------------------------------------- bucket sweep
+    rows = []
+    for bucket in (1, 2, 4, 8):
+        clear_compile_cache()
+        engine = ServeEngine(model_fn, bucket_sizes=(bucket,),
+                             model_key=model_key)
+        serve_stream(engine)          # cold: includes the bucket compile
+        cold = engine.stats()["padded_slots"]
+        warm_dt = serve_stream(engine)  # steady state
+        s = engine.stats()
+        rows.append([f"bucket={bucket}", n_req / warm_dt,
+                     n_req * nfe / warm_dt, s["padded_slots"] - cold,
+                     s["compile_cache"]["misses"]])
+    print_table(
+        f"bucket sweep ({n_req} requests, NFE={nfe}, arch={cfg.name}, "
+        "warm pass)",
+        ["bucket", "req/s", "model-evals/s", "padded", "compiles"], rows)
+
+    # ------------------------------------------------------- mesh sweep
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        rows = []
+        data_sizes = [d for d in (1, 2, 4, 8) if d <= n_dev]
+        for d in data_sizes:
+            clear_compile_cache()
+            mesh = make_test_mesh((d, 1), ("data", "model"))
+            engine = ServeEngine(model_fn, bucket_sizes=(8,), mesh=mesh,
+                                 model_key=model_key)
+            serve_stream(engine)
+            warm_dt = serve_stream(engine)
+            rows.append([f"data={d}", n_req / warm_dt,
+                         n_req * nfe / warm_dt,
+                         engine.stats()["compile_cache"]["misses"]])
+        print_table(
+            f"mesh sweep ({n_dev} fake host devices; request axis on "
+            "'data')",
+            ["mesh", "req/s", "model-evals/s", "compiles"], rows)
+    else:
+        print("\n(mesh sweep skipped: 1 device — rerun with --devices 8)")
+
+    # --------------------------------------------- cache contract (tau)
+    clear_compile_cache()
+    engine = ServeEngine(model_fn, bucket_sizes=(max(2, n_req // 3),),
+                         model_key=model_key)
+    serve_stream(engine)  # warm every bucket this stream uses
+    warmed = compile_cache_stats()
+    serve_stream(engine, taus=(0.2, 0.5, 0.8, 1.1, 1.4))
+    after = compile_cache_stats()
+    new_misses = after["misses"] - warmed["misses"]
+    print(f"\n### cache contract\nafter warmup: {warmed}\n"
+          f"after tau sweep: {after}\n"
+          f"new misses across tau sweep: {new_misses} "
+          f"({after['size']} live executables)")
+    if args.smoke:
+        assert new_misses == 0, (
+            f"tau sweep re-compiled ({new_misses} new misses) — the "
+            "serving hot path regressed to retrace-per-batch")
+        assert after["hits"] > warmed["hits"]
+        print("smoke OK: zero compile-cache misses after warmup")
+
+
+def run():
+    """benchmarks.run entry: smoke scale, cache contract asserted."""
+    main(["--smoke"])
+
+
+if __name__ == "__main__":
+    main()

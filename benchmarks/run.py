@@ -17,6 +17,7 @@ SECTIONS = [
     ("inaccurate_score", "Fig 4: inaccurate score"),
     ("kernels", "kernel micro-benchmarks"),
     ("solver_overhead", "solver bookkeeping overhead"),
+    ("serving", "serve engine: bucket throughput + compile-cache contract"),
 ]
 
 

@@ -1,64 +1,27 @@
-"""Batched diffusion serving on the plan/execute sampler registry:
-requests arrive with different prompts (conditioning latents), get
-micro-batched, and are sampled TOGETHER via ``sample_batched`` (one vmapped
-solver loop, one compilation per bucket) — the serving pattern the dry-run
-lowers at 512 devices.
+"""Thin client of ``repro.serve``: batched diffusion serving on the
+plan/execute sampler registry.
 
     PYTHONPATH=src python examples/serve_diffusion.py --requests 12 --nfe 15
 
-Demonstrates: runtime solver selection (--sampler picks any registry
-entry), request batching with ragged arrival, per-request RNG (fold_in by
-request id — no cross-request noise correlation), streamed intermediate
-previews (--stream: per-step denoised snapshots from the trajectory hook),
-and a backbone selected by --arch (any zoo member in denoiser mode).
+The engine does the heavy lifting (see ``repro/serve/__init__.py`` for the
+architecture): requests are bucketed by ``(SamplerSpec, shape)``, ragged
+tails are padded with *masked* lanes (no duplicate re-solves), each bucket
+is AOT-compiled once, per-request RNG is ``fold_in(seed, rid)``, and
+``--stream`` attaches per-step denoised previews from the trajectory hook.
+This client just builds a denoiser backbone, submits a mix of requests
+(two tau values — same compiled executor, different traced coefficient
+tables), and prints the engine's honest throughput: model-evals/s counts
+real requests only, padded lanes are reported separately.
 """
 
 import argparse
-import dataclasses
-import time
 
-import jax
 import jax.numpy as jnp
 
-from repro.configs import get_smoke
 from repro.core import get_schedule
-from repro.core.samplers import SamplerSpec, Sampler, list_samplers
-from repro.models import build_model, init_params
-
-
-class DiffusionServer:
-    """Plan once per sampler config; compile once per (batch, seq) bucket."""
-
-    def __init__(self, arch: str, sampler: str, nfe: int, tau: float,
-                 latent: int = 8, stream: bool = False):
-        cfg = get_smoke(arch)
-        if getattr(cfg, "denoiser_latent", None) is None:
-            cfg = dataclasses.replace(cfg, denoiser_latent=latent)
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = init_params(jax.random.PRNGKey(0),
-                                  self.model.param_defs(), jnp.float32)
-        self.sampler = Sampler(SamplerSpec.from_nfe(
-            sampler, nfe, schedule=get_schedule("vp_linear"),
-            predictor_order=3, corrector_order=1, tau=tau))
-        self.stream = stream
-        # sample_batched vmaps over requests, so the model_fn sees one
-        # request (seq, dz) at a time; the backbone wants a batch axis
-        self._model_fn = lambda x, t: self.model.denoise(
-            self.params, x[None], t)[0]
-
-    def serve_batch(self, request_ids, seq: int):
-        """One vmapped solve for the whole bucket, one RNG per request."""
-        rids = jnp.asarray(request_ids)
-        dz = self.cfg.denoiser_latent
-        noise_keys = jax.vmap(
-            lambda r: jax.random.fold_in(jax.random.PRNGKey(7), r))(rids)
-        xT = jax.vmap(
-            lambda k: self.sampler.init_noise(k, (seq, dz)))(noise_keys)
-        solve_keys = jax.vmap(
-            lambda r: jax.random.fold_in(jax.random.PRNGKey(8), r))(rids)
-        return self.sampler.sample_batched(
-            self._model_fn, xT, solve_keys, trajectory=self.stream)
+from repro.core.samplers import SamplerSpec, list_samplers
+from repro.launch.serve import build_denoiser_model_fn
+from repro.serve import ServeEngine
 
 
 def main():
@@ -66,42 +29,54 @@ def main():
     ap.add_argument("--arch", default="dit-s")
     ap.add_argument("--sampler", default="sa", choices=list_samplers())
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--bucket-sizes", type=lambda s: [int(b) for b in
+                    s.split(",")], default=[1, 2, 4])
     ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--latent", type=int, default=8)
     ap.add_argument("--nfe", type=int, default=15)
     ap.add_argument("--tau", type=float, default=0.6)
     ap.add_argument("--stream", action="store_true",
-                    help="also return per-step denoised previews")
+                    help="also stream per-step denoised previews")
     args = ap.parse_args()
 
-    server = DiffusionServer(args.arch, args.sampler, args.nfe, args.tau,
-                             stream=args.stream)
-    pending = list(range(args.requests))
-    done = 0
-    t0 = time.perf_counter()
-    while pending:
-        batch, pending = pending[:args.batch], pending[args.batch:]
-        while len(batch) < args.batch:      # pad the tail bucket
-            batch.append(batch[-1])
-        out = server.serve_batch(batch, args.seq)
-        if args.stream:
-            out, traj = out
-            previews = jax.block_until_ready(traj["x0"])
-            # stream: preview quality per step for the first request
-            steps = previews.shape[1]
-            stds = [float(jnp.std(previews[0, s])) for s in range(steps)]
-            print(f"  stream req {batch[0]}: x0-preview std per step "
-                  f"{['%.2f' % s for s in stds[:6]]}...")
-        out = jax.block_until_ready(out)
-        assert bool(jnp.all(jnp.isfinite(out)))
-        done += len(set(batch))
-        print(f"served batch {sorted(set(batch))}: out {out.shape}, "
-              f"std={float(jnp.std(out)):.3f}")
-    dt = time.perf_counter() - t0
-    print(f"\n{done} requests in {dt:.2f}s "
-          f"({done * server.sampler.nfe / dt:.1f} model-evals/s, "
-          f"NFE={server.sampler.nfe}, sampler={args.sampler}, "
-          f"arch={server.cfg.name})")
+    cfg, model_fn = build_denoiser_model_fn(args.arch, args.latent,
+                                            smoke=True)
+
+    def on_result(res):
+        line = f"served rid {res.rid}: x0 {res.x0.shape}, " \
+               f"std={float(jnp.std(res.x0)):.3f}"
+        if res.previews is not None:
+            stds = ["%.2f" % float(jnp.std(p)) for p in res.previews[:6]]
+            line += f", x0-preview std per step {stds}..."
+        print(line)
+
+    engine = ServeEngine(model_fn, bucket_sizes=tuple(args.bucket_sizes),
+                         stream=args.stream, on_result=on_result,
+                         model_key=("denoiser", cfg.name))
+
+    schedule = get_schedule("vp_linear")
+    shape = (args.seq, cfg.denoiser_latent)
+    for i in range(args.requests):
+        # alternate tau: same bucket statics, different traced tables —
+        # the engine still compiles each bucket size exactly once
+        tau = args.tau if i % 2 == 0 else min(1.0, args.tau + 0.4)
+        engine.submit(SamplerSpec.from_nfe(
+            args.sampler, args.nfe, schedule=schedule, predictor_order=3,
+            corrector_order=1, tau=tau), shape)
+
+    results = engine.run()
+    assert len(results) == args.requests
+    assert all(bool(jnp.all(jnp.isfinite(r.x0))) for r in results)
+
+    s = engine.stats()
+    print(f"\n{s['requests']} requests in {s['serve_s']:.2f}s over "
+          f"{s['microbatches']} microbatches "
+          f"({s['padded_slots']} padded lanes — masked, never counted)")
+    print(f"{s['requests_per_s']:.2f} requests/s, "
+          f"{s['model_evals_per_s']:.1f} model-evals/s "
+          f"(NFE x real requests; sampler={args.sampler}, "
+          f"arch={cfg.name})")
+    print("compile cache:", s["compile_cache"])
 
 
 if __name__ == "__main__":

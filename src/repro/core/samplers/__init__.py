@@ -26,6 +26,8 @@ from .base import (
     register_sampler,
     sample,
     sample_batched,
+    sample_sharded,
+    warmup,
 )
 
 # importing the family modules registers them
@@ -47,5 +49,7 @@ __all__ = [
     "register_sampler",
     "sample",
     "sample_batched",
+    "sample_sharded",
     "tables_to_arrays",
+    "warmup",
 ]

@@ -13,14 +13,22 @@ configure, compile-cache, and swap solvers at runtime without code changes:
    once and packages it as a :class:`SamplerPlan` whose ``arrays`` dict is
    a device-ready pytree of f32 ``jnp`` arrays. Plans are cached by spec.
 3. **Execute** — :func:`sample` looks up a pure jitted executor in an LRU
-   compile cache keyed on (family statics, shape, dtype, model_fn
-   identity) and runs it with ``plan.arrays`` passed as *traced arguments*
-   — so re-planning with a different tau / grid / coefficient table reuses
-   the compiled step loop, only a different step count retraces.
-   :func:`sample_batched` vmaps the executor over a leading key axis for
-   fleet-style generation; ``trajectory=True`` additionally returns the
-   per-step state and denoised previews (stacked ``lax.scan`` outputs) so
-   serving can stream intermediates.
+   compile cache keyed on (family statics, shape, dtype, model identity,
+   batch lane count, mesh/sharding identity) and runs it with
+   ``plan.arrays`` passed as *traced arguments* — so re-planning with a
+   different tau / grid / coefficient table reuses the compiled step
+   loop, only a different step count retraces. The model identity is a
+   *weakref* (or a caller-stable ``model_key``): the cache never pins
+   model parameters, and executors are evicted when their model is
+   garbage-collected. :func:`sample_batched` vmaps the executor over a
+   leading key axis for fleet-style generation; :func:`sample_sharded`
+   additionally places that request axis on the ``data`` axis of a mesh
+   (replicated plan arrays, donated carry); :func:`warmup` AOT-compiles
+   one batch bucket (``jit(...).lower().compile()``) so a serving hot
+   path never traces. ``trajectory=True`` returns the per-step state and
+   denoised previews (stacked ``lax.scan`` outputs) so serving can
+   stream intermediates. ``repro.serve`` builds the request
+   queue/microbatching service on these four entry points.
 
 Registering a new sampler::
 
@@ -37,12 +45,15 @@ Registering a new sampler::
 from __future__ import annotations
 
 import dataclasses
+import types
+import weakref
 from collections import OrderedDict
-from typing import Any, Callable
+from typing import Any, Callable, Hashable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..schedules import NoiseSchedule, get_schedule, timestep_grid
 from ..tau import TauSchedule
@@ -59,6 +70,8 @@ __all__ = [
     "build_plan",
     "sample",
     "sample_batched",
+    "sample_sharded",
+    "warmup",
     "compile_cache_stats",
     "clear_compile_cache",
 ]
@@ -230,7 +243,8 @@ def build_plan(spec: SamplerSpec) -> SamplerPlan:
 # ------------------------------------------------------------ compile cache
 _COMPILE_CACHE: OrderedDict = OrderedDict()
 _COMPILE_CACHE_MAX = 64
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0, "aot_fallbacks": 0}
+_MODEL_TOKEN_IDX = 4  # position of the model token inside a cache key
 
 
 def compile_cache_stats() -> dict:
@@ -239,66 +253,252 @@ def compile_cache_stats() -> dict:
 
 def clear_compile_cache() -> None:
     _COMPILE_CACHE.clear()
-    _CACHE_STATS["hits"] = 0
-    _CACHE_STATS["misses"] = 0
+    for k in _CACHE_STATS:
+        _CACHE_STATS[k] = 0
+
+
+class _CacheEntry:
+    """One compiled executor: the jitted wrapper, an optional AOT-compiled
+    executable (``warmup``), and a weak cell holding the model_fn used for
+    (re)tracing — weak so the cache never pins model parameters."""
+
+    __slots__ = ("fn", "cell", "aot")
+
+    def __init__(self, fn, cell):
+        self.fn = fn
+        self.cell = cell
+        self.aot = None
+
+
+def _weak(model_fn, callback=None):
+    """A weak ref to ``model_fn`` for the trace cell (None if not
+    weakrefable). Bound methods get :class:`weakref.WeakMethod` — a plain
+    ref to the transient method object would die immediately."""
+    try:
+        if isinstance(model_fn, types.MethodType):
+            return weakref.WeakMethod(model_fn, callback)
+        return weakref.ref(model_fn, callback)
+    except TypeError:
+        return None
+
+
+class _WeakIdToken:
+    """Weak *identity* of a model for the cache key.
+
+    Hashes by ``id`` and compares equal only to tokens of the same live
+    object — so unhashable callables work, value-equal but distinct
+    models never share an executor, and the token holds no strong
+    reference. A dead token equals nothing (and its entry is evicted by
+    the death callback before the id can be recycled under a live key).
+    """
+
+    __slots__ = ("ref", "oid")
+
+    def __init__(self, obj, callback=None):
+        self.ref = weakref.ref(obj, callback)
+        self.oid = id(obj)
+
+    def __hash__(self):
+        return self.oid
+
+    def __eq__(self, other):
+        if not isinstance(other, _WeakIdToken):
+            return NotImplemented
+        a = self.ref()
+        return a is not None and a is other.ref()
+
+
+def _model_token(model_fn, callback=None):
+    """Weak identity token for the cache key; None -> strong fallback.
+
+    Bound methods go through :class:`weakref.WeakMethod` (equality by
+    instance + function, surviving the transient method object); other
+    callables get a :class:`_WeakIdToken`.
+    """
+    if isinstance(model_fn, types.MethodType):
+        try:
+            tok = weakref.WeakMethod(model_fn, callback)
+            hash(tok)  # hashes the method -> needs a hashable instance
+            return tok
+        except TypeError:
+            return None
+    try:
+        return _WeakIdToken(model_fn, callback)
+    except TypeError:
+        return None
+
+
+def _token_matches(token, ref) -> bool:
+    if token is ref:  # WeakMethod
+        return True
+    return isinstance(token, _WeakIdToken) and token.ref is ref
+
+
+def _on_model_death(ref) -> None:
+    """Weakref callback: the model behind ``ref`` was garbage-collected, so
+    its executors (whose traced constants pin the model's param buffers)
+    are dead weight — evict them eagerly."""
+    for key in [k for k in _COMPILE_CACHE
+                if _token_matches(k[_MODEL_TOKEN_IDX], ref)]:
+        if _COMPILE_CACHE.pop(key, None) is not None:
+            _CACHE_STATS["evictions"] += 1
+
+
+def _deref_model(cell):
+    m = cell[0]
+    if isinstance(m, weakref.ref):
+        m = m()
+    if m is None:
+        raise RuntimeError(
+            "the model_fn behind this cached executor was garbage-"
+            "collected; call sample()/sample_batched() with a live "
+            "model_fn (or pass model_key= to share executors across "
+            "model_fn instances)")
+    return m
+
+
+def _mesh_ident(mesh: Mesh | None, data_axis: str):
+    """Hashable identity of a mesh placement — part of the compile-cache
+    key so sharded and unsharded executables never collide, and two
+    meshes over different devices/axis layouts don't either."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.shape.items()),
+            tuple(int(d.id) for d in mesh.devices.flat),
+            data_axis)
 
 
 def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
-              trajectory: bool, batched: bool):
+              trajectory: bool, batch: int | None, *,
+              model_key: Hashable | None = None,
+              mesh: Mesh | None = None, data_axis: str = "data",
+              donate: bool = False) -> _CacheEntry:
     """LRU-cached jitted executor.
 
-    Keyed on (family name, executor statics, shape, dtype, model_fn
-    identity, trajectory, batched). ``plan.arrays`` are traced arguments,
-    so two plans of the same family/statics (different tau, grid, or
-    coefficient values at the same step count) share one compilation; a
-    different step count changes argument shapes and retraces inside the
-    same entry via ``jax.jit``'s own cache.
+    Keyed on (family name, executor statics, per-request shape, dtype,
+    model token, trajectory, batch lane count (None = unbatched),
+    mesh/sharding identity). The lane count is part of the key — not left
+    to ``jax.jit``'s per-aval cache — so every serving bucket owns its
+    entry and its AOT executable (``warmup``) can never be shadowed by a
+    different bucket size. The model token is a
+    caller-supplied stable ``model_key`` when given, else a *weakref*
+    identity of ``model_fn`` — the cache holds no strong reference to the
+    model (closures over full param trees would otherwise pin up to
+    ``_COMPILE_CACHE_MAX`` param copies), and entries are evicted eagerly
+    when their model is garbage-collected.
+
+    ``plan.arrays`` are traced arguments, so two plans of the same
+    family/statics (different tau, grid, or coefficient values at the same
+    step count) share one compilation; a different step count changes
+    argument shapes and retraces inside the same entry via ``jax.jit``'s
+    own cache.
     """
+    cell_ref = _weak(model_fn)
+    if model_key is not None:
+        token = ("user", model_key)
+    else:
+        token = _model_token(model_fn)
+        if token is None:
+            # not weakly keyable: fall back to identity + a strong ref in
+            # the cell, which pins the object so its id cannot recycle
+            # (old behaviour; rare — functions/closures/methods/partials
+            # are all weakly keyable)
+            token = ("strong", id(model_fn))
+            cell_ref = None
     key = (plan.spec.name, plan.statics, tuple(shape),
-           jnp.dtype(dtype).name, id(model_fn), trajectory, batched)
+           jnp.dtype(dtype).name, token, trajectory, batch,
+           _mesh_ident(mesh, data_axis), bool(donate))
     entry = _COMPILE_CACHE.get(key)
     if entry is not None:
         _COMPILE_CACHE.move_to_end(key)
         _CACHE_STATS["hits"] += 1
-        return entry[0]
+        # refresh a weak cell so retraces (and user-keyed entries handed a
+        # new functionally-equal model_fn) trace the live object; strong
+        # cells stay pinned (their id backs the cache key)
+        if isinstance(entry.cell[0], weakref.ref):
+            entry.cell[0] = cell_ref if cell_ref is not None else model_fn
+        return entry
     _CACHE_STATS["misses"] += 1
     family = get_family(plan.spec.name)
     statics = plan.statics
 
-    if batched:
+    if model_key is None and not isinstance(token, tuple):
+        # storage token: equal/same-hash as the lookup token while the
+        # model lives, plus an eviction callback when it dies
+        token = _model_token(model_fn, _on_model_death)
+        key = key[:_MODEL_TOKEN_IDX] + (token,) + key[_MODEL_TOKEN_IDX + 1:]
+
+    cell = [cell_ref if cell_ref is not None else model_fn]
+
+    if batch is not None:
         def run(arrays, xs, keys):
+            m = _deref_model(cell)
             return jax.vmap(
                 lambda x, k: family.execute(
-                    statics, arrays, model_fn, x, k, trajectory)
+                    statics, arrays, m, x, k, trajectory)
             )(xs, keys)
     else:
         def run(arrays, x, k):
-            return family.execute(statics, arrays, model_fn, x, k, trajectory)
+            return family.execute(
+                statics, arrays, _deref_model(cell), x, k, trajectory)
 
-    fn = jax.jit(run)
-    # keep model_fn alive so its id cannot be recycled under this entry
-    _COMPILE_CACHE[key] = (fn, model_fn)
+    jit_kw: dict = {}
+    if mesh is not None:
+        rep = NamedSharding(mesh, P())
+        jit_kw["in_shardings"] = (
+            rep,  # plan arrays: replicated (prefix over the whole pytree)
+            NamedSharding(mesh, P(data_axis, *([None] * len(shape)))),
+            NamedSharding(mesh, P(data_axis)),
+        )
+        if donate:
+            jit_kw["donate_argnums"] = (1,)  # the x_T carry buffer
+    entry = _CacheEntry(jax.jit(run, **jit_kw), cell)
+    _COMPILE_CACHE[key] = entry
     while len(_COMPILE_CACHE) > _COMPILE_CACHE_MAX:
         _COMPILE_CACHE.popitem(last=False)
-    return fn
+    return entry
+
+
+def _call(entry: _CacheEntry, arrays, x, k):
+    if entry.aot is not None:
+        try:
+            return entry.aot(arrays, x, k)
+        except TypeError:
+            # aval mismatch vs the warmed bucket (e.g. a re-planned step
+            # count changed the coefficient-table shapes, or a typed key
+            # array): fall back to the jit wrapper, which retraces within
+            # this entry; counted so the degradation is observable
+            _CACHE_STATS["aot_fallbacks"] += 1
+    return entry.fn(arrays, x, k)
+
+
+def _default_donate() -> bool:
+    # donation is a no-op (with a log warning) on the CPU backend
+    return jax.default_backend() in ("tpu", "gpu")
 
 
 # -------------------------------------------------------------- entrypoints
 def sample(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
-           key: jax.Array, *, trajectory: bool = False):
+           key: jax.Array, *, trajectory: bool = False,
+           model_key: Hashable | None = None):
     """Run one sampler end-to-end: ``x_T -> x_0``.
 
     With ``trajectory=True`` returns ``(x_0, traj)`` where ``traj`` is a
     dict of per-step stacked outputs — ``traj["x"]`` the state after each
     step and ``traj["x0"]`` the step's denoised preview, both
-    ``[n_steps, *x_T.shape]`` — for streaming/debugging.
+    ``[n_steps, *x_T.shape]`` — for streaming/debugging. ``model_key``
+    optionally replaces the weakref model identity in the compile-cache
+    key with a caller-stable token (so re-created but functionally equal
+    model closures share one executor).
     """
-    fn = _compiled(plan, model_fn, x_T.shape, x_T.dtype, trajectory, False)
-    return fn(plan.arrays, x_T, key)
+    entry = _compiled(plan, model_fn, x_T.shape, x_T.dtype, trajectory,
+                      None, model_key=model_key)
+    return _call(entry, plan.arrays, x_T, key)
 
 
 def sample_batched(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
-                   keys: jax.Array, *, trajectory: bool = False):
+                   keys: jax.Array, *, trajectory: bool = False,
+                   model_key: Hashable | None = None):
     """Fleet-style generation: vmap the executor over a leading key axis.
 
     ``keys`` is a stacked PRNG-key array ``[K, ...]`` and ``x_T`` carries a
@@ -308,8 +508,80 @@ def sample_batched(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
         raise ValueError(
             f"leading axes must match: x_T {x_T.shape[0]} vs keys "
             f"{keys.shape[0]}")
-    fn = _compiled(plan, model_fn, x_T.shape[1:], x_T.dtype, trajectory, True)
-    return fn(plan.arrays, x_T, keys)
+    entry = _compiled(plan, model_fn, x_T.shape[1:], x_T.dtype, trajectory,
+                      int(x_T.shape[0]), model_key=model_key)
+    return _call(entry, plan.arrays, x_T, keys)
+
+
+def sample_sharded(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
+                   keys: jax.Array, *, mesh: Mesh, data_axis: str = "data",
+                   trajectory: bool = False,
+                   model_key: Hashable | None = None,
+                   donate: bool | None = None):
+    """``sample_batched`` with the leading request axis placed on the
+    ``data`` axis of ``mesh``.
+
+    Inputs get :class:`NamedSharding` placements (requests split over
+    ``data_axis``, plan arrays replicated); the ``x_T`` carry buffer is
+    donated (``donate_argnums``) on backends that implement donation.
+    The compile-cache key carries the mesh/sharding identity, so sharded
+    and unsharded executables for the same bucket never collide.
+    """
+    if x_T.shape[0] != keys.shape[0]:
+        raise ValueError(
+            f"leading axes must match: x_T {x_T.shape[0]} vs keys "
+            f"{keys.shape[0]}")
+    if data_axis not in mesh.shape:
+        raise ValueError(
+            f"mesh has no axis {data_axis!r}; axes: {tuple(mesh.shape)}")
+    n_data = mesh.shape[data_axis]
+    if x_T.shape[0] % n_data:
+        raise ValueError(
+            f"request batch {x_T.shape[0]} is not divisible by mesh axis "
+            f"{data_axis!r} (size {n_data}); pad the bucket first "
+            "(repro.serve.sharding.align_bucket_sizes)")
+    donate = _default_donate() if donate is None else donate
+    entry = _compiled(plan, model_fn, x_T.shape[1:], x_T.dtype, trajectory,
+                      int(x_T.shape[0]), model_key=model_key, mesh=mesh,
+                      data_axis=data_axis, donate=donate)
+    return _call(entry, plan.arrays, x_T, keys)
+
+
+def warmup(plan: SamplerPlan, model_fn: ModelFn, shape, dtype=jnp.float32,
+           *, batch: int | None = None, mesh: Mesh | None = None,
+           data_axis: str = "data", trajectory: bool = False,
+           model_key: Hashable | None = None,
+           donate: bool | None = None):
+    """AOT-compile one bucket: ``jit(run).lower(...).compile()``.
+
+    ``shape`` is the per-request latent shape; ``batch`` the bucket size
+    (None = the unbatched executor). The compiled executable is stored on
+    the bucket's compile-cache entry, so subsequent ``sample_batched`` /
+    ``sample_sharded`` calls for the same bucket dispatch straight to it —
+    no tracing on the serving hot path. Idempotent per bucket; returns the
+    executable.
+    """
+    if mesh is not None:
+        donate = _default_donate() if donate is None else donate
+    entry = _compiled(plan, model_fn, tuple(shape), dtype, trajectory,
+                      batch, model_key=model_key, mesh=mesh,
+                      data_axis=data_axis, donate=bool(donate))
+    if entry.aot is None:
+        arrays_s = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), plan.arrays)
+        # key aval follows the configured PRNG impl (threefry: (2,) u32,
+        # rbg: (4,) u32) — hardcoding would silently strand the AOT
+        # executable behind _call's jit fallback
+        proto = jax.random.PRNGKey(0)
+        if batch is not None:
+            x_s = jax.ShapeDtypeStruct((batch,) + tuple(shape),
+                                       jnp.dtype(dtype))
+            k_s = jax.ShapeDtypeStruct((batch,) + proto.shape, proto.dtype)
+        else:
+            x_s = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+            k_s = jax.ShapeDtypeStruct(proto.shape, proto.dtype)
+        entry.aot = entry.fn.lower(arrays_s, x_s, k_s).compile()
+    return entry.aot
 
 
 # ------------------------------------------------------------ bound sampler
@@ -330,13 +602,25 @@ class Sampler:
         return self.spec.nfe
 
     def sample(self, model_fn: ModelFn, x_T: jnp.ndarray, key: jax.Array,
-               *, trajectory: bool = False):
-        return sample(self.plan, model_fn, x_T, key, trajectory=trajectory)
+               *, trajectory: bool = False,
+               model_key: Hashable | None = None):
+        return sample(self.plan, model_fn, x_T, key, trajectory=trajectory,
+                      model_key=model_key)
 
     def sample_batched(self, model_fn: ModelFn, x_T: jnp.ndarray,
-                       keys: jax.Array, *, trajectory: bool = False):
+                       keys: jax.Array, *, trajectory: bool = False,
+                       model_key: Hashable | None = None):
         return sample_batched(self.plan, model_fn, x_T, keys,
-                              trajectory=trajectory)
+                              trajectory=trajectory, model_key=model_key)
+
+    def sample_sharded(self, model_fn: ModelFn, x_T: jnp.ndarray,
+                       keys: jax.Array, *, mesh: Mesh,
+                       data_axis: str = "data", trajectory: bool = False,
+                       model_key: Hashable | None = None,
+                       donate: bool | None = None):
+        return sample_sharded(self.plan, model_fn, x_T, keys, mesh=mesh,
+                              data_axis=data_axis, trajectory=trajectory,
+                              model_key=model_key, donate=donate)
 
     def init_noise(self, key: jax.Array, shape, dtype=jnp.float32):
         scale = self.schedule.prior_scale(float(self.plan.ts[0]))

@@ -29,7 +29,7 @@ def on_tpu() -> bool:
 def sa_update(x, buf, xi, coeffs, *, mode: str = "auto"):
     if mode == "jnp" or (mode == "auto" and not on_tpu()):
         return ref.sa_update_ref(x, buf, xi, coeffs[0], coeffs[1], coeffs[2:])
-    return _sa_kernel(x, buf, xi, coeffs, interpret=not on_tpu())
+    return _sa_kernel(x, buf, xi, coeffs)  # interpret auto-detects backend
 
 
 def flash_attention(q, k, v, *, causal: bool = True, mode: str = "auto",

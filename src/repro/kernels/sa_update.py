@@ -43,13 +43,16 @@ def _kernel(coeff_ref, x_ref, buf_ref, xi_ref, out_ref, *, P: int):
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def sa_update(x, buf, xi, coeffs, *, tile: int = DEFAULT_TILE,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """x [*shape]; buf [P, *shape]; xi [*shape]; coeffs [P+2] f32
     (decay, noise, b_0..b_{P-1}). Returns x' with x.dtype.
 
-    ``interpret=True`` runs the kernel body in Python on CPU (correctness
-    path for this container); on TPU pass interpret=False.
+    ``interpret=None`` (default) auto-detects from the backend: compiled
+    Mosaic on TPU, Python interpreter everywhere else (the correctness
+    path for CPU containers). Pass an explicit bool to override.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     shape = x.shape
     P = buf.shape[0]
     n = x.size

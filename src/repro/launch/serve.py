@@ -1,15 +1,26 @@
-"""Serving driver: batched prefill + decode with a KV/state cache.
+"""Serving dispatcher: one driver for both serving workloads.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+    # LM serving (batched prefill + decode against a KV/state cache):
+    PYTHONPATH=src python -m repro.launch.serve --mode lm \
+        --arch rwkv6-3b --smoke --batch 4 --prompt-len 32 --gen 16
 
-Runs a real (reduced-config on CPU) serving loop: prefill the prompt
-batch, then greedy-decode tokens one step at a time against the cache.
-The same ``prefill``/``decode_step`` functions are what the dry-run lowers
-at full scale.
+    # Diffusion serving (the repro.serve engine: plan-keyed microbatching,
+    # AOT-warmed buckets, optional mesh sharding + preview streaming):
+    PYTHONPATH=src python -m repro.launch.serve --mode diffusion \
+        --arch dit-s --sampler sa --requests 12 --nfe 15 --tau 0.6 --stream
+
+``--mode lm`` runs a real (reduced-config on CPU) decode loop: prefill
+the prompt batch, then greedy-decode tokens one step at a time against
+the cache — the same ``prefill``/``decode_step`` functions the dry-run
+lowers at full scale. ``--mode diffusion`` drives
+:class:`repro.serve.ServeEngine` over any registered sampler; with
+``--sharded`` the request axis rides the ``data`` axis of a mesh over all
+visible devices (run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to try it on CPU).
 """
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -19,18 +30,11 @@ from ..configs import get_config, get_smoke
 from ..models import build_model, init_params
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="starcoder2-3b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args()
-
+def serve_lm(args) -> None:
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
-    params = init_params(jax.random.PRNGKey(0), model.param_defs(), jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), model.param_defs(),
+                         jnp.float32)
 
     B, S = args.batch, args.prompt_len
     s_max = S + args.gen
@@ -39,7 +43,8 @@ def main():
     if embeds_mode:
         batch = {"embeds": jax.random.normal(key, (B, S, cfg.d_model))}
     else:
-        batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+        batch = {"tokens": jax.random.randint(key, (B, S), 0,
+                                              cfg.vocab_size)}
 
     cache = model.init_cache(B, s_max)
     prefill = jax.jit(model.prefill)
@@ -64,8 +69,105 @@ def main():
     toks = jax.block_until_ready(jnp.concatenate(out, axis=1))
     t2 = time.perf_counter()
     print(f"arch={cfg.name} prefill {S} toks x{B}: {t1-t0:.3f}s; "
-          f"decode {args.gen} steps: {(t2-t1)/max(args.gen-1,1)*1e3:.1f} ms/tok")
+          f"decode {args.gen} steps: "
+          f"{(t2-t1)/max(args.gen-1,1)*1e3:.1f} ms/tok")
     print("sample token ids:", toks[0][:12].tolist())
+
+
+def build_denoiser_model_fn(arch: str, latent: int | None, smoke: bool):
+    """(cfg, per-request model_fn) for any zoo member in denoiser mode.
+
+    The engine's executors vmap over the request axis, so the returned
+    closure sees one request ``(seq, dz)`` at a time and re-adds the
+    backbone's batch axis.
+    """
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    if getattr(cfg, "denoiser_latent", None) is None:
+        cfg = dataclasses.replace(cfg, denoiser_latent=latent or 8)
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_defs(),
+                         jnp.float32)
+    return cfg, lambda x, t: model.denoise(params, x[None], t)[0]
+
+
+def serve_diffusion(args) -> None:
+    from ..core import get_schedule
+    from ..core.samplers import SamplerSpec
+    from ..serve import ServeEngine, auto_mesh
+
+    cfg, model_fn = build_denoiser_model_fn(args.arch, args.latent,
+                                            smoke=True)
+    mesh = auto_mesh() if args.sharded else None
+    if args.sharded and mesh is None:
+        print("--sharded: only one device visible, falling back to the "
+              "unsharded path (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8 to fake a mesh)")
+
+    def show(res):
+        if res.previews is not None:
+            stds = [float(jnp.std(p)) for p in res.previews[:6]]
+            print(f"  stream rid {res.rid}: x0-preview std per step "
+                  f"{['%.2f' % s for s in stds]}...")
+
+    engine = ServeEngine(
+        model_fn, bucket_sizes=tuple(args.bucket_sizes), mesh=mesh,
+        stream=args.stream, on_result=show if args.stream else None,
+        model_key=("denoiser", cfg.name))
+    spec = SamplerSpec.from_nfe(
+        args.sampler, args.nfe, schedule=get_schedule("vp_linear"),
+        predictor_order=3, corrector_order=1, tau=args.tau)
+    shape = (args.seq, cfg.denoiser_latent)
+    for _ in range(args.requests):
+        engine.submit(spec, shape)
+
+    results = engine.run()
+    assert len(results) == args.requests
+    for res in results:
+        assert bool(jnp.all(jnp.isfinite(res.x0)))
+    s = engine.stats()
+    mesh_desc = "none" if mesh is None else dict(mesh.shape)
+    print(f"\nserved {s['requests']} requests in {s['serve_s']:.2f}s over "
+          f"{s['microbatches']} microbatches ({s['padded_slots']} padded "
+          f"lanes, {s['warmups']} bucket compiles, mesh={mesh_desc})")
+    print(f"{s['requests_per_s']:.2f} requests/s, "
+          f"{s['model_evals_per_s']:.1f} model-evals/s "
+          f"(NFE={spec.nfe} x real requests only; sampler={args.sampler}, "
+          f"arch={cfg.name})")
+    print("compile cache:", s["compile_cache"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", default="lm", choices=["lm", "diffusion"])
+    ap.add_argument("--arch", default=None,
+                    help="zoo member (default: starcoder2-3b for lm, "
+                    "dit-s for diffusion)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    # lm
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    # diffusion
+    ap.add_argument("--sampler", default="sa")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--latent", type=int, default=None)
+    ap.add_argument("--nfe", type=int, default=15)
+    ap.add_argument("--tau", type=float, default=0.6)
+    ap.add_argument("--bucket-sizes", type=lambda s: [int(b) for b in
+                    s.split(",")], default=[1, 2, 4, 8],
+                    help="comma-separated microbatch lane counts")
+    ap.add_argument("--stream", action="store_true",
+                    help="stream per-step denoised previews")
+    ap.add_argument("--sharded", action="store_true",
+                    help="place the request axis on a mesh data axis")
+    args = ap.parse_args()
+    if args.arch is None:
+        args.arch = "starcoder2-3b" if args.mode == "lm" else "dit-s"
+    if args.mode == "lm":
+        serve_lm(args)
+    else:
+        serve_diffusion(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,139 @@
+"""Plan-keyed continuous microbatching for the diffusion serve engine.
+
+Requests are grouped by **bucket key** — ``(SamplerSpec, latent shape,
+dtype)`` — because that tuple determines the compiled executor: the spec
+fixes the sampler family and its trace-relevant statics, the shape/dtype
+fix the argument avals. Everything else (tau value, coefficient tables,
+the solve grid values) is traced data, so requests that differ only in
+those ride the same executable.
+
+Within a bucket-key group, requests are chunked FIFO into microbatches of
+at most ``max(bucket_sizes)``; a ragged tail takes the *smallest*
+configured bucket that fits it and is padded with masked dummy slots
+(``PAD_RID``) — never by duplicating a real request, which would re-solve
+it and corrupt throughput accounting. Padded lanes are computed (static
+batch shapes are what make the compile cache work) but their outputs are
+dropped when results are scattered back to requests.
+
+Per-request RNG is derived purely from the request id —
+``fold_in(base, rid)`` — so a request's noise draw and solve path are
+independent of which microbatch it lands in. Within one bucket *size*
+(one executable) re-bucketing — different arrival order, neighbours, or
+pad count — cannot change a request's bytes (vmap lanes are independent);
+across different bucket sizes the executables differ and results agree
+only to float-reassociation level (~1e-5 relative).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.samplers import SamplerSpec
+
+__all__ = [
+    "PAD_RID",
+    "Request",
+    "MicroBatch",
+    "bucket_key",
+    "choose_bucket",
+    "form_microbatches",
+    "fold_keys",
+]
+
+#: rid assigned to padded lanes; int32-max so it cannot collide with real
+#: engine-assigned ids (which count up from 0)
+PAD_RID = 2**31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One sampling request: which sampler configuration, what latent."""
+
+    rid: int
+    spec: SamplerSpec
+    shape: tuple[int, ...]
+    dtype: str = "float32"
+
+
+def bucket_key(req: Request) -> tuple:
+    """The executor identity this request compiles under."""
+    return (req.spec, req.shape, req.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MicroBatch:
+    """A bucket's worth of work: ``size`` lanes, ``requests`` real ones."""
+
+    key: tuple
+    requests: tuple[Request, ...]
+    size: int  # padded lane count (a configured bucket size)
+
+    @property
+    def n_padded(self) -> int:
+        return self.size - len(self.requests)
+
+    @property
+    def spec(self) -> SamplerSpec:
+        return self.key[0]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.key[1]
+
+    @property
+    def dtype(self) -> str:
+        return self.key[2]
+
+    def rids(self) -> list[int]:
+        """Lane rids including pad slots."""
+        return [r.rid for r in self.requests] \
+            + [PAD_RID] * (self.size - len(self.requests))
+
+
+def choose_bucket(n: int, bucket_sizes: Sequence[int]) -> int:
+    """Smallest configured bucket that fits ``n`` lanes (the largest
+    bucket if none does — callers chunk to ``max(bucket_sizes)`` first)."""
+    if n < 1:
+        raise ValueError("empty microbatch")
+    for b in sorted(bucket_sizes):
+        if b >= n:
+            return b
+    return max(bucket_sizes)
+
+
+def form_microbatches(requests: Sequence[Request],
+                      bucket_sizes: Sequence[int]) -> list[MicroBatch]:
+    """Group FIFO by bucket key, chunk to the largest bucket, size tails.
+
+    Returns microbatches in first-arrival order of their bucket key, so a
+    drain loop serves oldest work first.
+    """
+    if not bucket_sizes:
+        raise ValueError("need at least one bucket size")
+    cap = max(bucket_sizes)
+    groups: OrderedDict[tuple, list[Request]] = OrderedDict()
+    for r in requests:
+        groups.setdefault(bucket_key(r), []).append(r)
+    out = []
+    for key, group in groups.items():
+        for i in range(0, len(group), cap):
+            chunk = tuple(group[i:i + cap])
+            out.append(MicroBatch(key=key, requests=chunk,
+                                  size=choose_bucket(len(chunk),
+                                                     bucket_sizes)))
+    return out
+
+
+def fold_keys(base_key: jax.Array, rids) -> jax.Array:
+    """``[n, 2]`` per-lane PRNG keys: ``fold_in(base, rid)`` per lane.
+
+    Pure in the rid — the same rid always yields the same key, whatever
+    bucket (or pad position) it is served in.
+    """
+    rids = jnp.asarray(rids, dtype=jnp.int32)
+    return jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids)

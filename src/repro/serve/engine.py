@@ -1,0 +1,227 @@
+"""The diffusion serve engine: queue -> microbatch -> compiled solve.
+
+One :class:`ServeEngine` owns one model (``model_fn``), a FIFO request
+queue, and the serving loop:
+
+- ``submit()`` enqueues a request: any registered :class:`SamplerSpec`
+  (sampler family, NFE, tau, ...) plus a latent shape. Requests with
+  different specs/shapes coexist in the queue; the engine groups them by
+  ``(spec, shape, dtype)`` bucket (see :mod:`repro.serve.batching`).
+- ``step()`` serves the oldest bucket as one microbatch: ragged tails are
+  padded with *masked* dummy lanes (never duplicated requests), each lane
+  draws its initial noise and solve path from ``fold_in(seed, rid)`` so
+  results are independent of bucketing, and the whole batch runs through
+  one compiled executor — ``sample_sharded`` (requests on the mesh
+  ``data`` axis, donated carry) when a mesh is configured, else
+  ``sample_batched``.
+- the first encounter of a bucket AOT-warms it:
+  ``jit(run).lower(...).compile()`` via ``repro.core.samplers.warmup`` —
+  after that the hot path never traces (``compile_cache_stats()`` shows
+  zero misses across tau sweeps, since tau is traced data).
+- ``stream=True`` threads the trajectory hook through: each
+  :class:`ServeResult` carries the per-step denoised ``x0`` previews and
+  the optional ``on_result`` callback fires as each microbatch completes
+  (how a frontend streams previews while later buckets still solve).
+
+Throughput accounting counts **real** requests only: ``model_evals`` is
+``spec.nfe`` per served request; padded lanes are reported separately as
+``padded_slots`` (they cost compute but serve nobody).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Hashable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.samplers import (SamplerSpec, build_plan, compile_cache_stats,
+                             sample_batched, sample_sharded, warmup)
+from .batching import MicroBatch, Request, fold_keys, form_microbatches
+from .sharding import align_bucket_sizes, data_axis_size
+
+__all__ = ["ServeEngine", "ServeResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """One served request: final latent plus optional streamed previews."""
+
+    rid: int
+    x0: jnp.ndarray
+    #: ``[n_steps, *shape]`` per-step denoised previews (stream=True only)
+    previews: jnp.ndarray | None = None
+
+
+class ServeEngine:
+    """Mesh-sharded, continuously-microbatched diffusion sampling service.
+
+    Args:
+        model_fn: per-request denoiser ``(x, t) -> x0_hat`` (the executor
+            vmaps it over the request axis). Held strongly for the
+            engine's lifetime.
+        bucket_sizes: allowed microbatch lane counts; tails take the
+            smallest that fits. With a mesh, sizes are rounded up to
+            multiples of the data-axis size.
+        mesh: optional ``jax.sharding.Mesh``; requests are split over
+            ``data_axis``, plan arrays replicated.
+        stream: solve with the trajectory hook and attach per-step x0
+            previews to every result.
+        on_result: optional callback invoked with each ServeResult as its
+            microbatch completes (streaming consumption).
+        model_key: stable compile-cache token for ``model_fn`` (lets a
+            re-built engine over the same weights reuse live executors).
+        noise_seed / solve_seed: bases for the per-request ``fold_in``
+            RNG streams (initial noise and solver path respectively).
+    """
+
+    def __init__(self, model_fn: Callable, *,
+                 bucket_sizes: Sequence[int] = (1, 2, 4, 8),
+                 mesh=None, data_axis: str = "data",
+                 stream: bool = False,
+                 on_result: Callable[[ServeResult], None] | None = None,
+                 model_key: Hashable | None = None,
+                 noise_seed: int = 7, solve_seed: int = 8,
+                 donate: bool | None = None):
+        if not bucket_sizes:
+            raise ValueError("need at least one bucket size")
+        self.model_fn = model_fn
+        self.mesh = mesh
+        self.data_axis = data_axis
+        if mesh is not None:
+            bucket_sizes = align_bucket_sizes(
+                bucket_sizes, data_axis_size(mesh, data_axis))
+        self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
+        self.stream = stream
+        self.on_result = on_result
+        self.model_key = model_key
+        self.donate = donate
+        self._noise_base = jax.random.PRNGKey(noise_seed)
+        self._solve_base = jax.random.PRNGKey(solve_seed)
+        self._queue: list[Request] = []
+        self._next_rid = 0
+        self._warmed: set[tuple] = set()
+        self._stats = {
+            "requests": 0, "microbatches": 0, "padded_slots": 0,
+            "model_evals": 0, "warmups": 0, "serve_s": 0.0,
+        }
+
+    # ------------------------------------------------------------- intake
+    def submit(self, spec: SamplerSpec, shape: Sequence[int],
+               dtype="float32", rid: int | None = None) -> int:
+        """Enqueue one request; returns its rid (for RNG identity and
+        result matching). An explicit ``rid`` makes a request replayable
+        — the same rid always produces the same sample."""
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid + 1)
+        self._queue.append(Request(
+            rid=rid, spec=spec, shape=tuple(int(s) for s in shape),
+            dtype=jnp.dtype(dtype).name))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------ serving
+    def warmup_bucket(self, mb: MicroBatch) -> None:
+        """AOT-compile this microbatch's executor if not already warm."""
+        ident = (mb.key, mb.size)
+        if ident in self._warmed:
+            return
+        plan = build_plan(mb.spec)
+        warmup(plan, self.model_fn, mb.shape, jnp.dtype(mb.dtype),
+               batch=mb.size, mesh=self.mesh, data_axis=self.data_axis,
+               trajectory=self.stream, model_key=self.model_key,
+               donate=self.donate)
+        self._warmed.add(ident)
+        self._stats["warmups"] += 1
+
+    def step(self) -> list[ServeResult]:
+        """Serve one microbatch (oldest bucket first); [] when idle."""
+        if not self._queue:
+            return []
+        mb = form_microbatches(self._queue, self.bucket_sizes)[0]
+        taken = set(id(r) for r in mb.requests)
+        self._queue = [r for r in self._queue if id(r) not in taken]
+        return self._serve(mb)
+
+    def run(self) -> list[ServeResult]:
+        """Drain the queue; results in service order.
+
+        Microbatches are formed once per drain pass (linear in queue
+        length, unlike repeated ``step()`` which regroups the remaining
+        queue each call); requests submitted from ``on_result`` callbacks
+        are picked up by the next pass.
+        """
+        out: list[ServeResult] = []
+        while self._queue:
+            batches = form_microbatches(self._queue, self.bucket_sizes)
+            self._queue = []
+            for mb in batches:
+                out.extend(self._serve(mb))
+        return out
+
+    def _serve(self, mb: MicroBatch) -> list[ServeResult]:
+        self.warmup_bucket(mb)
+        spec, shape = mb.spec, mb.shape
+        dtype = jnp.dtype(mb.dtype)
+        plan = build_plan(spec)
+        rids = mb.rids()
+
+        t0 = time.perf_counter()
+        noise_keys = fold_keys(self._noise_base, rids)
+        scale = spec.resolve_schedule().prior_scale(float(plan.ts[0]))
+        x_T = jax.vmap(
+            lambda k: scale * jax.random.normal(k, shape, dtype)
+        )(noise_keys)
+        solve_keys = fold_keys(self._solve_base, rids)
+
+        if self.mesh is not None:
+            out = sample_sharded(
+                plan, self.model_fn, x_T, solve_keys, mesh=self.mesh,
+                data_axis=self.data_axis, trajectory=self.stream,
+                model_key=self.model_key, donate=self.donate)
+        else:
+            out = sample_batched(
+                plan, self.model_fn, x_T, solve_keys,
+                trajectory=self.stream, model_key=self.model_key)
+        if self.stream:
+            x0, traj = out
+            previews = jax.block_until_ready(traj["x0"])
+        else:
+            x0, previews = out, None
+        x0 = jax.block_until_ready(x0)
+        self._stats["serve_s"] += time.perf_counter() - t0
+
+        n_real = len(mb.requests)
+        self._stats["requests"] += n_real
+        self._stats["microbatches"] += 1
+        self._stats["padded_slots"] += mb.n_padded
+        self._stats["model_evals"] += spec.nfe * n_real
+
+        results = []
+        for lane, req in enumerate(mb.requests):  # pad lanes dropped here
+            res = ServeResult(
+                rid=req.rid, x0=x0[lane],
+                previews=previews[lane] if previews is not None else None)
+            if self.on_result is not None:
+                self.on_result(res)
+            results.append(res)
+        return results
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Engine counters plus a compile-cache snapshot.
+
+        ``model_evals`` counts real requests only (``spec.nfe`` each);
+        padded lanes show up in ``padded_slots``, never in throughput.
+        """
+        s = dict(self._stats)
+        dt = s["serve_s"]
+        s["requests_per_s"] = s["requests"] / dt if dt > 0 else 0.0
+        s["model_evals_per_s"] = s["model_evals"] / dt if dt > 0 else 0.0
+        s["compile_cache"] = compile_cache_stats()
+        return s

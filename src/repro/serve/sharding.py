@@ -1,0 +1,55 @@
+"""Mesh placement helpers for the serve engine.
+
+The engine shards exactly one thing: the leading *request* axis of each
+microbatch, over the ``data`` axis of a mesh from
+``repro.launch.mesh.make_test_mesh`` / ``make_production_mesh``. Plan
+arrays (coefficient tables) are replicated; the model axis is free for
+the backbone's own tensor parallelism (``repro.models.common.specs_for``
+with the ``serve_2d`` strategy). The actual ``NamedSharding`` placement
+and the donated carry buffer live in
+``repro.core.samplers.base.sample_sharded``; this module owns the
+bucket-size arithmetic that makes batches divisible.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+__all__ = ["data_axis_size", "align_bucket_sizes", "auto_mesh"]
+
+
+def data_axis_size(mesh, data_axis: str = "data") -> int:
+    if data_axis not in mesh.shape:
+        raise ValueError(
+            f"mesh has no axis {data_axis!r}; axes: {tuple(mesh.shape)}")
+    return int(mesh.shape[data_axis])
+
+
+def align_bucket_sizes(bucket_sizes: Sequence[int], n_data: int) -> tuple:
+    """Round every bucket size up to a multiple of the data-axis size.
+
+    ``NamedSharding`` needs the sharded axis divisible by the mesh axis;
+    rounding *up* keeps every configured bucket usable (a too-small tail
+    bucket just carries a few more masked pad lanes).
+    """
+    if n_data < 1:
+        raise ValueError(f"data axis size must be >= 1, got {n_data}")
+    aligned = sorted({-(-b // n_data) * n_data for b in bucket_sizes})
+    return tuple(aligned)
+
+
+def auto_mesh(data_axis: str = "data"):
+    """A serving mesh over all visible devices: ``(data=n, model=1)``.
+
+    Returns None on a single device (the engine then runs the unsharded
+    ``sample_batched`` path). Real deployments pass an explicit mesh
+    (``make_production_mesh``) so the model axis is sized for the
+    backbone's tensor parallelism instead.
+    """
+    n = len(jax.devices())
+    if n <= 1:
+        return None
+    return jax.make_mesh((n, 1), (data_axis, "model"),
+                         devices=jax.devices())

@@ -164,6 +164,91 @@ def test_plan_cache_reuses_plans():
     assert build_plan(spec) is build_plan(spec)
 
 
+def test_compile_cache_does_not_pin_model_fn():
+    """Cache entries must hold no strong reference to model_fn (closures
+    over full param trees would pin up to 64 param copies): the model is
+    collectable after the caller drops it, and its entry is evicted."""
+    import gc
+    import weakref
+    samplers.clear_compile_cache()
+    payload = jnp.ones((128, 2))  # stand-in for a param tree
+
+    def model_fn(x, t, _p=payload):
+        return MODEL(x, t) + 0.0 * _p[0, 0]
+
+    s = make_sampler("sa", schedule=SCHED, n_steps=5, tau=0.5)
+    s.sample(model_fn, XT[:64], KEY)
+    assert samplers.compile_cache_stats()["size"] == 1
+    wr = weakref.ref(model_fn)
+    del model_fn
+    gc.collect()
+    assert wr() is None, "compile cache kept the model alive"
+    stats = samplers.compile_cache_stats()
+    assert stats["size"] == 0 and stats["evictions"] == 1
+
+
+def test_model_key_shares_executor_across_model_instances():
+    """A caller-stable model_key replaces the weakref identity: two
+    distinct (functionally equal) closures reuse one compiled executor
+    instead of retracing."""
+    samplers.clear_compile_cache()
+    traces = {"n": 0}
+
+    def make_model():
+        def model_fn(x, t):
+            traces["n"] += 1
+            return MODEL(x, t)
+        return model_fn
+
+    s = make_sampler("sa", schedule=SCHED, n_steps=5, tau=0.5)
+    a = s.sample(make_model(), XT[:64], KEY, model_key="gmm-oracle")
+    first = traces["n"]
+    b = s.sample(make_model(), XT[:64], KEY, model_key="gmm-oracle")
+    assert traces["n"] == first, "same model_key re-traced"
+    assert samplers.compile_cache_stats()["misses"] == 1
+    assert bool(jnp.all(a == b))
+
+
+def test_cache_accepts_unhashable_models_and_keys_by_identity():
+    """The weak model token hashes by identity: unhashable callables
+    (custom __eq__) work, and value-equal but distinct models never share
+    an executor (whose traced constants bake the first model's state)."""
+    samplers.clear_compile_cache()
+
+    class EqModel:
+        def __init__(self, scale):
+            self.scale = scale
+
+        def __eq__(self, other):  # defines __eq__ -> __hash__ is None
+            return isinstance(other, EqModel)
+
+        def __call__(self, x, t):
+            return self.scale * MODEL(x, t)
+
+    assert EqModel.__hash__ is None
+    s = make_sampler("sa", schedule=SCHED, n_steps=5, tau=0.5)
+    m1, m2 = EqModel(1.0), EqModel(0.5)
+    a1 = s.sample(m1, XT[:64], KEY)
+    s.sample(m1, XT[:64], KEY)       # same instance: cache hit
+    b = s.sample(m2, XT[:64], KEY)   # == m1 but distinct: own entry
+    st = samplers.compile_cache_stats()
+    assert st["misses"] == 2 and st["hits"] == 1
+    # m2's own (baked) scale was used, not m1's executor
+    assert not bool(jnp.all(a1 == b))
+
+
+def test_batched_buckets_get_distinct_cache_entries():
+    """The batch lane count is part of the compile-cache key, so a
+    bucket's AOT executable can never be shadowed by another size."""
+    samplers.clear_compile_cache()
+    s = make_sampler("sa", schedule=SCHED, n_steps=5, tau=0.5)
+    for k in (2, 4):
+        keys = jax.random.split(KEY, k)
+        xTs = jax.vmap(lambda kk: s.init_noise(kk, (64, 2)))(keys)
+        s.sample_batched(MODEL, xTs, keys)
+    assert samplers.compile_cache_stats()["misses"] == 2
+
+
 # -------------------------------------------------- trajectory + batching
 @pytest.mark.parametrize("name", ["sa", "ddim", "dpm_solver_pp_2m",
                                   "euler_maruyama", "edm_heun",
