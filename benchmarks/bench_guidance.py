@@ -1,0 +1,124 @@
+"""Guidance-sweep benchmark: classifier-free guidance through the serve
+engine at a sweep of scales, with the compile-cache contract asserted.
+
+    PYTHONPATH=src python benchmarks/bench_guidance.py --smoke
+    PYTHONPATH=src python benchmarks/bench_guidance.py --requests 24
+
+The claim under test is the denoiser adapter's serving contract: the
+guidance scale (and the conditioning values) are *traced data*, so after
+the engine warms a guided bucket once, serving any scale — 0.0 through
+7.5 — adds ZERO compile-cache misses and zero retraces. A CFG hot path
+that silently recompiled per scale would halve (or worse) serving
+throughput; this is the guard. Also reports the honest CFG cost model:
+``network_evals == 2 x model_evals`` for guided requests.
+
+Model: the exact GMM eps-prediction oracle wrapped in a Denoiser
+(``repro.kernels.ref.denoiser_oracles``) — the adapter+serve overhead is
+measured without backbone noise, matching the other oracle benchmarks.
+"""
+
+import argparse
+import time
+
+
+def _args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes; assert the cache contract (CI)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--nfe", type=int, default=None)
+    ap.add_argument("--points", type=int, default=None,
+                    help="latent points per request")
+    return ap.parse_args(argv)
+
+
+SCALES = (0.0, 0.5, 1.0, 1.5, 3.0, 7.5)
+
+
+def main(argv=None):
+    args = _args(argv)
+    import jax.numpy as jnp
+    from repro.core import Denoiser, get_schedule
+    from repro.core.samplers import (SamplerSpec, clear_compile_cache,
+                                     compile_cache_stats)
+    from repro.kernels.ref import denoiser_oracles
+    from repro.serve import ServeEngine
+
+    try:
+        from .common import print_table
+    except ImportError:
+        from common import print_table
+
+    n_req = args.requests or (6 if args.smoke else 18)
+    nfe = args.nfe or (6 if args.smoke else 15)
+    pts = args.points or (64 if args.smoke else 256)
+    schedule = get_schedule("vp_linear")
+    nets = denoiser_oracles(schedule)
+    denoiser = Denoiser(nets["eps"], schedule, prediction="eps",
+                        guidance=True)
+    spec = SamplerSpec.from_nfe(
+        "sa", nfe, schedule=schedule, predictor_order=3, corrector_order=1,
+        tau=0.6, prediction="eps", guidance=True)
+    shape = (pts, 2)
+    cond = jnp.asarray([1.0, -1.0], jnp.float32)
+
+    engine = ServeEngine(denoiser, bucket_sizes=(max(2, n_req // 2),),
+                         model_key="bench-guidance")
+
+    def serve_at(scale, base_rid):
+        for i in range(n_req):
+            engine.submit(spec, shape, rid=base_rid + i,
+                          cond=cond * (i + 1), guidance_scale=scale)
+        t0 = time.perf_counter()
+        res = engine.run()
+        dt = time.perf_counter() - t0
+        assert len(res) == n_req
+        return dt
+
+    clear_compile_cache()
+    serve_at(1.0, 0)                       # cold: bucket warmup compile
+    warmed = compile_cache_stats()
+
+    rows, sweep_s = [], 0.0
+    for j, s in enumerate(SCALES):
+        dt = serve_at(s, 1000 * (j + 1))
+        sweep_s += dt
+        rows.append([f"scale={s}", n_req / dt, n_req * spec.nfe / dt,
+                     n_req * spec.network_nfe / dt,
+                     compile_cache_stats()["misses"]])
+    after = compile_cache_stats()
+    new_misses = after["misses"] - warmed["misses"]
+
+    print_table(
+        f"guidance-scale sweep ({n_req} req/scale, NFE={spec.nfe}, "
+        f"network NFE={spec.network_nfe}, warm bucket)",
+        ["scale", "req/s", "model-evals/s", "network-evals/s",
+         "cum. compiles"], rows)
+    st = engine.stats()
+    print(f"\n### cache contract\nafter warmup: {warmed}\n"
+          f"after {len(SCALES)}-scale sweep: {after}\n"
+          f"new misses across scales: {new_misses}\n"
+          f"CFG cost: {st['network_evals']} network evals for "
+          f"{st['model_evals']} guided evals (2x, honest accounting)")
+    assert st["network_evals"] == 2 * st["model_evals"]
+    if args.smoke:
+        assert new_misses == 0, (
+            f"guidance sweep re-compiled ({new_misses} new misses) — the "
+            "CFG serving hot path regressed to retrace-per-scale")
+        assert after["hits"] > warmed["hits"]
+        print("smoke OK: zero compile-cache misses across guidance scales")
+    return {
+        "requests_per_scale": n_req, "nfe": spec.nfe,
+        "network_nfe": spec.network_nfe, "scales": list(SCALES),
+        "sweep_s": sweep_s, "new_misses_across_scales": new_misses,
+        "requests_per_s": n_req * len(SCALES) / sweep_s if sweep_s else 0.0,
+    }
+
+
+def run():
+    """benchmarks.run entry: smoke scale, cache contract asserted."""
+    return main(["--smoke"])
+
+
+if __name__ == "__main__":
+    main()

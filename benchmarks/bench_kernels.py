@@ -23,7 +23,7 @@ def run():
         xi = jnp.zeros((n,), jnp.bfloat16)
         coeffs = jnp.ones((P + 2,), jnp.float32)
         dt, _ = timer(jax.jit(lambda a, b, c: ref.sa_update_ref(
-            a, b, c, coeffs[0], coeffs[1], coeffs[2:])), x, buf, xi)
+            a, b, c, coeffs)), x, buf, xi)
         bytes_ = 2 * n * (P + 3)
         tpu_est = bytes_ / HBM_BW
         rows.append([f"sa_update P{P} n=2^{n.bit_length()-1}",

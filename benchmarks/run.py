@@ -2,9 +2,19 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only tau_sweep
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_RESULTS.json
+
+Every run appends a machine-readable record to ``BENCH_RESULTS.json`` at
+the repo root (override with ``--json``; ``--json ''`` disables): the
+perf trajectory this repo accumulates across PRs. Each record carries
+per-section wall time, pass/fail status, and whatever metrics dict a
+section's ``run()`` returns — so regressions are diffable by tooling, not
+just eyeballed from stdout.
 """
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -18,31 +28,82 @@ SECTIONS = [
     ("kernels", "kernel micro-benchmarks"),
     ("solver_overhead", "solver bookkeeping overhead"),
     ("serving", "serve engine: bucket throughput + compile-cache contract"),
+    ("guidance", "denoiser adapter: CFG scale sweep + cache contract"),
 ]
+
+DEFAULT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_RESULTS.json")
+
+
+def _append_record(path: str, record: dict) -> None:
+    """Accumulate into a JSON list-of-runs (corrupt/legacy -> restart)."""
+    runs = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                runs = json.load(f)
+            if not isinstance(runs, list):
+                runs = []
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append(record)
+    with open(path, "w") as f:
+        json.dump(runs, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="perf-trajectory file to append this run's "
+                    "machine-readable record to ('' disables)")
     args = ap.parse_args()
     t00 = time.time()
     failures = []
+    sections = []
     for name, desc in SECTIONS:
         if args.only and args.only != name:
             continue
         print(f"\n{'='*72}\n== bench_{name}: {desc}\n{'='*72}")
         sys.stdout.flush()
         t0 = time.time()
+        status, metrics, err = "pass", None, None
         try:
             mod = __import__(f"benchmarks.bench_{name}",
                              fromlist=["run"])
-            mod.run()
+            ret = mod.run()
+            metrics = ret if isinstance(ret, dict) else None
             print(f"[bench_{name} done in {time.time()-t0:.1f}s]")
         except AssertionError as e:
+            status, err = "claim_failed", str(e)
             failures.append((name, str(e)))
             print(f"!! bench_{name} CLAIM FAILED: {e}")
+        except Exception as e:  # crash != failed claim; keep the record
+            status, err = "error", f"{type(e).__name__}: {e}"
+            failures.append((name, err))
+            print(f"!! bench_{name} ERRORED: {err}")
+        sections.append({
+            "name": name, "desc": desc, "seconds": round(time.time() - t0, 3),
+            "status": status,
+            **({"metrics": metrics} if metrics else {}),
+            **({"error": err} if err else {}),
+        })
         sys.stdout.flush()
-    print(f"\ntotal bench time {time.time()-t00:.1f}s")
+    total_s = time.time() - t00
+    print(f"\ntotal bench time {total_s:.1f}s")
+    if args.json:
+        record = {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "total_s": round(total_s, 3),
+            "only": args.only,
+            "sections": sections,
+            "n_failures": len(failures),
+        }
+        _append_record(args.json, record)
+        print(f"appended run record ({len(sections)} sections) to "
+              f"{args.json}")
     if failures:
         print(f"{len(failures)} claim failures: {[f[0] for f in failures]}")
         sys.exit(1)

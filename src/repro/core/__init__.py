@@ -15,6 +15,7 @@ Sampling entry point: ``make_sampler(name, nfe=..., ...)`` — see
 """
 
 from .coefficients import SolverTables, build_tables, exp_monomial_integrals
+from .denoiser import Denoiser, canonical_prediction, convert_prediction
 from .oracle import GMM, gaussian_oracle, perturb_model
 from . import samplers
 from .samplers import (
@@ -39,6 +40,9 @@ from .tau import BandedTau, ConstantTau, DDIMEtaTau, TauSchedule
 
 __all__ = [
     "samplers",
+    "Denoiser",
+    "canonical_prediction",
+    "convert_prediction",
     "Sampler",
     "SamplerPlan",
     "SamplerSpec",

@@ -1,0 +1,183 @@
+"""Denoiser adapter layer: raw network -> solver-facing model contract.
+
+Every executor in the sampler registry consumes ``model_fn(x, t)`` whose
+output is the *plan's* parameterization (x0-prediction for the baselines
+and the "data" SA-Solver path, eps-prediction for the "noise" SA path).
+Real checkpoints come in three output conventions — eps-, x0- and
+v-prediction — and are usually served under classifier-free guidance with
+per-request conditioning. :class:`Denoiser` closes that gap:
+
+- **prediction-type conversion** — ``convert_prediction`` maps any of
+  ``eps``/``x0``/``v`` to any other in-graph using the schedule's
+  ``alpha_t``/``sigma_t`` at the (traced) evaluation time, via the
+  identities of ``x_t = alpha_t x_0 + sigma_t eps`` and
+  ``v = alpha_t eps - sigma_t x_0``.
+- **classifier-free guidance** — the cond and uncond branches are fused
+  into ONE batched network evaluation (a stacked leading axis of 2, vmap
+  over the network), then combined as ``(1 - s) * uncond + s * cond``.
+  That form — not ``uncond + s (cond - uncond)`` — makes guidance scale
+  1.0 *bitwise* equal to the conditional branch, so the guided executor
+  at s = 1 reproduces the unguided path exactly. The scale is traced
+  data: a guidance-scale sweep reuses one compilation.
+- **conditioning pytree** — ``cond`` is threaded alongside ``x`` as a
+  traced argument of the jitted executor (never baked as a constant), so
+  per-request conditioning rides the serving compile cache; only its
+  shape/dtype structure keys the executor.
+
+A :class:`Denoiser` is passed wherever ``model_fn`` is accepted
+(``sample`` / ``sample_batched`` / ``sample_sharded`` / ``ServeEngine``);
+the base layer binds it to the plan's parameterization and the per-call
+``cond``/``guidance_scale`` at trace time (see
+``repro.core.samplers.base``).
+
+NFE accounting: one *guided* evaluation costs two *network* evaluations
+under CFG (one fused call over a doubled lane count).
+``SamplerSpec.nfe`` counts guided (solver-level) evaluations;
+``SamplerSpec.network_nfe`` counts network forwards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import NoiseSchedule
+
+__all__ = [
+    "PREDICTION_TYPES",
+    "Denoiser",
+    "canonical_prediction",
+    "convert_prediction",
+]
+
+#: canonical prediction-type names (aliases: "data"/"x0", "noise"/"eps")
+PREDICTION_TYPES = ("x0", "eps", "v")
+
+_ALIASES = {
+    "data": "x0", "x0": "x0",
+    "noise": "eps", "eps": "eps", "epsilon": "eps",
+    "v": "v", "v_prediction": "v",
+}
+
+
+def canonical_prediction(name: str) -> str:
+    """Normalize a prediction-type name ("data"/"x0", "noise"/"eps", "v")."""
+    try:
+        return _ALIASES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown prediction type {name!r}; one of "
+            f"{sorted(set(_ALIASES))}")
+
+
+def convert_prediction(pred: jnp.ndarray, x: jnp.ndarray, t,
+                       src: str, dst: str,
+                       schedule: NoiseSchedule) -> jnp.ndarray:
+    """Convert a network output between prediction types, in-graph.
+
+    Uses ``x_t = a x_0 + s eps`` and ``v = a eps - s x_0`` with
+    ``a = alpha_t``, ``s = sigma_t`` from the schedule's jnp functions at
+    the traced evaluation time ``t``. The v inversions use the general
+    ``1/(a^2 + s^2)`` normalizer so non-VP schedules stay exact.
+    """
+    src, dst = canonical_prediction(src), canonical_prediction(dst)
+    if src == dst:
+        return pred
+    a = schedule.alpha_j(t)
+    s = schedule.sigma_j(t)
+    if dst == "x0":
+        if src == "eps":
+            return (x - s * pred) / a
+        return (a * x - s * pred) / (a * a + s * s)      # src == "v"
+    if dst == "eps":
+        if src == "x0":
+            return (x - a * pred) / s
+        return (s * x + a * pred) / (a * a + s * s)      # src == "v"
+    # dst == "v"
+    if src == "x0":
+        return a * (x - a * pred) / s - s * pred
+    return a * pred - s * (x - s * pred) / a             # src == "eps"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Denoiser:
+    """A raw network wrapped into the solver-facing model contract.
+
+    Args:
+        network: ``(x, t, cond) -> prediction`` in ``prediction``'s
+            convention. Unconditional networks ignore ``cond`` (callers
+            pass ``cond=None``).
+        schedule: the noise schedule whose ``alpha_t``/``sigma_t`` drive
+            the in-graph prediction conversion. Must match the plan's.
+        prediction: the network's output convention — ``"eps"``/``"x0"``/
+            ``"v"`` (aliases ``"noise"``/``"data"`` accepted).
+        guidance: enable classifier-free guidance. The executor traces a
+            doubled-lane fused network evaluation and combines branches
+            with the per-call (traced) ``guidance_scale``.
+        null_cond: the unconditional conditioning for CFG. ``None`` means
+            "zeros like the per-call cond" (the common null-embedding
+            convention when the null token is the zero vector).
+
+    Identity semantics: ``eq=False`` keeps the dataclass hashable by
+    object identity, and instances are weak-referenceable — the sampler
+    compile cache keys executors on a *weak* identity token of the
+    Denoiser exactly as it does for plain ``model_fn`` callables, so the
+    cache never pins the network (or the params its closure holds).
+    """
+
+    network: Callable[[jnp.ndarray, Any, Any], jnp.ndarray]
+    schedule: NoiseSchedule
+    prediction: str = "eps"
+    guidance: bool = False
+    null_cond: Any = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "prediction", canonical_prediction(self.prediction))
+
+    # ------------------------------------------------------------- statics
+    def statics(self, target: str) -> tuple:
+        """Trace-relevant identity for the compile-cache key: everything
+        that changes the adapter's graph except the network itself (which
+        is keyed separately, by weak identity)."""
+        return ("denoiser", self.prediction, bool(self.guidance),
+                canonical_prediction(target), self.schedule)
+
+    # ------------------------------------------------------------ binding
+    def evaluate(self, x: jnp.ndarray, t, cond, scale) -> jnp.ndarray:
+        """One guided (or plain) network evaluation, in ``self.prediction``
+        convention. Under guidance the cond/uncond branches run as ONE
+        network call over a stacked leading axis of 2."""
+        if not self.guidance:
+            return self.network(x, t, cond)
+        null = self.null_cond
+        if null is None and cond is not None:
+            null = jax.tree.map(jnp.zeros_like, cond)
+        pair = jax.tree.map(lambda c, n: jnp.stack([c, n]), cond, null)
+        out = jax.vmap(self.network, in_axes=(0, None, 0))(
+            jnp.stack([x, x]), t, pair)
+        c_out, u_out = out[0], out[1]
+        s = jnp.asarray(scale, c_out.dtype)
+        # (1-s)*u + s*c: at s == 1.0 this is bitwise the cond branch
+        # (0*u + c), unlike u + s*(c-u) whose re-association rounds
+        return (1.0 - s) * u_out + s * c_out
+
+    def as_model_fn(self, target: str, cond, scale) -> Callable:
+        """Bind this denoiser to a plan's parameterization and one call's
+        (traced) conditioning + guidance scale, yielding the
+        ``model_fn(x, t)`` closure the executors consume."""
+        target = canonical_prediction(target)
+
+        def model_fn(x, t):
+            raw = self.evaluate(x, t, cond, scale)
+            return convert_prediction(raw, x, t, self.prediction, target,
+                                      self.schedule)
+
+        return model_fn
+
+    def __repr__(self) -> str:
+        return (f"Denoiser(prediction={self.prediction!r}, "
+                f"guidance={self.guidance}, schedule={self.schedule!r})")

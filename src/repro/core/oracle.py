@@ -64,11 +64,20 @@ class GMM:
         return mu + sd * jax.random.normal(kn, (n, self.dim))
 
     # ---- exact posteriors under the diffusion ---------------------------
-    def x0_prediction(self, schedule: NoiseSchedule, x: jnp.ndarray, t) -> jnp.ndarray:
-        """E[x_0 | x_t = x] — the ideal data-prediction model x_theta."""
+    def x0_prediction(self, schedule: NoiseSchedule, x: jnp.ndarray, t,
+                      shift=None) -> jnp.ndarray:
+        """E[x_0 | x_t = x] — the ideal data-prediction model x_theta.
+
+        ``shift`` (broadcastable against the ``[K, d]`` means) translates
+        every mixture component — an exact *conditional* model family, so
+        classifier-free-guidance tests have analytic ground truth for the
+        cond (shifted) and uncond (shift 0 / None) branches alike.
+        """
         a = schedule.alpha_j(t)
         s = schedule.sigma_j(t)
         mu = jnp.asarray(self.means)          # [K, d]
+        if shift is not None:
+            mu = mu + shift
         var_k = (a * jnp.asarray(self.stds)) ** 2 + s**2  # [K, d]
         logw = jnp.log(jnp.asarray(self.weights))
         diff = x[..., None, :] - a * mu       # [..., K, d]
@@ -87,15 +96,31 @@ class GMM:
         x0 = self.x0_prediction(schedule, x, t)
         return -(x - a * x0) / s**2
 
-    def eps_prediction(self, schedule: NoiseSchedule, x: jnp.ndarray, t) -> jnp.ndarray:
+    def eps_prediction(self, schedule: NoiseSchedule, x: jnp.ndarray, t,
+                       shift=None) -> jnp.ndarray:
         a = schedule.alpha_j(t)
         s = schedule.sigma_j(t)
-        return (x - a * self.x0_prediction(schedule, x, t)) / s
+        return (x - a * self.x0_prediction(schedule, x, t, shift)) / s
+
+    def v_prediction(self, schedule: NoiseSchedule, x: jnp.ndarray, t,
+                     shift=None) -> jnp.ndarray:
+        """v = alpha_t eps - sigma_t x_0 (Salimans & Ho parameterization),
+        from the same exact posterior as the other two."""
+        a = schedule.alpha_j(t)
+        s = schedule.sigma_j(t)
+        x0 = self.x0_prediction(schedule, x, t, shift)
+        eps = (x - a * x0) / s
+        return a * eps - s * x0
 
     def model_fn(self, schedule: NoiseSchedule, parameterization: str = "data"):
-        if parameterization == "data":
-            return lambda x, t: self.x0_prediction(schedule, x, t)
-        return lambda x, t: self.eps_prediction(schedule, x, t)
+        """Ideal unconditional ``(x, t)`` model in any prediction type
+        ("data"/"x0", "noise"/"eps", or "v")."""
+        fn = {
+            "data": self.x0_prediction, "x0": self.x0_prediction,
+            "noise": self.eps_prediction, "eps": self.eps_prediction,
+            "v": self.v_prediction,
+        }[parameterization]
+        return lambda x, t: fn(schedule, x, t)
 
     # ---- exact moments (for W2-vs-Gaussian metrics) ----------------------
     def mean(self) -> np.ndarray:

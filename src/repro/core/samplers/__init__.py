@@ -12,6 +12,8 @@ One registry covers SA-Solver ("sa") and the paper's six baselines
 ``sa`` / ``baselines`` for the families.
 """
 
+from ..denoiser import (Denoiser, canonical_prediction, convert_prediction,
+                        PREDICTION_TYPES)
 from .base import (
     Sampler,
     SamplerFamily,
@@ -20,6 +22,7 @@ from .base import (
     build_plan,
     clear_compile_cache,
     compile_cache_stats,
+    cond_struct,
     get_family,
     list_samplers,
     make_sampler,
@@ -36,6 +39,10 @@ from . import baselines as _baseline_families  # noqa: F401
 from .sa import tables_to_arrays
 
 __all__ = [
+    "Denoiser",
+    "PREDICTION_TYPES",
+    "canonical_prediction",
+    "convert_prediction",
     "Sampler",
     "SamplerFamily",
     "SamplerPlan",
@@ -43,6 +50,7 @@ __all__ = [
     "build_plan",
     "clear_compile_cache",
     "compile_cache_stats",
+    "cond_struct",
     "get_family",
     "list_samplers",
     "make_sampler",

@@ -14,8 +14,9 @@ configure, compile-cache, and swap solvers at runtime without code changes:
    a device-ready pytree of f32 ``jnp`` arrays. Plans are cached by spec.
 3. **Execute** — :func:`sample` looks up a pure jitted executor in an LRU
    compile cache keyed on (family statics, shape, dtype, model identity,
-   batch lane count, mesh/sharding identity) and runs it with
-   ``plan.arrays`` passed as *traced arguments* — so re-planning with a
+   batch lane count, mesh/sharding identity, denoiser-adapter statics,
+   conditioning structure) and runs it with ``plan.arrays`` passed as
+   *traced arguments* — so re-planning with a
    different tau / grid / coefficient table reuses the compiled step
    loop, only a different step count retraces. The model identity is a
    *weakref* (or a caller-stable ``model_key``): the cache never pins
@@ -29,6 +30,15 @@ configure, compile-cache, and swap solvers at runtime without code changes:
    denoised previews (stacked ``lax.scan`` outputs) so serving can
    stream intermediates. ``repro.serve`` builds the request
    queue/microbatching service on these four entry points.
+
+The model argument of every entry point is either a plain
+``model_fn(x, t)`` already speaking the plan's parameterization, or a
+:class:`repro.core.denoiser.Denoiser` wrapping a raw eps-/x0-/v-prediction
+network (optionally under classifier-free guidance). The binding happens
+*inside* the jitted executor: the per-call conditioning pytree ``cond``
+and ``guidance_scale`` are traced arguments — a guidance-scale sweep or a
+new conditioning batch reuses one compilation; only the cond's
+shape/dtype structure keys the executor.
 
 Registering a new sampler::
 
@@ -55,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..denoiser import Denoiser, canonical_prediction, convert_prediction
 from ..schedules import NoiseSchedule, get_schedule, timestep_grid
 from ..tau import TauSchedule
 
@@ -68,6 +79,7 @@ __all__ = [
     "make_sampler",
     "list_samplers",
     "build_plan",
+    "cond_struct",
     "sample",
     "sample_batched",
     "sample_sharded",
@@ -114,6 +126,14 @@ class SamplerSpec:
     s_tmin: float = 0.05
     s_tmax: float = 50.0
     s_noise: float = 1.003
+    # Denoiser adapter (see repro.core.denoiser)
+    #: output convention of the network behind the model argument —
+    #: "eps" | "x0"/"data" | "v". None means "already the plan's
+    #: parameterization" (the legacy plain-model_fn contract).
+    prediction: str | None = None
+    #: classifier-free guidance: the executor fuses cond/uncond into one
+    #: doubled-lane network eval per model call (requires a Denoiser).
+    guidance: bool = False
 
     def resolve_schedule(self) -> NoiseSchedule:
         if isinstance(self.schedule, NoiseSchedule):
@@ -135,8 +155,16 @@ class SamplerSpec:
 
     @property
     def nfe(self) -> int:
-        """Model evaluations this spec will spend (family-exact)."""
+        """Guided (solver-level) model evaluations this spec will spend
+        (family-exact)."""
         return get_family(self.name).nfe_of(self)
+
+    @property
+    def network_nfe(self) -> int:
+        """Raw network forwards: under classifier-free guidance every
+        guided evaluation is one fused network call over a doubled lane
+        count — 2x the compute of an unguided evaluation."""
+        return self.nfe * (2 if self.guidance else 1)
 
     @classmethod
     def from_nfe(cls, name: str, nfe: int, **kw) -> "SamplerSpec":
@@ -175,6 +203,10 @@ class SamplerPlan:
 
 
 # ----------------------------------------------------------------- registry
+def _data_convention(spec: "SamplerSpec") -> str:
+    return "data"
+
+
 @dataclasses.dataclass(frozen=True)
 class SamplerFamily:
     name: str
@@ -186,6 +218,10 @@ class SamplerFamily:
     statics: Callable[[SamplerSpec], tuple]
     nfe_of: Callable[[SamplerSpec], int]
     steps_from_nfe: Callable[[int, dict], int]
+    #: spec -> the prediction convention this family's executors consume
+    #: ("data" -> x0-hat, "noise" -> eps-hat). The denoiser adapter
+    #: converts any wrapped network to this convention in-graph.
+    model_convention: Callable[[SamplerSpec], str] = _data_convention
 
 
 _REGISTRY: dict[str, SamplerFamily] = {}
@@ -357,6 +393,85 @@ def _deref_model(cell):
     return m
 
 
+# -------------------------------------------------- denoiser adapter hooks
+def _adapter_statics(plan: SamplerPlan, model_fn) -> tuple | None:
+    """Trace-relevant identity of the model adaptation for the cache key.
+
+    None -> the model already speaks the plan's convention (legacy plain
+    ``model_fn``); a tuple -> a Denoiser binding or a plain-model
+    prediction-type conversion (both change the traced graph).
+    """
+    target = get_family(plan.spec.name).model_convention(plan.spec)
+    if isinstance(model_fn, Denoiser):
+        return model_fn.statics(target)
+    pred = plan.spec.prediction
+    if pred is not None and \
+            canonical_prediction(pred) != canonical_prediction(target):
+        return ("convert", canonical_prediction(pred),
+                canonical_prediction(target), plan.spec.resolve_schedule())
+    return None
+
+
+def _bind_model(m, adapter, cond, scale):
+    """Build the executor-facing ``model_fn(x, t)`` closure at trace time,
+    folding in the traced ``cond``/``scale`` arguments."""
+    if adapter is None:
+        return m
+    if adapter[0] == "denoiser":
+        return m.as_model_fn(adapter[3], cond, scale)
+    _, src, dst, schedule = adapter  # plain model_fn, converted output
+    return lambda x, t: convert_prediction(m(x, t), x, t, src, dst, schedule)
+
+
+def cond_struct(cond):
+    """Hashable shape/dtype structure of a conditioning pytree — the only
+    part of ``cond`` that keys an executor (and a serving bucket); values
+    stay traced data. The single definition both layers share: if the
+    compile-cache key and the bucket key ever hashed cond differently,
+    buckets would split or executors collide."""
+    if cond is None:
+        return None
+    leaves, treedef = jax.tree_util.tree_flatten(cond)
+    return (treedef, tuple((tuple(l.shape), jnp.dtype(l.dtype).name)
+                           for l in leaves))
+
+
+def _check_model(plan: SamplerPlan, model_fn, cond, guidance_scale):
+    """Validate the model argument against the spec's denoiser fields and
+    canonicalize (cond, scale) into traced arrays."""
+    spec = plan.spec
+    if isinstance(model_fn, Denoiser):
+        if bool(spec.guidance) != bool(model_fn.guidance):
+            raise ValueError(
+                f"spec.guidance={spec.guidance} but the Denoiser has "
+                f"guidance={model_fn.guidance}; the spec is what serving "
+                "buckets and NFE accounting read — keep them consistent")
+        if spec.prediction is not None and \
+                canonical_prediction(spec.prediction) != model_fn.prediction:
+            raise ValueError(
+                f"spec.prediction={spec.prediction!r} but the Denoiser "
+                f"predicts {model_fn.prediction!r}")
+    else:
+        if spec.guidance:
+            raise ValueError(
+                "spec.guidance=True needs a Denoiser model (classifier-"
+                "free guidance requires the cond/uncond network contract)")
+        if cond is not None:
+            raise ValueError(
+                "conditioning requires a Denoiser model; a plain "
+                "model_fn(x, t) has no cond input")
+    if cond is not None:
+        cond = jax.tree.map(jnp.asarray, cond)
+    scale = jnp.asarray(guidance_scale, jnp.float32)
+    guided = isinstance(model_fn, Denoiser) and model_fn.guidance
+    if not guided and bool(jnp.any(scale != 1.0)):
+        raise ValueError(
+            "guidance_scale has no effect without a guidance-enabled "
+            "Denoiser — it would be silently dropped; wrap the network "
+            "in Denoiser(..., guidance=True) (and set spec.guidance)")
+    return cond, scale
+
+
 def _mesh_ident(mesh: Mesh | None, data_axis: str):
     """Hashable identity of a mesh placement — part of the compile-cache
     key so sharded and unsharded executables never collide, and two
@@ -372,26 +487,30 @@ def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
               trajectory: bool, batch: int | None, *,
               model_key: Hashable | None = None,
               mesh: Mesh | None = None, data_axis: str = "data",
-              donate: bool = False) -> _CacheEntry:
+              donate: bool = False, cond=None) -> _CacheEntry:
     """LRU-cached jitted executor.
 
     Keyed on (family name, executor statics, per-request shape, dtype,
     model token, trajectory, batch lane count (None = unbatched),
-    mesh/sharding identity). The lane count is part of the key — not left
+    mesh/sharding identity, denoiser-adapter statics, conditioning
+    shape/dtype structure). The lane count is part of the key — not left
     to ``jax.jit``'s per-aval cache — so every serving bucket owns its
     entry and its AOT executable (``warmup``) can never be shadowed by a
     different bucket size. The model token is a
     caller-supplied stable ``model_key`` when given, else a *weakref*
-    identity of ``model_fn`` — the cache holds no strong reference to the
+    identity of ``model_fn`` (a plain callable or a Denoiser) — the cache
+    holds no strong reference to the
     model (closures over full param trees would otherwise pin up to
     ``_COMPILE_CACHE_MAX`` param copies), and entries are evicted eagerly
     when their model is garbage-collected.
 
-    ``plan.arrays`` are traced arguments, so two plans of the same
+    ``plan.arrays``, the conditioning pytree, and the guidance scale are
+    traced arguments, so two plans of the same
     family/statics (different tau, grid, or coefficient values at the same
-    step count) share one compilation; a different step count changes
-    argument shapes and retraces inside the same entry via ``jax.jit``'s
-    own cache.
+    step count), a new conditioning batch of the same structure, or a new
+    guidance scale all share one compilation; a different step count
+    changes argument shapes and retraces inside the same entry via
+    ``jax.jit``'s own cache.
     """
     cell_ref = _weak(model_fn)
     if model_key is not None:
@@ -405,9 +524,11 @@ def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
             # are all weakly keyable)
             token = ("strong", id(model_fn))
             cell_ref = None
+    adapter = _adapter_statics(plan, model_fn)
     key = (plan.spec.name, plan.statics, tuple(shape),
            jnp.dtype(dtype).name, token, trajectory, batch,
-           _mesh_ident(mesh, data_axis), bool(donate))
+           _mesh_ident(mesh, data_axis), bool(donate), adapter,
+           cond_struct(cond))
     entry = _COMPILE_CACHE.get(key)
     if entry is not None:
         _COMPILE_CACHE.move_to_end(key)
@@ -431,24 +552,30 @@ def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
     cell = [cell_ref if cell_ref is not None else model_fn]
 
     if batch is not None:
-        def run(arrays, xs, keys):
+        def run(arrays, xs, keys, cond, scale):
             m = _deref_model(cell)
             return jax.vmap(
-                lambda x, k: family.execute(
-                    statics, arrays, m, x, k, trajectory)
-            )(xs, keys)
+                lambda x, k, c, s: family.execute(
+                    statics, arrays, _bind_model(m, adapter, c, s), x, k,
+                    trajectory)
+            )(xs, keys, cond, scale)
     else:
-        def run(arrays, x, k):
+        def run(arrays, x, k, cond, scale):
+            m = _deref_model(cell)
             return family.execute(
-                statics, arrays, _deref_model(cell), x, k, trajectory)
+                statics, arrays, _bind_model(m, adapter, cond, scale),
+                x, k, trajectory)
 
     jit_kw: dict = {}
     if mesh is not None:
         rep = NamedSharding(mesh, P())
+        lane = NamedSharding(mesh, P(data_axis))
         jit_kw["in_shardings"] = (
             rep,  # plan arrays: replicated (prefix over the whole pytree)
             NamedSharding(mesh, P(data_axis, *([None] * len(shape)))),
-            NamedSharding(mesh, P(data_axis)),
+            lane,   # per-lane PRNG keys
+            lane,   # cond pytree: leading request axis (prefix)
+            lane,   # per-lane guidance scale
         )
         if donate:
             jit_kw["donate_argnums"] = (1,)  # the x_T carry buffer
@@ -459,17 +586,17 @@ def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
     return entry
 
 
-def _call(entry: _CacheEntry, arrays, x, k):
+def _call(entry: _CacheEntry, arrays, x, k, cond, scale):
     if entry.aot is not None:
         try:
-            return entry.aot(arrays, x, k)
+            return entry.aot(arrays, x, k, cond, scale)
         except TypeError:
             # aval mismatch vs the warmed bucket (e.g. a re-planned step
             # count changed the coefficient-table shapes, or a typed key
             # array): fall back to the jit wrapper, which retraces within
             # this entry; counted so the degradation is observable
             _CACHE_STATS["aot_fallbacks"] += 1
-    return entry.fn(arrays, x, k)
+    return entry.fn(arrays, x, k, cond, scale)
 
 
 def _default_donate() -> bool:
@@ -479,9 +606,17 @@ def _default_donate() -> bool:
 
 # -------------------------------------------------------------- entrypoints
 def sample(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
-           key: jax.Array, *, trajectory: bool = False,
+           key: jax.Array, *, cond=None, guidance_scale=1.0,
+           trajectory: bool = False,
            model_key: Hashable | None = None):
     """Run one sampler end-to-end: ``x_T -> x_0``.
+
+    ``model_fn`` is a plain ``(x, t)`` callable speaking the plan's
+    parameterization, or a :class:`~repro.core.denoiser.Denoiser`
+    wrapping a raw eps/x0/v network — in which case ``cond`` (a pytree of
+    arrays threaded alongside ``x``) and ``guidance_scale`` are forwarded
+    to it as *traced* arguments: sweeping the scale or swapping the
+    conditioning values reuses one compilation.
 
     With ``trajectory=True`` returns ``(x_0, traj)`` where ``traj`` is a
     dict of per-step stacked outputs — ``traj["x"]`` the state after each
@@ -491,30 +626,38 @@ def sample(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
     key with a caller-stable token (so re-created but functionally equal
     model closures share one executor).
     """
+    cond, scale = _check_model(plan, model_fn, cond, guidance_scale)
     entry = _compiled(plan, model_fn, x_T.shape, x_T.dtype, trajectory,
-                      None, model_key=model_key)
-    return _call(entry, plan.arrays, x_T, key)
+                      None, model_key=model_key, cond=cond)
+    return _call(entry, plan.arrays, x_T, key, cond, scale)
 
 
 def sample_batched(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
-                   keys: jax.Array, *, trajectory: bool = False,
+                   keys: jax.Array, *, cond=None, guidance_scale=1.0,
+                   trajectory: bool = False,
                    model_key: Hashable | None = None):
     """Fleet-style generation: vmap the executor over a leading key axis.
 
     ``keys`` is a stacked PRNG-key array ``[K, ...]`` and ``x_T`` carries a
     matching leading axis ``[K, *shape]`` (one initial noise per key).
+    With a Denoiser model, ``cond`` leaves carry the same leading ``K``
+    axis (per-request conditioning) and ``guidance_scale`` is a scalar or
+    a ``[K]`` per-request vector.
     """
     if x_T.shape[0] != keys.shape[0]:
         raise ValueError(
             f"leading axes must match: x_T {x_T.shape[0]} vs keys "
             f"{keys.shape[0]}")
+    cond, scale = _check_model(plan, model_fn, cond, guidance_scale)
+    scale = jnp.broadcast_to(scale, (int(x_T.shape[0]),))
     entry = _compiled(plan, model_fn, x_T.shape[1:], x_T.dtype, trajectory,
-                      int(x_T.shape[0]), model_key=model_key)
-    return _call(entry, plan.arrays, x_T, keys)
+                      int(x_T.shape[0]), model_key=model_key, cond=cond)
+    return _call(entry, plan.arrays, x_T, keys, cond, scale)
 
 
 def sample_sharded(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
                    keys: jax.Array, *, mesh: Mesh, data_axis: str = "data",
+                   cond=None, guidance_scale=1.0,
                    trajectory: bool = False,
                    model_key: Hashable | None = None,
                    donate: bool | None = None):
@@ -522,7 +665,9 @@ def sample_sharded(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
     ``data`` axis of ``mesh``.
 
     Inputs get :class:`NamedSharding` placements (requests split over
-    ``data_axis``, plan arrays replicated); the ``x_T`` carry buffer is
+    ``data_axis``, plan arrays replicated; conditioning leaves and the
+    per-request guidance-scale vector ride the request axis too); the
+    ``x_T`` carry buffer is
     donated (``donate_argnums``) on backends that implement donation.
     The compile-cache key carries the mesh/sharding identity, so sharded
     and unsharded executables for the same bucket never collide.
@@ -541,21 +686,28 @@ def sample_sharded(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
             f"{data_axis!r} (size {n_data}); pad the bucket first "
             "(repro.serve.sharding.align_bucket_sizes)")
     donate = _default_donate() if donate is None else donate
+    cond, scale = _check_model(plan, model_fn, cond, guidance_scale)
+    scale = jnp.broadcast_to(scale, (int(x_T.shape[0]),))
     entry = _compiled(plan, model_fn, x_T.shape[1:], x_T.dtype, trajectory,
                       int(x_T.shape[0]), model_key=model_key, mesh=mesh,
-                      data_axis=data_axis, donate=donate)
-    return _call(entry, plan.arrays, x_T, keys)
+                      data_axis=data_axis, donate=donate, cond=cond)
+    return _call(entry, plan.arrays, x_T, keys, cond, scale)
 
 
 def warmup(plan: SamplerPlan, model_fn: ModelFn, shape, dtype=jnp.float32,
            *, batch: int | None = None, mesh: Mesh | None = None,
-           data_axis: str = "data", trajectory: bool = False,
+           data_axis: str = "data", cond=None, trajectory: bool = False,
            model_key: Hashable | None = None,
            donate: bool | None = None):
     """AOT-compile one bucket: ``jit(run).lower(...).compile()``.
 
     ``shape`` is the per-request latent shape; ``batch`` the bucket size
-    (None = the unbatched executor). The compiled executable is stored on
+    (None = the unbatched executor); ``cond`` a *per-request* conditioning
+    prototype (arrays or ``ShapeDtypeStruct`` leaves — only shapes/dtypes
+    matter; the batch axis is prepended here, mirroring ``x``). Under
+    classifier-free guidance the traced network eval carries a doubled
+    lane count — warming with the right ``cond`` structure is what keeps
+    the guided hot path trace-free. The compiled executable is stored on
     the bucket's compile-cache entry, so subsequent ``sample_batched`` /
     ``sample_sharded`` calls for the same bucket dispatch straight to it —
     no tracing on the serving hot path. Idempotent per bucket; returns the
@@ -563,9 +715,17 @@ def warmup(plan: SamplerPlan, model_fn: ModelFn, shape, dtype=jnp.float32,
     """
     if mesh is not None:
         donate = _default_donate() if donate is None else donate
+
+    def _cond_aval(c):
+        sh = tuple(c.shape)
+        if batch is not None:
+            sh = (batch,) + sh
+        return jax.ShapeDtypeStruct(sh, jnp.dtype(c.dtype))
+
+    cond_s = None if cond is None else jax.tree.map(_cond_aval, cond)
     entry = _compiled(plan, model_fn, tuple(shape), dtype, trajectory,
                       batch, model_key=model_key, mesh=mesh,
-                      data_axis=data_axis, donate=bool(donate))
+                      data_axis=data_axis, donate=bool(donate), cond=cond_s)
     if entry.aot is None:
         arrays_s = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), plan.arrays)
@@ -577,10 +737,12 @@ def warmup(plan: SamplerPlan, model_fn: ModelFn, shape, dtype=jnp.float32,
             x_s = jax.ShapeDtypeStruct((batch,) + tuple(shape),
                                        jnp.dtype(dtype))
             k_s = jax.ShapeDtypeStruct((batch,) + proto.shape, proto.dtype)
+            s_s = jax.ShapeDtypeStruct((batch,), jnp.float32)
         else:
             x_s = jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
             k_s = jax.ShapeDtypeStruct(proto.shape, proto.dtype)
-        entry.aot = entry.fn.lower(arrays_s, x_s, k_s).compile()
+            s_s = jax.ShapeDtypeStruct((), jnp.float32)
+        entry.aot = entry.fn.lower(arrays_s, x_s, k_s, cond_s, s_s).compile()
     return entry.aot
 
 
@@ -602,24 +764,30 @@ class Sampler:
         return self.spec.nfe
 
     def sample(self, model_fn: ModelFn, x_T: jnp.ndarray, key: jax.Array,
-               *, trajectory: bool = False,
+               *, cond=None, guidance_scale=1.0, trajectory: bool = False,
                model_key: Hashable | None = None):
-        return sample(self.plan, model_fn, x_T, key, trajectory=trajectory,
+        return sample(self.plan, model_fn, x_T, key, cond=cond,
+                      guidance_scale=guidance_scale, trajectory=trajectory,
                       model_key=model_key)
 
     def sample_batched(self, model_fn: ModelFn, x_T: jnp.ndarray,
-                       keys: jax.Array, *, trajectory: bool = False,
+                       keys: jax.Array, *, cond=None, guidance_scale=1.0,
+                       trajectory: bool = False,
                        model_key: Hashable | None = None):
-        return sample_batched(self.plan, model_fn, x_T, keys,
+        return sample_batched(self.plan, model_fn, x_T, keys, cond=cond,
+                              guidance_scale=guidance_scale,
                               trajectory=trajectory, model_key=model_key)
 
     def sample_sharded(self, model_fn: ModelFn, x_T: jnp.ndarray,
                        keys: jax.Array, *, mesh: Mesh,
-                       data_axis: str = "data", trajectory: bool = False,
+                       data_axis: str = "data", cond=None,
+                       guidance_scale=1.0, trajectory: bool = False,
                        model_key: Hashable | None = None,
                        donate: bool | None = None):
         return sample_sharded(self.plan, model_fn, x_T, keys, mesh=mesh,
-                              data_axis=data_axis, trajectory=trajectory,
+                              data_axis=data_axis, cond=cond,
+                              guidance_scale=guidance_scale,
+                              trajectory=trajectory,
                               model_key=model_key, donate=donate)
 
     def init_noise(self, key: jax.Array, shape, dtype=jnp.float32):

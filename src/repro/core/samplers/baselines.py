@@ -6,10 +6,14 @@ and a pure scan executor, mirroring the SA-Solver implementation so
 microbenchmarks compare like with like. The legacy functions remain as
 shims over these families.
 
-All executors take a *data-prediction* model ``model_fn(x, t) -> x0_hat``.
-Numeric hyperparameters (eta, tau, churn) are baked into the planned
-arrays, not the executors, so sweeping them at a fixed step count reuses
-one compilation.
+All executors consume a *data-prediction* ``model_fn(x, t) -> x0_hat`` —
+but that is the registry's ``model_convention`` contract, not an
+assumption about the caller's network: the base layer's denoiser adapter
+(``repro.core.denoiser``) converts any wrapped eps-/x0-/v-prediction
+network (guided or not) to this convention in-graph before the executor
+sees it. Numeric hyperparameters (eta, tau, churn) are baked into the
+planned arrays, not the executors, so sweeping them at a fixed step count
+reuses one compilation.
 """
 
 from __future__ import annotations

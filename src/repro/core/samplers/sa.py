@@ -18,6 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...kernels.sa_update import sa_update
 from ..coefficients import SolverTables, build_tables
 from .base import SamplerFamily, SamplerSpec, register_sampler
 
@@ -82,7 +83,7 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
             coeffs = jnp.concatenate([c_new[None], coeffs])
             buf = jnp.concatenate([e_new[None], buf], axis=0)
         if use_kernel:
-            from ...kernels.sa_update import sa_update
+            # packed-coefficient convention: [decay, noise, b_0..b_{P-1}]
             cvec = jnp.concatenate([decay_i[None], noise_i[None], coeffs])
             return sa_update(x_prev, buf, xi, cvec)
         # sum_j coeffs[j] * buf[j]  — einsum keeps it a single contraction
@@ -99,6 +100,7 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
 
         x_pred = combine(decay_i, x, dev["pred"][i], buf, noise_i, xi)
         e_new = model_fn(x_pred, t_next).astype(jnp.float32)
+        x_eval = x_pred  # the state e_new was actually evaluated at
         if use_corrector:
             x_next = combine(
                 decay_i, x, dev["corr"][i], buf, noise_i, xi,
@@ -106,14 +108,19 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
             )
             if pece:
                 e_new = model_fn(x_next, t_next).astype(jnp.float32)
+                x_eval = x_next
         else:
             x_next = x_pred
         buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
         if trajectory:
             if parameterization == "data":
                 x0_hat = e_new
-            else:  # eps-hat -> x0-hat at t_{i+1}
-                x0_hat = (x_next - dev["sigmas"][i + 1] * e_new) \
+            else:  # eps-hat -> x0-hat at t_{i+1}, reconstructed from the
+                # state the eval saw (under PEC+corrector x_next moved
+                # away from x_pred; pairing it with e_new(x_pred) made
+                # the streamed preview inconsistent — amplified by
+                # 1/alpha at early steps)
+                x0_hat = (x_eval - dev["sigmas"][i + 1] * e_new) \
                     / dev["alphas"][i + 1]
             return (x_next, buf), {"x": x_next, "x0": x0_hat}
         return (x_next, buf), None
@@ -145,4 +152,7 @@ register_sampler(SamplerFamily(
     statics=sa_statics,
     nfe_of=_sa_nfe,
     steps_from_nfe=_sa_steps_from_nfe,
+    # the executor consumes whatever spec.parameterization names — the
+    # denoiser adapter converts any wrapped network to it in-graph
+    model_convention=lambda spec: spec.parameterization,
 ))

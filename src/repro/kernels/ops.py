@@ -27,8 +27,10 @@ def on_tpu() -> bool:
 
 
 def sa_update(x, buf, xi, coeffs, *, mode: str = "auto"):
+    """coeffs [P+2] packed as (decay, noise, b_0..b_{P-1}) — one
+    convention for the jnp oracle and the Pallas kernel alike."""
     if mode == "jnp" or (mode == "auto" and not on_tpu()):
-        return ref.sa_update_ref(x, buf, xi, coeffs[0], coeffs[1], coeffs[2:])
+        return ref.sa_update_ref(x, buf, xi, coeffs)
     return _sa_kernel(x, buf, xi, coeffs)  # interpret auto-detects backend
 
 

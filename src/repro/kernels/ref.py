@@ -1,5 +1,8 @@
-"""Pure-jnp oracles for every Pallas kernel. Tests assert allclose between
-these and the kernels (interpret=True on CPU) over shape/dtype sweeps."""
+"""Pure-jnp oracles for every Pallas kernel, plus analytic ground-truth
+denoisers for the adapter layer. Tests assert allclose between the oracles
+and the kernels (interpret=True on CPU) over shape/dtype sweeps; the
+denoiser oracles give ``repro.core.denoiser`` equivalence tests an exact
+eps/x0/v network to wrap."""
 
 from __future__ import annotations
 
@@ -8,16 +11,19 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sa_update_ref", "flash_attention_ref", "wkv_ref"]
+__all__ = ["sa_update_ref", "flash_attention_ref", "wkv_ref",
+           "denoiser_oracles"]
 
 
-def sa_update_ref(x, buf, xi, decay, noise, coeffs):
-    """x [*shape]; buf [P, *shape]; xi [*shape]; decay/noise scalars;
-    coeffs [P].  x' = decay*x + sum_j coeffs[j]*buf[j] + noise*xi."""
-    acc = jnp.einsum("p,p...->...", coeffs.astype(jnp.float32),
-                     buf.astype(jnp.float32))
-    return (decay * x.astype(jnp.float32) + acc
-            + noise * xi.astype(jnp.float32)).astype(x.dtype)
+def sa_update_ref(x, buf, xi, coeffs):
+    """x [*shape]; buf [P, *shape]; xi [*shape]; coeffs [P+2] packed as
+    (decay, noise, b_0..b_{P-1}) — the same packed-coefficient convention
+    the Pallas kernel takes.
+    x' = decay*x + sum_j b_j*buf[j] + noise*xi."""
+    coeffs = coeffs.astype(jnp.float32)
+    acc = jnp.einsum("p,p...->...", coeffs[2:], buf.astype(jnp.float32))
+    return (coeffs[0] * x.astype(jnp.float32) + acc
+            + coeffs[1] * xi.astype(jnp.float32)).astype(x.dtype)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True):
@@ -40,3 +46,29 @@ def wkv_ref(r, k, v, logw, u, S0):
     """Sequential RWKV6 recurrence; delegates to the model-level oracle."""
     from ..models.rwkv6 import wkv_sequential
     return wkv_sequential(r, k, v, logw, u, S0)
+
+
+def denoiser_oracles(schedule, gmm=None):
+    """Analytic ground-truth denoiser networks for all three prediction
+    types, sharing ONE closed-form posterior.
+
+    Returns ``{"x0": net, "eps": net, "v": net}`` where each net is the
+    ``(x, t, cond) -> prediction`` contract :class:`repro.core.denoiser.
+    Denoiser` wraps. The nets are exact (Gaussian-mixture posterior, see
+    ``repro.core.oracle``), and ``cond`` — when not None — shifts every
+    mixture mean by the cond vector, which is again exact: the adapter
+    equivalence tests get a conditional model whose guided/unguided and
+    eps/x0/v-wrapped solves all have a single analytic reference.
+    """
+    from ..core.oracle import GMM
+    gmm = GMM.default_2d() if gmm is None else gmm
+    makers = {
+        "x0": gmm.x0_prediction, "eps": gmm.eps_prediction,
+        "v": gmm.v_prediction,
+    }
+
+    def net(kind):
+        fn = makers[kind]
+        return lambda x, t, cond: fn(schedule, x, t, shift=cond)
+
+    return {kind: net(kind) for kind in makers}

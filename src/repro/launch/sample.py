@@ -1,7 +1,8 @@
 """Diffusion sampling driver: any registered sampler over any backbone.
 
     PYTHONPATH=src python -m repro.launch.sample --arch dit-s --smoke \
-        --sampler sa --batch 8 --seq 64 --nfe 20 --tau 1.0
+        --sampler sa --batch 8 --seq 64 --nfe 20 --tau 1.0 \
+        --prediction v --guidance-scale 3.0
 
 This is the paper's technique as a first-class serving feature: the
 backbone (any arch built with denoiser_latent) is the x0-prediction model
@@ -11,6 +12,17 @@ code changes. ``--nfe`` is routed through ``SamplerSpec.from_nfe`` so the
 model-evaluation budget means the same thing for every sampler and mode
 (PEC: NFE = steps + 1, PECE: 2*steps + 1, DDIM-like: steps, Heun-like:
 2*steps).
+
+``--prediction`` re-expresses the backbone in any checkpoint convention
+(eps / x0 / v — the zoo backbones are natively x0) and wraps it in the
+:class:`repro.core.denoiser.Denoiser` adapter, which converts back to the
+plan's parameterization in-graph — the round trip exercises exactly the
+code path a real eps- or v-prediction checkpoint takes.
+``--guidance-scale`` enables classifier-free guidance (cond/uncond fused
+into one doubled-lane network eval; the scale is traced data), and
+``--cond-file`` loads a ``.npy`` conditioning array threaded to the
+network alongside ``x`` (the unconditional zoo backbones consume it as an
+input-space prompt added to the latent).
 """
 
 import argparse
@@ -18,9 +30,10 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import get_config, get_smoke
-from ..core import get_schedule
+from ..core import Denoiser, convert_prediction, get_schedule
 from ..core.samplers import SamplerSpec, Sampler, list_samplers
 from ..models import build_model, init_params
 
@@ -33,6 +46,20 @@ def build_denoiser(arch: str, smoke: bool, latent: int | None):
     model = build_model(cfg)
     params = init_params(jax.random.PRNGKey(0), model.param_defs(), jnp.float32)
     return cfg, model, params
+
+
+def as_prediction_network(model, params, schedule, prediction: str):
+    """Re-express an x0-prediction backbone as an eps/x0/v network with a
+    cond input — the ``(x, t, cond) -> prediction`` contract Denoiser
+    wraps. ``cond`` (when given) is an input-space prompt added to the
+    latent; the output is converted in-graph to ``prediction``."""
+
+    def network(x, t, cond):
+        h = x if cond is None else x + cond
+        x0 = model.denoise(params, h, t)
+        return convert_prediction(x0, x, t, "x0", prediction, schedule)
+
+    return network
 
 
 def main():
@@ -51,32 +78,55 @@ def main():
     ap.add_argument("--grid", default="logsnr",
                     choices=["time", "logsnr", "karras"])
     ap.add_argument("--schedule", default="vp_linear")
+    ap.add_argument("--prediction", default="data",
+                    choices=["data", "x0", "noise", "eps", "v"],
+                    help="network output convention the backbone is "
+                    "served as (adapter converts in-graph)")
+    ap.add_argument("--guidance-scale", type=float, default=None,
+                    help="classifier-free guidance scale (enables the "
+                    "guided executor; scale itself is traced data)")
+    ap.add_argument("--cond-file", default=None,
+                    help=".npy conditioning array, broadcastable to the "
+                    "latent (seq, dz)")
     args = ap.parse_args()
 
     cfg, model, params = build_denoiser(args.arch, args.smoke, args.latent)
     dz = cfg.denoiser_latent
+    schedule = get_schedule(args.schedule)
+    guidance = args.guidance_scale is not None
+    g_scale = 1.0 if args.guidance_scale is None else args.guidance_scale
     spec = SamplerSpec.from_nfe(
         args.sampler, args.nfe,
-        schedule=get_schedule(args.schedule), grid=args.grid,
+        schedule=schedule, grid=args.grid,
         tau=args.tau, predictor_order=args.predictor,
         corrector_order=args.corrector, mode=args.mode,
+        prediction=args.prediction, guidance=guidance,
     )
     sampler = Sampler(spec)
 
-    def model_fn(x, t):
-        return model.denoise(params, x, t)
+    cond = None
+    if args.cond_file is not None:
+        cond = jnp.asarray(np.load(args.cond_file), jnp.float32)
+    model_fn = Denoiser(
+        as_prediction_network(model, params, schedule, args.prediction),
+        schedule, prediction=args.prediction, guidance=guidance)
 
     xT = sampler.init_noise(jax.random.PRNGKey(1), (args.batch, args.seq, dz))
     t0 = time.perf_counter()
     x0 = jax.block_until_ready(
-        sampler.sample(model_fn, xT, jax.random.PRNGKey(2)))
+        sampler.sample(model_fn, xT, jax.random.PRNGKey(2), cond=cond,
+                       guidance_scale=g_scale))
     t1 = time.perf_counter()
     x0b = jax.block_until_ready(
-        sampler.sample(model_fn, xT, jax.random.PRNGKey(3)))
+        sampler.sample(model_fn, xT, jax.random.PRNGKey(3), cond=cond,
+                       guidance_scale=g_scale))
     t2 = time.perf_counter()
     print(f"arch={cfg.name} latent={dz} sampler={args.sampler} "
-          f"NFE={sampler.nfe} (requested {args.nfe}) steps={spec.n_steps} "
-          f"tau={args.tau} P{args.predictor}C{args.corrector} {args.mode}")
+          f"NFE={sampler.nfe} (network NFE={spec.network_nfe}) "
+          f"(requested {args.nfe}) steps={spec.n_steps} "
+          f"tau={args.tau} P{args.predictor}C{args.corrector} {args.mode} "
+          f"prediction={args.prediction} "
+          f"guidance={g_scale if guidance else 'off'}")
     print(f"compile+run {t1-t0:.2f}s, steady {t2-t1:.2f}s; "
           f"out mean={float(jnp.mean(x0)):.4f} std={float(jnp.std(x0)):.4f} "
           f"finite={bool(jnp.all(jnp.isfinite(x0)))}")

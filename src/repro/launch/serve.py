@@ -9,6 +9,11 @@
     PYTHONPATH=src python -m repro.launch.serve --mode diffusion \
         --arch dit-s --sampler sa --requests 12 --nfe 15 --tau 0.6 --stream
 
+    # ... serving the backbone as a v-prediction checkpoint under
+    # classifier-free guidance (denoiser adapter; scale is traced data):
+    PYTHONPATH=src python -m repro.launch.serve --mode diffusion \
+        --arch dit-s --prediction v --guidance-scale 3.0 --requests 8
+
 ``--mode lm`` runs a real (reduced-config on CPU) decode loop: prefill
 the prompt batch, then greedy-decode tokens one step at a time against
 the cache — the same ``prefill``/``decode_step`` functions the dry-run
@@ -90,13 +95,53 @@ def build_denoiser_model_fn(arch: str, latent: int | None, smoke: bool):
     return cfg, lambda x, t: model.denoise(params, x[None], t)[0]
 
 
+def build_denoiser_network(arch: str, latent: int | None, smoke: bool,
+                           schedule, prediction: str):
+    """(cfg, Denoiser-contract network) — the per-request backbone
+    re-expressed as an eps/x0/v ``(x, t, cond)`` network, with ``cond``
+    consumed as an input-space prompt (the zoo backbones are
+    unconditional)."""
+    from .sample import as_prediction_network
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    if getattr(cfg, "denoiser_latent", None) is None:
+        cfg = dataclasses.replace(cfg, denoiser_latent=latent or 8)
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_defs(),
+                         jnp.float32)
+
+    class _PerRequest:
+        """Backbone view that re-adds the batch axis per request."""
+
+        @staticmethod
+        def denoise(p, x, t):
+            return model.denoise(p, x[None], t)[0]
+
+    return cfg, as_prediction_network(_PerRequest, params, schedule,
+                                      prediction)
+
+
 def serve_diffusion(args) -> None:
-    from ..core import get_schedule
+    import numpy as np
+
+    from ..core import Denoiser, get_schedule
     from ..core.samplers import SamplerSpec
     from ..serve import ServeEngine, auto_mesh
 
-    cfg, model_fn = build_denoiser_model_fn(args.arch, args.latent,
-                                            smoke=True)
+    schedule = get_schedule("vp_linear")
+    guidance = args.guidance_scale is not None
+    adapted = guidance or args.prediction != "data" \
+        or args.cond_file is not None
+    if adapted:
+        cfg, network = build_denoiser_network(
+            args.arch, args.latent, True, schedule, args.prediction)
+        model_fn = Denoiser(network, schedule, prediction=args.prediction,
+                            guidance=guidance)
+    else:
+        cfg, model_fn = build_denoiser_model_fn(args.arch, args.latent,
+                                                smoke=True)
+    cond = None
+    if args.cond_file is not None:
+        cond = jnp.asarray(np.load(args.cond_file), jnp.float32)
     mesh = auto_mesh() if args.sharded else None
     if args.sharded and mesh is None:
         print("--sharded: only one device visible, falling back to the "
@@ -112,13 +157,16 @@ def serve_diffusion(args) -> None:
     engine = ServeEngine(
         model_fn, bucket_sizes=tuple(args.bucket_sizes), mesh=mesh,
         stream=args.stream, on_result=show if args.stream else None,
-        model_key=("denoiser", cfg.name))
+        model_key=("denoiser", cfg.name, args.prediction, guidance))
     spec = SamplerSpec.from_nfe(
-        args.sampler, args.nfe, schedule=get_schedule("vp_linear"),
-        predictor_order=3, corrector_order=1, tau=args.tau)
+        args.sampler, args.nfe, schedule=schedule,
+        predictor_order=3, corrector_order=1, tau=args.tau,
+        prediction=args.prediction if adapted else None,
+        guidance=guidance)
     shape = (args.seq, cfg.denoiser_latent)
+    g_scale = 1.0 if args.guidance_scale is None else args.guidance_scale
     for _ in range(args.requests):
-        engine.submit(spec, shape)
+        engine.submit(spec, shape, cond=cond, guidance_scale=g_scale)
 
     results = engine.run()
     assert len(results) == args.requests
@@ -130,9 +178,12 @@ def serve_diffusion(args) -> None:
           f"{s['microbatches']} microbatches ({s['padded_slots']} padded "
           f"lanes, {s['warmups']} bucket compiles, mesh={mesh_desc})")
     print(f"{s['requests_per_s']:.2f} requests/s, "
-          f"{s['model_evals_per_s']:.1f} model-evals/s "
-          f"(NFE={spec.nfe} x real requests only; sampler={args.sampler}, "
-          f"arch={cfg.name})")
+          f"{s['model_evals_per_s']:.1f} model-evals/s, "
+          f"{s['network_evals_per_s']:.1f} network-evals/s "
+          f"(NFE={spec.nfe}, network NFE={spec.network_nfe} x real "
+          f"requests only; sampler={args.sampler}, arch={cfg.name}, "
+          f"prediction={args.prediction}, "
+          f"guidance={args.guidance_scale if guidance else 'off'})")
     print("compile cache:", s["compile_cache"])
 
 
@@ -161,6 +212,17 @@ def main():
                     help="stream per-step denoised previews")
     ap.add_argument("--sharded", action="store_true",
                     help="place the request axis on a mesh data axis")
+    ap.add_argument("--prediction", default="data",
+                    choices=["data", "x0", "noise", "eps", "v"],
+                    help="serve the backbone as this checkpoint "
+                    "convention (denoiser adapter converts in-graph)")
+    ap.add_argument("--guidance-scale", type=float, default=None,
+                    help="classifier-free guidance scale for every "
+                    "request (scale is traced data — per-request sweeps "
+                    "reuse one executable)")
+    ap.add_argument("--cond-file", default=None,
+                    help=".npy per-request conditioning, broadcastable "
+                    "to the latent")
     args = ap.parse_args()
     if args.arch is None:
         args.arch = "starcoder2-3b" if args.mode == "lm" else "dit-s"

@@ -58,7 +58,8 @@ Drivers: ``python -m repro.launch.serve --mode diffusion`` (full CLI),
 """
 
 from .batching import (MicroBatch, PAD_RID, Request, bucket_key,
-                       choose_bucket, fold_keys, form_microbatches)
+                       choose_bucket, cond_struct, fold_keys,
+                       form_microbatches)
 from .engine import ServeEngine, ServeResult
 from .sharding import align_bucket_sizes, auto_mesh, data_axis_size
 
@@ -72,6 +73,7 @@ __all__ = [
     "auto_mesh",
     "bucket_key",
     "choose_bucket",
+    "cond_struct",
     "data_axis_size",
     "fold_keys",
     "form_microbatches",

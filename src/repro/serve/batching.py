@@ -1,11 +1,15 @@
 """Plan-keyed continuous microbatching for the diffusion serve engine.
 
 Requests are grouped by **bucket key** — ``(SamplerSpec, latent shape,
-dtype)`` — because that tuple determines the compiled executor: the spec
-fixes the sampler family and its trace-relevant statics, the shape/dtype
-fix the argument avals. Everything else (tau value, coefficient tables,
-the solve grid values) is traced data, so requests that differ only in
-those ride the same executable.
+dtype, cond structure)`` — because that tuple determines the compiled
+executor: the spec
+fixes the sampler family and its trace-relevant statics (including the
+denoiser adapter's prediction type and the guidance on/off flag), the
+shape/dtype fix the argument avals, and the conditioning pytree joins
+only by its shape/dtype *structure*. Everything else (tau value,
+coefficient tables, the solve grid values, the conditioning values, the
+guidance scale) is traced data, so requests that differ only in
+those ride the same executable — a guidance-scale sweep never recompiles.
 
 Within a bucket-key group, requests are chunked FIFO into microbatches of
 at most ``max(bucket_sizes)``; a ragged tail takes the *smallest*
@@ -33,7 +37,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from ..core.samplers import SamplerSpec
+from ..core.samplers import SamplerSpec, cond_struct
 
 __all__ = [
     "PAD_RID",
@@ -41,6 +45,7 @@ __all__ = [
     "MicroBatch",
     "bucket_key",
     "choose_bucket",
+    "cond_struct",
     "form_microbatches",
     "fold_keys",
 ]
@@ -52,17 +57,23 @@ PAD_RID = 2**31 - 1
 
 @dataclasses.dataclass(frozen=True)
 class Request:
-    """One sampling request: which sampler configuration, what latent."""
+    """One sampling request: which sampler configuration, what latent,
+    and — for Denoiser-backed engines — its conditioning pytree and
+    guidance scale. ``cond`` and ``guidance_scale`` are *data*: they ride
+    the executor as traced arguments and never force a recompile (only
+    cond's shape/dtype structure enters the bucket key)."""
 
     rid: int
     spec: SamplerSpec
     shape: tuple[int, ...]
     dtype: str = "float32"
+    cond: Any = None
+    guidance_scale: float = 1.0
 
 
 def bucket_key(req: Request) -> tuple:
     """The executor identity this request compiles under."""
-    return (req.spec, req.shape, req.dtype)
+    return (req.spec, req.shape, req.dtype, cond_struct(req.cond))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +104,24 @@ class MicroBatch:
         """Lane rids including pad slots."""
         return [r.rid for r in self.requests] \
             + [PAD_RID] * (self.size - len(self.requests))
+
+    def stacked_cond(self):
+        """Per-lane conditioning: real requests' cond pytrees stacked
+        along a new leading lane axis, pad lanes as zeros (the null
+        conditioning; their outputs are dropped anyway). None when this
+        bucket is unconditional."""
+        c0 = self.requests[0].cond
+        if c0 is None:
+            return None
+        conds = [r.cond for r in self.requests]
+        conds += [jax.tree.map(jnp.zeros_like, c0)] * self.n_padded
+        return jax.tree.map(lambda *ls: jnp.stack(ls), *conds)
+
+    def scales(self) -> jnp.ndarray:
+        """Per-lane guidance scales ``[size]`` (pad lanes at 1.0)."""
+        return jnp.asarray(
+            [float(r.guidance_scale) for r in self.requests]
+            + [1.0] * self.n_padded, jnp.float32)
 
 
 def choose_bucket(n: int, bucket_sizes: Sequence[int]) -> int:

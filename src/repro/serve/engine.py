@@ -4,9 +4,13 @@ One :class:`ServeEngine` owns one model (``model_fn``), a FIFO request
 queue, and the serving loop:
 
 - ``submit()`` enqueues a request: any registered :class:`SamplerSpec`
-  (sampler family, NFE, tau, ...) plus a latent shape. Requests with
+  (sampler family, NFE, tau, ...) plus a latent shape — and, for
+  Denoiser-backed engines, a per-request conditioning pytree and
+  guidance scale. Requests with
   different specs/shapes coexist in the queue; the engine groups them by
-  ``(spec, shape, dtype)`` bucket (see :mod:`repro.serve.batching`).
+  ``(spec, shape, dtype, cond structure)`` bucket (see
+  :mod:`repro.serve.batching`) — conditioning *values* and the guidance
+  scale are traced data and never split a bucket or recompile.
 - ``step()`` serves the oldest bucket as one microbatch: ragged tails are
   padded with *masked* dummy lanes (never duplicated requests), each lane
   draws its initial noise and solve path from ``fold_in(seed, rid)`` so
@@ -24,8 +28,13 @@ queue, and the serving loop:
   (how a frontend streams previews while later buckets still solve).
 
 Throughput accounting counts **real** requests only: ``model_evals`` is
-``spec.nfe`` per served request; padded lanes are reported separately as
-``padded_slots`` (they cost compute but serve nobody).
+``spec.nfe`` (guided, solver-level evaluations) per served request, and
+``network_evals`` is ``spec.network_nfe`` — under classifier-free
+guidance every guided evaluation is one fused network forward over a
+*doubled* lane count, so a CFG bucket of B lanes drives 2B network lanes
+(warmup compiles exactly that doubled-lane graph, and a padded slot
+wastes two network lanes instead of one). Padded lanes are reported
+separately as ``padded_slots`` (they cost compute but serve nobody).
 """
 
 from __future__ import annotations
@@ -59,9 +68,12 @@ class ServeEngine:
     """Mesh-sharded, continuously-microbatched diffusion sampling service.
 
     Args:
-        model_fn: per-request denoiser ``(x, t) -> x0_hat`` (the executor
-            vmaps it over the request axis). Held strongly for the
-            engine's lifetime.
+        model_fn: per-request model — a plain ``(x, t) -> x0_hat``
+            closure speaking the plan's parameterization, or a
+            :class:`repro.core.denoiser.Denoiser` wrapping a raw
+            eps/x0/v-prediction network (with or without classifier-free
+            guidance); the executor vmaps it over the request axis. Held
+            strongly for the engine's lifetime.
         bucket_sizes: allowed microbatch lane counts; tails take the
             smallest that fits. With a mesh, sizes are rounded up to
             multiples of the data-axis size.
@@ -105,21 +117,30 @@ class ServeEngine:
         self._warmed: set[tuple] = set()
         self._stats = {
             "requests": 0, "microbatches": 0, "padded_slots": 0,
-            "model_evals": 0, "warmups": 0, "serve_s": 0.0,
+            "model_evals": 0, "network_evals": 0, "warmups": 0,
+            "serve_s": 0.0,
         }
 
     # ------------------------------------------------------------- intake
     def submit(self, spec: SamplerSpec, shape: Sequence[int],
-               dtype="float32", rid: int | None = None) -> int:
+               dtype="float32", rid: int | None = None, *,
+               cond=None, guidance_scale: float = 1.0) -> int:
         """Enqueue one request; returns its rid (for RNG identity and
         result matching). An explicit ``rid`` makes a request replayable
-        — the same rid always produces the same sample."""
+        — the same rid always produces the same sample. ``cond`` is the
+        request's conditioning pytree (engine model must be a Denoiser;
+        only its shape/dtype structure affects bucketing) and
+        ``guidance_scale`` its CFG scale (pure data: a scale sweep rides
+        one warmed executable)."""
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
+        if cond is not None:
+            cond = jax.tree.map(jnp.asarray, cond)
         self._queue.append(Request(
             rid=rid, spec=spec, shape=tuple(int(s) for s in shape),
-            dtype=jnp.dtype(dtype).name))
+            dtype=jnp.dtype(dtype).name, cond=cond,
+            guidance_scale=float(guidance_scale)))
         return rid
 
     def pending(self) -> int:
@@ -127,15 +148,21 @@ class ServeEngine:
 
     # ------------------------------------------------------------ serving
     def warmup_bucket(self, mb: MicroBatch) -> None:
-        """AOT-compile this microbatch's executor if not already warm."""
+        """AOT-compile this microbatch's executor if not already warm.
+
+        The per-request cond prototype comes from the bucket's first
+        request (all requests in a bucket share cond structure — it is
+        part of the bucket key); under guidance the lowered graph already
+        carries the doubled network lane count, so the CFG hot path never
+        traces either."""
         ident = (mb.key, mb.size)
         if ident in self._warmed:
             return
         plan = build_plan(mb.spec)
         warmup(plan, self.model_fn, mb.shape, jnp.dtype(mb.dtype),
                batch=mb.size, mesh=self.mesh, data_axis=self.data_axis,
-               trajectory=self.stream, model_key=self.model_key,
-               donate=self.donate)
+               cond=mb.requests[0].cond, trajectory=self.stream,
+               model_key=self.model_key, donate=self.donate)
         self._warmed.add(ident)
         self._stats["warmups"] += 1
 
@@ -178,15 +205,19 @@ class ServeEngine:
             lambda k: scale * jax.random.normal(k, shape, dtype)
         )(noise_keys)
         solve_keys = fold_keys(self._solve_base, rids)
+        cond_b = mb.stacked_cond()
+        g_scales = mb.scales()
 
         if self.mesh is not None:
             out = sample_sharded(
                 plan, self.model_fn, x_T, solve_keys, mesh=self.mesh,
-                data_axis=self.data_axis, trajectory=self.stream,
+                data_axis=self.data_axis, cond=cond_b,
+                guidance_scale=g_scales, trajectory=self.stream,
                 model_key=self.model_key, donate=self.donate)
         else:
             out = sample_batched(
-                plan, self.model_fn, x_T, solve_keys,
+                plan, self.model_fn, x_T, solve_keys, cond=cond_b,
+                guidance_scale=g_scales,
                 trajectory=self.stream, model_key=self.model_key)
         if self.stream:
             x0, traj = out
@@ -201,6 +232,7 @@ class ServeEngine:
         self._stats["microbatches"] += 1
         self._stats["padded_slots"] += mb.n_padded
         self._stats["model_evals"] += spec.nfe * n_real
+        self._stats["network_evals"] += spec.network_nfe * n_real
 
         results = []
         for lane, req in enumerate(mb.requests):  # pad lanes dropped here
@@ -216,12 +248,16 @@ class ServeEngine:
     def stats(self) -> dict:
         """Engine counters plus a compile-cache snapshot.
 
-        ``model_evals`` counts real requests only (``spec.nfe`` each);
-        padded lanes show up in ``padded_slots``, never in throughput.
+        ``model_evals`` counts guided (solver-level) evaluations and
+        ``network_evals`` raw network forwards — 2x under classifier-free
+        guidance — for real requests only (``spec.nfe`` /
+        ``spec.network_nfe`` each); padded lanes show up in
+        ``padded_slots``, never in throughput.
         """
         s = dict(self._stats)
         dt = s["serve_s"]
         s["requests_per_s"] = s["requests"] / dt if dt > 0 else 0.0
         s["model_evals_per_s"] = s["model_evals"] / dt if dt > 0 else 0.0
+        s["network_evals_per_s"] = s["network_evals"] / dt if dt > 0 else 0.0
         s["compile_cache"] = compile_cache_stats()
         return s

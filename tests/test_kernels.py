@@ -23,7 +23,7 @@ def test_sa_update_sweep(shape, P, dtype):
     coeffs = jnp.asarray([0.9, 0.1] + [0.3 / (j + 1) for j in range(P)],
                          jnp.float32)
     out = sa_update(x, buf, xi, coeffs, tile=128)
-    ref = sa_update_ref(x, buf, xi, coeffs[0], coeffs[1], coeffs[2:])
+    ref = sa_update_ref(x, buf, xi, coeffs)
     tol = 1e-6 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
