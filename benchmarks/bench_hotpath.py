@@ -1,0 +1,223 @@
+"""Hot-path benchmark: per-step HBM bytes + step latency for the SA-Solver
+executor, concat vs ring vs fused-dual history, f32 vs bf16.
+
+    PYTHONPATH=src python benchmarks/bench_hotpath.py [--smoke]
+
+What is measured (PEC-with-corrector, P = 3, the paper's default — the
+worst case for history traffic) on the *real* registry executors with a
+trivial model, so the numbers isolate solver bookkeeping:
+
+- ``xla_bytes``: raw ``compiled.cost_analysis()['bytes accessed']`` of the
+  whole jitted solve (XLA counts the scan body once). This is the
+  acceptance metric: the fused-dual ring path must cut it by >= 30% vs.
+  the seed concat executor at f32.
+- ``hbm_per_step``: trip-count-aware per-step HBM bytes from
+  ``repro.launch.hlo_cost.analyze_compiled`` (dynamic-update-slice charged
+  at the row it writes, the way the aliased in-loop update actually
+  behaves), differenced across two step counts so init/final code cancels.
+  This is the physical-traffic number the README table quotes.
+- ``ms_per_solve``: steady-state wall time of the compiled solve.
+
+Also asserted here, because this benchmark is the PR's regression gate:
+
+- the f32 ring (einsum) executor is **bitwise identical** to the seed
+  concat executor;
+- a tau sweep at fixed step count causes **zero** new compile-cache
+  misses on the ring path (tau is traced data, the ring head is derived
+  from the step index — nothing about the ring re-keys the cache).
+
+Every ``benchmarks.run`` invocation appends these metrics to
+``BENCH_RESULTS.json`` — the perf trajectory across PRs.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.samplers import (SamplerSpec, build_plan, get_family,
+                                 make_sampler)
+from repro.core import samplers
+from repro.launch.hlo_cost import analyze_compiled
+
+try:
+    from .common import print_table  # python -m benchmarks.run
+except ImportError:
+    from common import print_table  # python benchmarks/bench_hotpath.py
+
+
+def _model(x, t):
+    return 0.97 * x  # trivial data-prediction model: solver cost dominates
+
+
+def analytic_per_step(P: int, elem_bytes: int, n: int) -> dict:
+    """Ideal-fusion HBM model for one PEC-with-corrector step (model eval
+    and RNG excluded — identical across paths), in bytes, for a [n]
+    latent. Counts full-array passes: each combine reads its operands
+    once and writes once (the Pallas kernels' contract; XLA approaches it
+    with loop fusion).
+
+    concat (seed): predictor reads x, xi, P rows -> x_pred (P+3);
+    corrector reads x, xi, e_new, P rows -> x_next (P+4); the shift
+    re-materializes the buffer: P rows read + P written (2P).
+    ring: same combines but the shift is ONE row write (1).
+    fused ring: one pass reads x, xi, P rows and writes BOTH partial sums
+    (P+4); the post-eval corrector touches corr_base + e_new -> x_next
+    (3); one row write (1).
+    """
+    unit = n * elem_bytes
+    return {
+        "concat": (4 * P + 7) * unit,
+        "ring": (2 * P + 8) * unit,
+        "fused": (P + 8) * unit,
+    }
+
+
+def _cost_bytes(compiled) -> float:
+    d = compiled.cost_analysis()
+    d = d[0] if isinstance(d, list) else d  # list-of-dicts on older jax
+    return float(d["bytes accessed"])
+
+
+def _compile_solve(spec: SamplerSpec, n: int):
+    """AOT-compile the registry executor for a [n] latent (the real
+    ``execute_sa``, not a re-implementation)."""
+    plan = build_plan(spec)
+    fam = get_family(spec.name)
+    statics = plan.statics
+
+    def run(arrays, x, k):
+        return fam.execute(statics, arrays, _model, x, k, False)
+
+    proto = jax.random.PRNGKey(0)
+    arrays_s = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), plan.arrays)
+    x_s = jax.ShapeDtypeStruct((n,), jnp.float32)
+    k_s = jax.ShapeDtypeStruct(proto.shape, proto.dtype)
+    return jax.jit(run).lower(arrays_s, x_s, k_s).compile(), plan
+
+
+def _hbm_per_step(spec: SamplerSpec, n: int, m1: int, m2: int,
+                  compiled_m2) -> float:
+    """Per-step HBM bytes: difference the trip-count-aware totals at two
+    step counts so everything outside the scan body cancels.
+    ``compiled_m2`` is the already-compiled m2-step executor (re-lowering
+    it here would double every variant's compile time)."""
+    c1, _ = _compile_solve(spec.replace(n_steps=m1), n)
+    return (analyze_compiled(compiled_m2).bytes
+            - analyze_compiled(c1).bytes) / (m2 - m1)
+
+
+def _time_solve(compiled, plan, x, key, budget_s: float = 0.6) -> float:
+    out = jax.block_until_ready(compiled(plan.arrays, x, key))
+    t0 = time.perf_counter()
+    runs = 0
+    while time.perf_counter() - t0 < budget_s:
+        out = jax.block_until_ready(compiled(plan.arrays, x, key))
+        runs += 1
+    del out
+    return (time.perf_counter() - t0) / max(runs, 1) * 1e3
+
+
+def run(smoke: bool = False):
+    n = 1 << 16
+    m = 8 if smoke else 20
+    m_lo = max(2, m // 2)
+    base = dict(schedule="vp_linear", n_steps=m, tau=0.6,
+                predictor_order=3, corrector_order=3, mode="PEC")
+    variants = [
+        ("concat f32", SamplerSpec(name="sa", history="concat", **base)),
+        ("ring f32", SamplerSpec(name="sa", history="ring", **base)),
+        ("fused f32", SamplerSpec(name="sa", combine="fused", **base)),
+        ("fused bf16", SamplerSpec(name="sa", combine="fused",
+                                   precision="bf16", **base)),
+        ("concat bf16", SamplerSpec(name="sa", history="concat",
+                                    precision="bf16", **base)),
+    ]
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32)
+    key = jax.random.PRNGKey(2)
+    rows, metrics = [], {"n": n, "n_steps": m}
+    outputs = {}
+    for name, spec in variants:
+        compiled, plan = _compile_solve(spec, n)
+        xla_b = _cost_bytes(compiled)
+        hbm_step = _hbm_per_step(spec, n, m_lo, m, compiled)
+        ms = 0.0 if smoke else _time_solve(compiled, plan, x, key)
+        outputs[name] = compiled(plan.arrays, x, key)
+        slug = name.replace(" ", "_")
+        metrics[f"{slug}_xla_bytes"] = xla_b
+        metrics[f"{slug}_hbm_per_step"] = hbm_step
+        if not smoke:
+            metrics[f"{slug}_ms"] = ms
+        rows.append([name, xla_b / 2**20, hbm_step / 2**20, ms])
+    print_table(
+        f"SA hot path, PEC+corrector P=3, latent n=2^{n.bit_length()-1}, "
+        f"{m} steps (trivial model)",
+        ["path", "xla MiB (solve)", "hbm MiB/step", "ms/solve"], rows)
+
+    # ideal-fusion HBM model (solver traffic only; what the Pallas
+    # kernels deliver on TPU) — the README "Hot-path performance" table
+    an_rows = []
+    ref_f32 = analytic_per_step(3, 4, n)["concat"]
+    for label, eb in [("f32", 4), ("bf16", 2)]:
+        an = analytic_per_step(3, eb, n)
+        for path in ("concat", "ring", "fused"):
+            metrics[f"analytic_{path}_{label}_per_step"] = an[path]
+            an_rows.append([f"{path} {label}", an[path] / 2**20,
+                            an[path] / ref_f32])
+    print_table("analytic per-step HBM (P=3, model/RNG excluded, "
+                "x concat-f32)",
+                ["path", "MiB/step", "frac of concat f32"], an_rows)
+
+    ref = metrics["concat_f32_xla_bytes"]
+    drop_fused = 1.0 - metrics["fused_f32_xla_bytes"] / ref
+    hbm_drop_fused = 1.0 - (metrics["fused_f32_hbm_per_step"]
+                            / metrics["concat_f32_hbm_per_step"])
+    hbm_drop_bf16 = 1.0 - (metrics["fused_bf16_hbm_per_step"]
+                           / metrics["concat_f32_hbm_per_step"])
+    metrics["fused_f32_xla_drop"] = round(drop_fused, 4)
+    metrics["fused_f32_hbm_drop"] = round(hbm_drop_fused, 4)
+    metrics["fused_bf16_hbm_drop"] = round(hbm_drop_bf16, 4)
+    print(f"cost_analysis() bytes-accessed drop, fused f32 vs concat f32: "
+          f"{drop_fused:.1%} (claim: >= 30%)")
+    print(f"per-step HBM drop (trip-aware): fused f32 {hbm_drop_fused:.1%}, "
+          f"fused bf16 {hbm_drop_bf16:.1%}")
+    assert drop_fused >= 0.30, (
+        f"fused-dual ring path cuts cost_analysis() bytes by only "
+        f"{drop_fused:.1%} vs the concat executor (claimed >= 30%)")
+    assert hbm_drop_fused >= 0.30, (
+        f"per-step HBM bytes (trip-aware) drop {hbm_drop_fused:.1%} < 30%")
+
+    bitwise = bool(jnp.all(outputs["ring f32"] == outputs["concat f32"]))
+    metrics["ring_f32_bitwise"] = bitwise
+    assert bitwise, "f32 ring executor is not bitwise-equal to concat seed"
+    fused_dev = float(jnp.max(jnp.abs(outputs["fused f32"]
+                                      - outputs["concat f32"])))
+    metrics["fused_f32_max_abs_dev"] = fused_dev
+    assert fused_dev < 1e-3, f"fused path deviates by {fused_dev}"
+
+    # tau sweep at fixed step count: plan changes, executor must not —
+    # the ring head is derived from the step index, never from tau
+    samplers.clear_compile_cache()
+    xt = jax.random.normal(jax.random.PRNGKey(3), (4096,), jnp.float32)
+    for tau in (0.0, 0.4, 0.8, 1.2, 1.6, 2.0):
+        s = make_sampler("sa", schedule="vp_linear", n_steps=6, tau=tau)
+        jax.block_until_ready(s.sample(_model, xt, key, model_key="bench"))
+    stats = samplers.compile_cache_stats()
+    metrics["tau_sweep_misses"] = stats["misses"]
+    print(f"tau sweep (6 values, fixed steps): compile-cache misses = "
+          f"{stats['misses']}, hits = {stats['hits']}")
+    assert stats["misses"] == 1, (
+        f"tau sweep recompiled: {stats['misses']} misses (expected 1)")
+    return metrics
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: skip wall-time loops, fewer steps")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    print("hotpath claims OK")

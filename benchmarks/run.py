@@ -27,6 +27,7 @@ SECTIONS = [
     ("inaccurate_score", "Fig 4: inaccurate score"),
     ("kernels", "kernel micro-benchmarks"),
     ("solver_overhead", "solver bookkeeping overhead"),
+    ("hotpath", "hot path: ring vs concat history HBM bytes + latency"),
     ("serving", "serve engine: bucket throughput + compile-cache contract"),
     ("guidance", "denoiser adapter: CFG scale sweep + cache contract"),
 ]

@@ -70,6 +70,8 @@ from ..schedules import NoiseSchedule, get_schedule, timestep_grid
 from ..tau import TauSchedule
 
 __all__ = [
+    "PRECISIONS",
+    "carry_dtype",
     "SamplerSpec",
     "SamplerPlan",
     "SamplerFamily",
@@ -89,6 +91,21 @@ __all__ = [
 ]
 
 ModelFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+#: legal values of ``SamplerSpec.precision``
+PRECISIONS = ("f32", "bf16")
+
+
+def carry_dtype(precision: str):
+    """Scan-carry dtype of the hot-loop precision policy (one definition
+    for SA and every baseline): step arithmetic accumulates in f32
+    either way, so at "f32" the policy casts are dtype identities
+    (bitwise no-ops) and at "bf16" only the carried state, history, and
+    model input narrow."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision={precision!r}; expected one of {PRECISIONS}")
+    return jnp.bfloat16 if precision == "bf16" else jnp.float32
 
 
 # --------------------------------------------------------------------- spec
@@ -117,8 +134,23 @@ class SamplerSpec:
     predictor_order: int = 3
     corrector_order: int = 3
     mode: str = "PEC"  # "PEC" | "PECE"
-    combine: str = "einsum"  # "einsum" | "kernel"
+    #: "einsum" (one XLA contraction), "kernel" (the Pallas sa_update
+    #: path; interpret-mode on CPU), or "fused" (dual-output
+    #: predictor+corrector kernel — one pass over x/xi/history, ring only)
+    combine: str = "einsum"
+    #: evaluation-history layout: "ring" (fixed ring buffer, one
+    #: dynamic_update_index row write per step) or "concat" (the seed
+    #: layout that re-materializes the buffer twice per step; kept as the
+    #: regression/benchmark baseline). The f32 ring einsum/kernel path is
+    #: bitwise-identical to concat.
+    history: str = "ring"
     denoise_final: bool = True
+    #: hot-loop precision policy: "f32", or "bf16" to carry the scan
+    #: state and history buffer (and feed the model) in bfloat16 with f32
+    #: accumulation inside every combine — coefficient tables stay f32.
+    #: Part of the executor statics, so it keys the compile cache and the
+    #: serving bucket (the spec is the bucket key).
+    precision: str = "f32"
     # DDIM family
     eta: float = 0.0
     # EDM stochastic family
@@ -436,6 +468,19 @@ def cond_struct(cond):
                            for l in leaves))
 
 
+def _host_scale_not_unity(guidance_scale) -> bool:
+    """True when ``guidance_scale`` is a host value (Python/numpy
+    scalar, list/tuple, or numpy array — NOT a jax device array)
+    provably != 1.0. Host values are checked for free; device arrays
+    return False so the caller never forces a blocking device->host
+    sync."""
+    if isinstance(guidance_scale, (int, float, np.floating, np.integer)):
+        return float(guidance_scale) != 1.0
+    if isinstance(guidance_scale, (np.ndarray, list, tuple)):
+        return bool(np.any(np.asarray(guidance_scale) != 1.0))
+    return False
+
+
 def _check_model(plan: SamplerPlan, model_fn, cond, guidance_scale):
     """Validate the model argument against the spec's denoiser fields and
     canonicalize (cond, scale) into traced arrays."""
@@ -462,13 +507,20 @@ def _check_model(plan: SamplerPlan, model_fn, cond, guidance_scale):
                 "model_fn(x, t) has no cond input")
     if cond is not None:
         cond = jax.tree.map(jnp.asarray, cond)
-    scale = jnp.asarray(guidance_scale, jnp.float32)
     guided = isinstance(model_fn, Denoiser) and model_fn.guidance
-    if not guided and bool(jnp.any(scale != 1.0)):
+    if not guided and _host_scale_not_unity(guidance_scale):
+        # host-side guard only: the old ``bool(jnp.any(scale != 1.0))``
+        # forced a device->host round-trip on EVERY sample() call —
+        # a blocking sync on the serving hot path. Python/numpy values
+        # (the overwhelmingly common case) are checked for free here;
+        # device-array inputs skip the check rather than sync — a
+        # non-unity device-array scale without a guidance Denoiser is
+        # silently inert, which the docstrings call out.
         raise ValueError(
             "guidance_scale has no effect without a guidance-enabled "
             "Denoiser — it would be silently dropped; wrap the network "
             "in Denoiser(..., guidance=True) (and set spec.guidance)")
+    scale = jnp.asarray(guidance_scale, jnp.float32)
     return cond, scale
 
 

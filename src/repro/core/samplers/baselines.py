@@ -14,6 +14,15 @@ network (guided or not) to this convention in-graph before the executor
 sees it. Numeric hyperparameters (eta, tau, churn) are baked into the
 planned arrays, not the executors, so sweeping them at a fixed step count
 reuses one compilation.
+
+The baselines honor the same ``spec.precision`` policy as SA-Solver: the
+scan state (and the model input) is carried in bf16 under
+``precision="bf16"`` while the step arithmetic accumulates in f32; at
+f32 the policy casts are dtype identities, so the default path stays
+bitwise-stable. History note: the only multistep-history baseline,
+DPM-Solver++(2M), carries exactly one previous evaluation directly in
+the scan carry — a ring of size one, with no shift copies to eliminate
+(the concat-vs-ring treatment in ``sa.py`` applies to buffers of P rows).
 """
 
 from __future__ import annotations
@@ -24,7 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .base import SamplerFamily, SamplerSpec, register_sampler
+from .base import (SamplerFamily, SamplerSpec, carry_dtype,
+                   register_sampler)
 
 __all__ = ["plan_ddim", "execute_ddim", "plan_dpmpp2m", "execute_dpmpp2m",
            "plan_euler_maruyama", "execute_euler_maruyama",
@@ -70,6 +80,7 @@ def plan_ddim(spec: SamplerSpec):
 
 
 def execute_ddim(statics, c, model_fn, x_T, key, trajectory: bool):
+    cdt = carry_dtype(statics[0])
     M = c["sig_hat"].shape[0]
 
     def step(x, per):
@@ -77,14 +88,15 @@ def execute_ddim(statics, c, model_fn, x_T, key, trajectory: bool):
         a_i, s_i = c["alphas"][i], c["sigmas"][i]
         a_n = c["alphas"][i + 1]
         x0 = model_fn(x, c["ts"][i]).astype(jnp.float32)
-        eps = (x - a_i * x0) / s_i
+        eps = (x.astype(jnp.float32) - a_i * x0) / s_i
         xi = jax.random.normal(k, x.shape, jnp.float32)
-        x_next = a_n * x0 + c["dir_scale"][i] * eps + c["sig_hat"][i] * xi
-        return x_next, ({"x": x_next, "x0": x0} if trajectory else None)
+        x_next = (a_n * x0 + c["dir_scale"][i] * eps
+                  + c["sig_hat"][i] * xi).astype(cdt)
+        return x_next, ({"x": x_next, "x0": x0.astype(cdt)}
+                        if trajectory else None)
 
     keys = jax.random.split(key, M)
-    x, traj = jax.lax.scan(step, x_T.astype(jnp.float32),
-                           (jnp.arange(M), keys))
+    x, traj = jax.lax.scan(step, x_T.astype(cdt), (jnp.arange(M), keys))
     return (x, traj) if trajectory else x
 
 
@@ -109,8 +121,11 @@ def plan_dpmpp2m(spec: SamplerSpec):
 
 def execute_dpmpp2m(statics, c, model_fn, x_T, key, trajectory: bool):
     del key  # deterministic
+    cdt = carry_dtype(statics[0])
     M = c["h"].shape[0]
 
+    # the multistep history is ONE previous evaluation, carried directly
+    # (a size-one ring: new eval replaces old in place, no shift copies)
     def step(carry, i):
         x, x0_prev = carry
         x0 = model_fn(x, c["ts"][i]).astype(jnp.float32)
@@ -122,15 +137,16 @@ def execute_dpmpp2m(statics, c, model_fn, x_T, key, trajectory: bool):
 
         def multi(_):
             r = c["h_prev"][i] / c["h"][i]
-            D = x0 + (x0 - x0_prev) / (2.0 * r)
+            D = x0 + (x0 - x0_prev.astype(jnp.float32)) / (2.0 * r)
             return a_n * phi * D
 
         upd = jax.lax.cond(i == 0, first, multi, None)
-        x_next = (s_n / s_i) * x + upd
-        return (x_next, x0), ({"x": x_next, "x0": x0} if trajectory else None)
+        x_next = ((s_n / s_i) * x.astype(jnp.float32) + upd).astype(cdt)
+        return (x_next, x0.astype(cdt)), (
+            {"x": x_next, "x0": x0.astype(cdt)} if trajectory else None)
 
     (x, _), traj = jax.lax.scan(
-        step, (x_T.astype(jnp.float32), jnp.zeros_like(x_T, jnp.float32)),
+        step, (x_T.astype(cdt), jnp.zeros_like(x_T, cdt)),
         jnp.arange(M))
     return (x, traj) if trajectory else x
 
@@ -164,6 +180,7 @@ def plan_euler_maruyama(spec: SamplerSpec):
 
 
 def execute_euler_maruyama(statics, c, model_fn, x_T, key, trajectory: bool):
+    cdt = carry_dtype(statics[0])
     M = c["drift_x"].shape[0]
 
     def step(x, per):
@@ -171,13 +188,15 @@ def execute_euler_maruyama(statics, c, model_fn, x_T, key, trajectory: bool):
         a_i = c["alphas"][i]
         x0 = model_fn(x, c["ts"][i]).astype(jnp.float32)
         xi = jax.random.normal(k, x.shape, jnp.float32)
-        x_next = x + c["drift_x"][i] * x \
-            - c["drift_gain"][i] * (x - a_i * x0) + c["noise_amp"][i] * xi
-        return x_next, ({"x": x_next, "x0": x0} if trajectory else None)
+        xf = x.astype(jnp.float32)
+        x_next = (xf + c["drift_x"][i] * xf
+                  - c["drift_gain"][i] * (xf - a_i * x0)
+                  + c["noise_amp"][i] * xi).astype(cdt)
+        return x_next, ({"x": x_next, "x0": x0.astype(cdt)}
+                        if trajectory else None)
 
     keys = jax.random.split(key, M)
-    x, traj = jax.lax.scan(step, x_T.astype(jnp.float32),
-                           (jnp.arange(M), keys))
+    x, traj = jax.lax.scan(step, x_T.astype(cdt), (jnp.arange(M), keys))
     return (x, traj) if trajectory else x
 
 
@@ -207,14 +226,17 @@ def plan_edm_heun(spec: SamplerSpec):
 
 def execute_edm_heun(statics, c, model_fn, x_T, key, trajectory: bool):
     del key  # deterministic
+    cdt = carry_dtype(statics[0])
     sig, alph, tsj = c["sig"], c["alph"], c["ts"]
     M = sig.shape[0] - 1
 
     def d(x_t, i):
-        x0 = model_fn(x_t * alph[i], tsj[i]).astype(jnp.float32)
+        x0 = model_fn((x_t * alph[i]).astype(cdt), tsj[i]) \
+            .astype(jnp.float32)
         return (x_t - x0) / sig[i]
 
     def step(x_t, i):
+        x_t = x_t.astype(jnp.float32)
         di = d(x_t, i)
         dt = sig[i + 1] - sig[i]
         x_e = x_t + dt * di
@@ -226,13 +248,15 @@ def execute_edm_heun(statics, c, model_fn, x_T, key, trajectory: bool):
         x_next = jax.lax.cond(sig[i + 1] > 1e-8, heun, lambda _: x_e, None)
         if trajectory:
             x0 = x_t - sig[i] * di  # preview from the first slope eval
-            return x_next, {"x": x_next * alph[i + 1], "x0": x0}
-        return x_next, None
+            return x_next.astype(cdt), {
+                "x": (x_next * alph[i + 1]).astype(cdt),
+                "x0": x0.astype(cdt)}
+        return x_next.astype(cdt), None
 
-    x_t = x_T.astype(jnp.float32) / alph[0]
+    x_t = (x_T.astype(jnp.float32) / alph[0]).astype(cdt)
     x_t, traj = jax.lax.scan(step, x_t, jnp.arange(M))
-    x = x_t * alph[M]
-    return (x, traj) if trajectory else x
+    x = x_t.astype(jnp.float32) * alph[M]
+    return ((x.astype(cdt), traj) if trajectory else x.astype(cdt))
 
 
 def plan_edm_stochastic(spec: SamplerSpec):
@@ -257,11 +281,12 @@ def _edm_stochastic_statics(spec: SamplerSpec) -> tuple:
     # decided from the schedule's alpha values on the actual solve grid.
     schedule = spec.resolve_schedule()
     ve = bool(np.allclose(schedule.alpha(spec.grid_ts()), 1.0))
-    return (ve,)
+    return (spec.precision, ve)
 
 
 def execute_edm_stochastic(statics, c, model_fn, x_T, key, trajectory: bool):
-    (ve,) = statics
+    precision, ve = statics
+    cdt = carry_dtype(precision)
     sig, alph, tsj = c["sig"], c["alph"], c["ts"]
     M = sig.shape[0] - 1
 
@@ -269,11 +294,13 @@ def execute_edm_stochastic(statics, c, model_fn, x_T, key, trajectory: bool):
         return jnp.float32(1.0) if ve else 1.0 / jnp.sqrt(1.0 + s_val**2)
 
     def d(x_t, s_val, t_val):
-        x0 = model_fn(x_t * _alpha_of_sig(s_val), t_val).astype(jnp.float32)
+        x0 = model_fn((x_t * _alpha_of_sig(s_val)).astype(cdt), t_val) \
+            .astype(jnp.float32)
         return (x_t - x0) / s_val
 
     def step(x_t, per):
         i, k = per
+        x_t = x_t.astype(jnp.float32)
         s_hat = c["s_hat"][i]
         xi = jax.random.normal(k, x_t.shape, jnp.float32)
         x_hat = x_t + c["churn_amp"][i] * xi
@@ -290,19 +317,21 @@ def execute_edm_stochastic(statics, c, model_fn, x_T, key, trajectory: bool):
         x_next = jax.lax.cond(sig[i + 1] > 1e-8, heun, lambda _: x_e, None)
         if trajectory:
             x0 = x_hat - s_hat * di
-            return x_next, {"x": x_next * alph[i + 1], "x0": x0}
-        return x_next, None
+            return x_next.astype(cdt), {
+                "x": (x_next * alph[i + 1]).astype(cdt),
+                "x0": x0.astype(cdt)}
+        return x_next.astype(cdt), None
 
-    x_t = x_T.astype(jnp.float32) / alph[0]
+    x_t = (x_T.astype(jnp.float32) / alph[0]).astype(cdt)
     keys = jax.random.split(key, M)
     x_t, traj = jax.lax.scan(step, x_t, (jnp.arange(M), keys))
-    x = x_t * alph[M]
-    return (x, traj) if trajectory else x
+    x = x_t.astype(jnp.float32) * alph[M]
+    return ((x.astype(cdt), traj) if trajectory else x.astype(cdt))
 
 
 # ------------------------------------------------------------- registration
 def _register_simple(name, plan, execute, steps_from_nfe=_steps_identity,
-                     nfe_per_step=1, statics=lambda spec: ()):
+                     nfe_per_step=1, statics=lambda spec: (spec.precision,)):
     register_sampler(SamplerFamily(
         name=name, plan=plan, execute=execute, statics=statics,
         nfe_of=lambda spec, _k=nfe_per_step: _k * spec.n_steps,

@@ -3,14 +3,57 @@
 The plan phase runs ``coefficients.build_tables`` (host float64 — the
 exponentially-weighted Adams coefficients cancel at O(h^s) and must not be
 computed in f32) and ships the tables as f32 device arrays. The executor
-is the same single ``lax.scan`` the legacy ``repro.core.solver.sample``
-ran — in fact the legacy entry point is now a shim over this executor, so
-the two paths are bitwise identical by construction.
+is a single ``lax.scan``; the legacy ``repro.core.solver.sample`` entry
+point is a shim over it, so the two paths are bitwise identical by
+construction.
+
+History layouts (``spec.history``):
+
+- ``"ring"`` (default): the [P, *latent] evaluation history lives in a
+  fixed ring — age-j sits in slot ``(i - j) mod P`` at step i — and the
+  new evaluation lands with ONE ``dynamic_update_index`` row write. The
+  seed layout instead re-materialized the whole buffer twice per step
+  (``jnp.concatenate([e_new[None], buf[:-1]])`` for the shift plus
+  ``jnp.concatenate([e_new[None], buf])`` for the corrector row):
+  2P rows written + read per step that the ring never touches. For the
+  ``einsum``/``kernel`` combines the P rows are gathered newest-first
+  before the combine, so the f32 ring path is *bitwise identical* to the
+  seed executor (same values through the same reduction). That gather is
+  the compatibility compromise: when XLA materializes the stacked rows
+  instead of fusing them into the combine (the CPU backend does), it
+  gives back the shift savings and then some — ``bench_hotpath.py``
+  records ring-einsum at +12.5% bytes-accessed vs concat under XLA's
+  accounting (+2.3% per-step trip-aware), though still faster in wall
+  time. The byte *reduction* is delivered by ``combine="fused"``, which
+  rotates the [P] coefficient *columns* by the ring head — the [P, N]
+  data is never gathered or rotated — and is equivalent at tight f32
+  tolerance.
+- ``"concat"``: the seed layout, kept as the regression/benchmark
+  baseline (``benchmarks/bench_hotpath.py`` measures one against the
+  other).
+
+Combine modes (``spec.combine``):
+
+- ``"einsum"``: single XLA contraction (seed behaviour).
+- ``"kernel"``: the Pallas ``sa_update`` kernel, interpret-mode on CPU.
+- ``"fused"``: the dual-output ``sa_fused_update`` op — predictor and
+  corrector partial sums in ONE pass over x/xi/buffer, so the post-eval
+  corrector touches only ``e_new`` (roughly halves per-step solver HBM
+  bytes for PEC-with-corrector). Ring history only. Dispatches through
+  ``kernels.ops`` (compiled Mosaic on TPU, one-contraction jnp oracle on
+  CPU).
+
+Precision policy (``spec.precision``): ``"f32"`` (default) or ``"bf16"``
+— the scan state and history buffer are carried (and the model is fed) in
+bf16 while every combine accumulates in f32 and the coefficient tables
+stay f32. At f32 the policy casts are dtype-identities, so the default
+path stays bitwise-stable; bf16 halves the hot loop's HBM bytes at ~1e-2
+tolerance.
 
 Statics (compile-cache key): parameterization, corrector on/off, PECE,
-einsum-vs-Pallas combine, denoise_final. tau, the grid, and the
-coefficient values are *data*, so tau sweeps at a fixed step count reuse
-one compilation.
+combine mode, denoise_final, history layout, precision. tau, the grid,
+and the coefficient values are *data*, so tau sweeps at a fixed step
+count reuse one compilation.
 """
 
 from __future__ import annotations
@@ -18,11 +61,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...kernels import ops
 from ...kernels.sa_update import sa_update
 from ..coefficients import SolverTables, build_tables
-from .base import SamplerFamily, SamplerSpec, register_sampler
+from .base import (SamplerFamily, SamplerSpec, carry_dtype,
+                   register_sampler)
 
 __all__ = ["plan_sa", "execute_sa", "tables_to_arrays", "sa_statics"]
+
+_COMBINES = ("einsum", "kernel", "fused")
+_HISTORIES = ("ring", "concat")
 
 
 def tables_to_arrays(tables: SolverTables) -> dict:
@@ -56,80 +104,178 @@ def plan_sa(spec: SamplerSpec):
 
 
 def sa_statics(spec: SamplerSpec) -> tuple:
+    if spec.combine not in _COMBINES:
+        raise ValueError(
+            f"combine={spec.combine!r}; expected one of {_COMBINES}")
+    if spec.history not in _HISTORIES:
+        raise ValueError(
+            f"history={spec.history!r}; expected one of {_HISTORIES}")
+    carry_dtype(spec.precision)  # validates the policy value
+    if spec.combine == "fused" and spec.history != "ring":
+        raise ValueError(
+            "combine='fused' takes the ring-buffer layout (its rotated "
+            "coefficient columns encode the ring head); use "
+            "history='ring' or a non-fused combine")
     use_corrector = spec.corrector_order > 0
     return (
         spec.parameterization,
         use_corrector,
         spec.mode == "PECE" and use_corrector,
-        spec.combine == "kernel",
+        spec.combine,
         spec.denoise_final and spec.parameterization == "data",
+        spec.history == "ring",
+        spec.precision,
     )
 
 
 def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
     """Algorithm 1 as one scan; see repro.core.solver for the step math."""
-    parameterization, use_corrector, pece, use_kernel, denoise = statics
+    (parameterization, use_corrector, pece, combine, denoise, ring,
+     precision) = statics
     P = dev["pred"].shape[1]  # buffer rows = max(pred order, corr order)
     M = dev["decay"].shape[0]
+    cdt = carry_dtype(precision)
+    f32 = jnp.float32
 
-    x = x_T.astype(jnp.float32)
-    e0 = model_fn(x, dev["ts"][0]).astype(jnp.float32)
-    buffer = jnp.zeros((P,) + x.shape, dtype=jnp.float32).at[0].set(e0)
+    x = x_T.astype(cdt)
+    e0 = model_fn(x, dev["ts"][0]).astype(cdt)
+    buffer = jnp.zeros((P,) + x.shape, dtype=cdt).at[0].set(e0)
 
-    def combine(decay_i, x_prev, coeffs, buf, noise_i, xi, extra=None):
-        if extra is not None:
-            # corrector: fold the predicted-point eval in as one more buffer
-            c_new, e_new = extra
-            coeffs = jnp.concatenate([c_new[None], coeffs])
-            buf = jnp.concatenate([e_new[None], buf], axis=0)
-        if use_kernel:
+    def combine_rows(decay_i, x_prev, coeffs, buf, noise_i, xi):
+        """The seed combine over an age-ordered (newest-first) row stack.
+        At f32 every astype below is a dtype identity, so this is
+        bitwise-identical to the seed executor's combine."""
+        if combine == "kernel":
             # packed-coefficient convention: [decay, noise, b_0..b_{P-1}]
             cvec = jnp.concatenate([decay_i[None], noise_i[None], coeffs])
             return sa_update(x_prev, buf, xi, cvec)
         # sum_j coeffs[j] * buf[j]  — einsum keeps it a single contraction
-        acc = jnp.einsum("p,p...->...", coeffs, buf)
-        return decay_i * x_prev + acc + noise_i * xi
+        acc = jnp.einsum("p,p...->...", coeffs, buf.astype(f32))
+        return (decay_i * x_prev.astype(f32) + acc
+                + noise_i * xi.astype(f32)).astype(cdt)
 
-    def step(carry, per_step):
+    def x0_preview(x_eval, e_new, i):
+        if parameterization == "data":
+            return e_new
+        # eps-hat -> x0-hat at t_{i+1}, reconstructed from the state the
+        # eval saw (under PEC+corrector x_next moved away from x_pred;
+        # pairing it with e_new(x_pred) made the streamed preview
+        # inconsistent — amplified by 1/alpha at early steps)
+        return ((x_eval.astype(f32) - dev["sigmas"][i + 1]
+                 * e_new.astype(f32)) / dev["alphas"][i + 1]).astype(cdt)
+
+    # ------------------------------------------------------- concat layout
+    def draw_noise(step_key, shape):
+        # drawn in f32 then rounded to the policy dtype: the bf16 policy
+        # narrows precision but keeps the SAME noise stream as f32, so
+        # precision sweeps stay pointwise comparable (at f32 the cast is
+        # an identity — bitwise the seed draw)
+        return jax.random.normal(step_key, shape, f32).astype(cdt)
+
+    def step_concat(carry, per_step):
         x, buf = carry
         (i, step_key) = per_step
-        xi = jax.random.normal(step_key, x.shape, jnp.float32)
+        xi = draw_noise(step_key, x.shape)
         decay_i = dev["decay"][i]
         noise_i = dev["noise"][i]
         t_next = dev["ts"][i + 1]
 
-        x_pred = combine(decay_i, x, dev["pred"][i], buf, noise_i, xi)
-        e_new = model_fn(x_pred, t_next).astype(jnp.float32)
+        x_pred = combine_rows(decay_i, x, dev["pred"][i], buf, noise_i, xi)
+        e_new = model_fn(x_pred, t_next).astype(cdt)
         x_eval = x_pred  # the state e_new was actually evaluated at
         if use_corrector:
-            x_next = combine(
-                decay_i, x, dev["corr"][i], buf, noise_i, xi,
-                extra=(dev["corr_new"][i], e_new),
-            )
+            # corrector: fold the predicted-point eval in as one more row
+            coeffs = jnp.concatenate([dev["corr_new"][i][None],
+                                      dev["corr"][i]])
+            rows = jnp.concatenate([e_new[None], buf], axis=0)
+            x_next = combine_rows(decay_i, x, coeffs, rows, noise_i, xi)
             if pece:
-                e_new = model_fn(x_next, t_next).astype(jnp.float32)
+                e_new = model_fn(x_next, t_next).astype(cdt)
                 x_eval = x_next
         else:
             x_next = x_pred
         buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
         if trajectory:
-            if parameterization == "data":
-                x0_hat = e_new
-            else:  # eps-hat -> x0-hat at t_{i+1}, reconstructed from the
-                # state the eval saw (under PEC+corrector x_next moved
-                # away from x_pred; pairing it with e_new(x_pred) made
-                # the streamed preview inconsistent — amplified by
-                # 1/alpha at early steps)
-                x0_hat = (x_eval - dev["sigmas"][i + 1] * e_new) \
-                    / dev["alphas"][i + 1]
-            return (x_next, buf), {"x": x_next, "x0": x0_hat}
+            return (x_next, buf), {"x": x_next,
+                                   "x0": x0_preview(x_eval, e_new, i)}
+        return (x_next, buf), None
+
+    # --------------------------------------------------------- ring layout
+    def age_rows(buf, i, k):
+        """Newest-first history rows: age j lives in slot (i - j) mod P at
+        step i (jnp %, so the index is non-negative)."""
+        return [jax.lax.dynamic_index_in_dim(buf, (i - j) % P, axis=0,
+                                             keepdims=False)
+                for j in range(k)]
+
+    def rotated(i, *tables_i):
+        """[len(tables_i), P+2] packed-coefficient matrix with the
+        b-columns rotated to ring positions — the data never moves."""
+        pos = (i - jnp.arange(P)) % P
+        c = jnp.zeros((len(tables_i), P + 2), f32)
+        c = c.at[:, 0].set(dev["decay"][i]).at[:, 1].set(dev["noise"][i])
+        return c.at[:, 2 + pos].set(jnp.stack(tables_i))
+
+    def step_ring(carry, per_step):
+        x, buf = carry
+        (i, step_key) = per_step
+        xi = draw_noise(step_key, x.shape)
+        decay_i = dev["decay"][i]
+        noise_i = dev["noise"][i]
+        t_next = dev["ts"][i + 1]
+
+        if combine == "fused":
+            if use_corrector:
+                x_pred, corr_base = ops.sa_fused_update(
+                    x, buf, xi, rotated(i, dev["pred"][i], dev["corr"][i]))
+            else:
+                x_pred = ops.sa_update(
+                    x, buf, xi, rotated(i, dev["pred"][i])[0])
+            e_new = model_fn(x_pred, t_next).astype(cdt)
+            x_eval = x_pred
+            if use_corrector:
+                # post-eval corrector: only e_new is touched — the
+                # history was already folded into corr_base
+                x_next = (corr_base.astype(f32) + dev["corr_new"][i]
+                          * e_new.astype(f32)).astype(cdt)
+                if pece:
+                    e_new = model_fn(x_next, t_next).astype(cdt)
+                    x_eval = x_next
+            else:
+                x_next = x_pred
+        else:
+            rows = age_rows(buf, i, P)
+            x_pred = combine_rows(decay_i, x, dev["pred"][i],
+                                  jnp.stack(rows), noise_i, xi)
+            e_new = model_fn(x_pred, t_next).astype(cdt)
+            x_eval = x_pred
+            if use_corrector:
+                coeffs = jnp.concatenate([dev["corr_new"][i][None],
+                                          dev["corr"][i]])
+                x_next = combine_rows(decay_i, x, coeffs,
+                                      jnp.stack([e_new] + rows),
+                                      noise_i, xi)
+                if pece:
+                    e_new = model_fn(x_next, t_next).astype(cdt)
+                    x_eval = x_next
+            else:
+                x_next = x_pred
+        # the ONE history write: e_new becomes age 0 of step i+1, in slot
+        # (i+1) mod P — overwriting age P-1, which no combine needs again
+        buf = jax.lax.dynamic_update_index_in_dim(buf, e_new, (i + 1) % P,
+                                                  axis=0)
+        if trajectory:
+            return (x_next, buf), {"x": x_next,
+                                   "x0": x0_preview(x_eval, e_new, i)}
         return (x_next, buf), None
 
     keys = jax.random.split(key, M)
-    (x, buffer), traj = jax.lax.scan(step, (x, buffer), (jnp.arange(M), keys))
+    (x, buffer), traj = jax.lax.scan(step_ring if ring else step_concat,
+                                     (x, buffer), (jnp.arange(M), keys))
 
     if denoise:
-        x = buffer[0]
+        # newest eval: ring slot M mod P, concat row 0
+        x = buffer[M % P] if ring else buffer[0]
     if trajectory:
         return x, traj
     return x

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
     sa_update.py        fused SA-Solver state update  (memory-bound)
+    sa_fused.py         dual-output predictor+corrector combine (one pass)
     flash_attention.py  blocked causal attention      (compute-bound)
     rwkv6_scan.py       chunked WKV recurrence        (state in VMEM)
 
@@ -14,6 +15,8 @@ sweeps; on TPU the same call sites compile through Mosaic.
 from . import ops, ref
 from .flash_attention import flash_attention
 from .rwkv6_scan import rwkv6_wkv
+from .sa_fused import sa_fused_update
 from .sa_update import sa_update
 
-__all__ = ["ops", "ref", "sa_update", "flash_attention", "rwkv6_wkv"]
+__all__ = ["ops", "ref", "sa_update", "sa_fused_update", "flash_attention",
+           "rwkv6_wkv"]

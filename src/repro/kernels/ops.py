@@ -17,9 +17,11 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash_kernel
 from .rwkv6_scan import rwkv6_wkv as _wkv_kernel
+from .sa_fused import sa_fused_update as _sa_fused_kernel
 from .sa_update import sa_update as _sa_kernel
 
-__all__ = ["sa_update", "flash_attention", "wkv", "on_tpu"]
+__all__ = ["sa_update", "sa_fused_update", "flash_attention", "wkv",
+           "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -32,6 +34,16 @@ def sa_update(x, buf, xi, coeffs, *, mode: str = "auto"):
     if mode == "jnp" or (mode == "auto" and not on_tpu()):
         return ref.sa_update_ref(x, buf, xi, coeffs)
     return _sa_kernel(x, buf, xi, coeffs)  # interpret auto-detects backend
+
+
+def sa_fused_update(x, buf, xi, coeffs, *, mode: str = "auto"):
+    """Dual-output combine: coeffs [2, P+2] (rows packed like
+    ``sa_update``; row 0 predictor, row 1 corrector) ->
+    ``(x_pred, corr_base)``. One pass over x/xi/buf on TPU; the jnp
+    oracle mirrors it with a single two-row contraction on CPU."""
+    if mode == "jnp" or (mode == "auto" and not on_tpu()):
+        return ref.sa_fused_update_ref(x, buf, xi, coeffs)
+    return _sa_fused_kernel(x, buf, xi, coeffs)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, mode: str = "auto",

@@ -11,8 +11,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sa_update_ref", "flash_attention_ref", "wkv_ref",
-           "denoiser_oracles"]
+__all__ = ["sa_update_ref", "sa_fused_update_ref", "flash_attention_ref",
+           "wkv_ref", "denoiser_oracles"]
 
 
 def sa_update_ref(x, buf, xi, coeffs):
@@ -24,6 +24,24 @@ def sa_update_ref(x, buf, xi, coeffs):
     acc = jnp.einsum("p,p...->...", coeffs[2:], buf.astype(jnp.float32))
     return (coeffs[0] * x.astype(jnp.float32) + acc
             + coeffs[1] * xi.astype(jnp.float32)).astype(x.dtype)
+
+
+def sa_fused_update_ref(x, buf, xi, coeffs):
+    """Dual-output combine oracle: coeffs [2, P+2], rows packed like
+    ``sa_update_ref`` (row 0 predictor, row 1 corrector). Returns
+    ``(x_pred, corr_base)`` with x.dtype.
+
+    The two partial sums come out of ONE ``[2,P] @ [P,N]`` contraction so
+    XLA reads the buffer once — the jnp mirror of the Pallas kernel's
+    one-pass/two-accumulator structure, and the f32-accumulating CPU path
+    the hot-path benchmark measures."""
+    c = coeffs.astype(jnp.float32)
+    sums = jnp.einsum("qp,p...->q...", c[:, 2:], buf.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    xif = xi.astype(jnp.float32)
+    x_pred = c[0, 0] * xf + c[0, 1] * xif + sums[0]
+    corr_base = c[1, 0] * xf + c[1, 1] * xif + sums[1]
+    return x_pred.astype(x.dtype), corr_base.astype(x.dtype)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True):

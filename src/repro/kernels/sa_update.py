@@ -5,7 +5,7 @@
 On GPU reference implementations this is a chain of P+2 pointwise kernels,
 each reading/writing the full latent from HBM (2(P+2) HBM passes). The TPU
 kernel fuses the whole combine: per VMEM tile it reads x, xi and the P
-stacked buffer rows once, accumulates in VREGs, writes once —
+stacked buffer rows once, accumulates in f32 VREGs, writes once —
 (P+2) reads + 1 write total, the HBM lower bound for this op. The MXU is
 idle by design; the op is memory-bound and its roofline term is bytes.
 
@@ -13,9 +13,17 @@ Layout: latent flattened to [N]; buffers stacked [P, N] so the j-loop walks
 VMEM, not HBM. Coefficients arrive as one f32 vector [P+2] =
 (decay, noise, b_0..b_{P-1}) broadcast to every tile (scalar traffic only).
 
-Tiling: TILE = 512*128 f32 elements (256 KiB per operand tile); with
-P=3 buffers the working set is ~1.5 MiB << 16 MiB VMEM, letting the
-pipeliner double-buffer the HBM streams.
+Tiling: ``choose_tile`` picks the largest lane-aligned (multiple of
+8*128 f32 / 16*128 bf16 elements) tile that *divides* n, so steady-state
+steps are copy-free — the old path ``jnp.pad``-ed x, xi and the whole
+buffer on every call when ``n % tile != 0``, re-materializing all
+operands once per solver step inside the scan. When n has no aligned
+divisor the requested tile is kept and the final grid block is ragged:
+Pallas masks the out-of-bounds lanes (reads see padding, stores are
+dropped), still with zero host-side copies. Default TILE = 512*128 f32
+elements (256 KiB per operand tile); with P=3 buffers the working set is
+~1.5 MiB << 16 MiB VMEM, letting the pipeliner double-buffer the HBM
+streams.
 """
 
 from __future__ import annotations
@@ -26,9 +34,37 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sa_update", "DEFAULT_TILE"]
+__all__ = ["sa_update", "choose_tile", "DEFAULT_TILE", "LANE_ALIGN"]
 
 DEFAULT_TILE = 512 * 128
+#: lane-alignment unit for 1-D tiles: 16 sublanes x 128 lanes covers the
+#: minimum TPU tile for both f32 (8, 128) and bf16 (16, 128)
+LANE_ALIGN = 16 * 128
+
+
+def choose_tile(n: int, tile: int) -> int:
+    """Largest lane-aligned tile <= ``tile`` that divides ``n``.
+
+    Falls back to ``min(tile, n)`` when no aligned divisor exists — the
+    grid then carries one ragged final block whose loads/stores Pallas
+    masks automatically. Either way no operand is ever padded (copied)
+    at the jnp level, so calling this inside a ``lax.scan`` step is
+    copy-free in steady state. Divisors below ``tile // 8`` are not
+    worth it (a tiny tile explodes the grid count and per-block overhead
+    dominates — e.g. n = 2048 * large_prime would otherwise run
+    thousands of 2048-element blocks); the ragged masked path wins
+    there.
+    """
+    t_max = min(tile, n)
+    if n % t_max == 0:
+        return t_max
+    floor = max(LANE_ALIGN, (t_max // 8 // LANE_ALIGN) * LANE_ALIGN)
+    t = (t_max // LANE_ALIGN) * LANE_ALIGN
+    while t >= floor:
+        if n % t == 0:
+            return t
+        t -= LANE_ALIGN
+    return t_max  # ragged final block, masked by Pallas
 
 
 def _kernel(coeff_ref, x_ref, buf_ref, xi_ref, out_ref, *, P: int):
@@ -59,13 +95,8 @@ def sa_update(x, buf, xi, coeffs, *, tile: int = DEFAULT_TILE,
     xf = x.reshape(n)
     xif = xi.reshape(n)
     buff = buf.reshape(P, n)
-    t = min(tile, n)
-    if n % t:  # pad to tile multiple
-        pad = t - n % t
-        xf = jnp.pad(xf, (0, pad))
-        xif = jnp.pad(xif, (0, pad))
-        buff = jnp.pad(buff, ((0, 0), (0, pad)))
-    grid = (xf.size // t,)
+    t = choose_tile(n, tile)
+    grid = (pl.cdiv(n, t),)
     out = pl.pallas_call(
         functools.partial(_kernel, P=P),
         grid=grid,
@@ -76,7 +107,7 @@ def sa_update(x, buf, xi, coeffs, *, tile: int = DEFAULT_TILE,
             pl.BlockSpec((t,), lambda i: (i,)),          # xi tile
         ],
         out_specs=pl.BlockSpec((t,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
         interpret=interpret,
     )(coeffs.astype(jnp.float32), xf, buff, xif)
-    return out[:n].reshape(shape)
+    return out.reshape(shape)

@@ -19,6 +19,17 @@ Costs per instruction:
     bytes            operands + results of every top-level (unfused)
                      instruction except free ops (parameter/constant/
                      tuple/gte/bitcast/reshape) — mirrors HloCostAnalysis.
+                     Raw dynamic-slice charges the slice (not the full
+                     operand) and raw dynamic-update-slice charges the
+                     update region twice plus its indices: inside a loop
+                     XLA aliases the buffer and writes the row in place,
+                     so charging the full [P, N] operand (as the naive
+                     operands+results rule would) over-counts a
+                     ring-buffer history write by P x. (A DUS that XLA
+                     wraps in a fusion is still charged at the fusion's
+                     operand/result sizes — conservative; the analytic
+                     model in ``benchmarks/bench_hotpath.py`` carries the
+                     ideal-fusion number.)
     collective bytes result-shape bytes of all-gather / all-reduce /
                      reduce-scatter / all-to-all / collective-permute
                      (one entry per *-start; *-done skipped).
@@ -32,7 +43,7 @@ from __future__ import annotations
 import dataclasses
 import re
 
-__all__ = ["analyze_hlo", "HloCost"]
+__all__ = ["analyze_hlo", "analyze_compiled", "HloCost"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
@@ -87,6 +98,14 @@ class _Comp:
     coll_bytes: dict = dataclasses.field(default_factory=dict)
     calls: list = dataclasses.field(default_factory=list)  # (callee, mult)
     fused: bool = False  # called via fusion => bytes not counted inside
+    #: update-operand bytes when this computation's ROOT is a
+    #: dynamic-update-slice (None otherwise) — fusions rooted in a DUS
+    #: alias their buffer operand and write only the update region, so
+    #: the caller's operands+result charge is corrected post-parse
+    root_dus_update: float | None = None
+    #: (callee, fusion result bytes, has result-sized operand) per fusion
+    #: edge, for that correction
+    fusion_edges: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -100,6 +119,14 @@ class HloCost:
     @property
     def collective_total(self) -> float:
         return float(sum(self.coll_bytes.values()))
+
+
+def analyze_compiled(compiled) -> "HloCost":
+    """Analyze a jax AOT executable (anything exposing ``as_text()``) —
+    the trip-count-aware alternative to ``compiled.cost_analysis()``,
+    which counts a while-loop body once and charges in-place
+    dynamic-update-slice at the full operand size."""
+    return analyze_hlo(compiled.as_text())
 
 
 def _parse_operand_shapes(line: str, shapes: dict) -> list[str]:
@@ -158,6 +185,10 @@ def analyze_hlo(hlo: str) -> HloCost:
                 cur.calls.append((callee, w_mult))
             elif opcode == "fusion" and attr == "calls":
                 cur.calls.append((callee, 1))
+                aliasable = any(
+                    _shape_elems_bytes(s)[1] == rbytes
+                    for s in _parse_operand_shapes(line, shapes))
+                cur.fusion_edges.append((callee, rbytes, aliasable))
                 fused_names.add(callee)
             elif opcode in ("call", "conditional", "map", "custom-call"):
                 cur.calls.append((callee, 1))
@@ -178,16 +209,47 @@ def analyze_hlo(hlo: str) -> HloCost:
         elif opcode in _TRANSCEND:
             cur.transcendentals += elems
 
+        if opcode == "dynamic-update-slice" and "ROOT" in line:
+            ops_root = _parse_operand_shapes(line, shapes)
+            if len(ops_root) > 1:
+                cur.root_dus_update = _shape_elems_bytes(ops_root[1])[1]
         if opcode in _FREE:
             continue
-        obytes = sum(_shape_elems_bytes(s)[1]
-                     for s in _parse_operand_shapes(line, shapes))
+        op_shapes = _parse_operand_shapes(line, shapes)
+        if opcode == "dynamic-slice":
+            # slice read + result write + scalar start indices
+            idx = sum(_shape_elems_bytes(s)[1] for s in op_shapes[1:])
+            cur.bytes += 2 * rbytes + idx
+            continue
+        if opcode == "dynamic-update-slice":
+            # in-place row write: update read + updated region write +
+            # start indices; the aliased full operand is NOT re-read
+            upd = _shape_elems_bytes(op_shapes[1])[1] if len(op_shapes) > 1 \
+                else rbytes
+            idx = sum(_shape_elems_bytes(s)[1] for s in op_shapes[2:])
+            cur.bytes += 2 * upd + idx
+            continue
+        obytes = sum(_shape_elems_bytes(s)[1] for s in op_shapes)
         cur.bytes += rbytes + obytes
 
         for kind in _COLLECTIVES:
             if opcode == kind or opcode == kind + "-start":
                 cur.coll_bytes[kind] = cur.coll_bytes.get(kind, 0) + rbytes
                 break
+
+    # correct DUS-rooted fusions: the buffer operand is aliased to the
+    # result and only the update region is written, so replace the
+    # operands+result charge (which counted the full buffer twice) with
+    # (other operands) + (update-region write) — the in-loop ring-buffer
+    # row write costs one row, not 2 x [P, N]. Applied only when the
+    # fusion takes a result-sized operand (the aliasable buffer): a DUS
+    # whose base is produced *inside* the fusion (e.g. a broadcast(0)
+    # init) never charged that operand, so there is nothing to remove.
+    for c in comps.values():
+        for callee, res_bytes, aliasable in c.fusion_edges:
+            upd = getattr(comps.get(callee), "root_dus_update", None)
+            if upd is not None and aliasable:
+                c.bytes += upd - 2.0 * res_bytes
 
     # propagate multiplicities from ENTRY
     mult: dict[str, float] = {c: 0.0 for c in comps}

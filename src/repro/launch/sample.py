@@ -88,6 +88,21 @@ def main():
     ap.add_argument("--cond-file", default=None,
                     help=".npy conditioning array, broadcastable to the "
                     "latent (seq, dz)")
+    ap.add_argument("--combine", default="einsum",
+                    choices=["einsum", "kernel", "fused"],
+                    help="SA combine path: XLA einsum, the Pallas "
+                    "sa_update kernel, or the dual-output fused "
+                    "predictor+corrector kernel (one pass over the "
+                    "history; ring layout)")
+    ap.add_argument("--history", default="ring",
+                    choices=["ring", "concat"],
+                    help="SA evaluation-history layout (concat is the "
+                    "legacy re-materializing baseline)")
+    ap.add_argument("--precision", default="f32",
+                    choices=["f32", "bf16"],
+                    help="hot-loop precision policy: bf16 carries the "
+                    "scan state/history in bfloat16 with f32 "
+                    "accumulation")
     args = ap.parse_args()
 
     cfg, model, params = build_denoiser(args.arch, args.smoke, args.latent)
@@ -100,6 +115,8 @@ def main():
         schedule=schedule, grid=args.grid,
         tau=args.tau, predictor_order=args.predictor,
         corrector_order=args.corrector, mode=args.mode,
+        combine=args.combine, history=args.history,
+        precision=args.precision,
         prediction=args.prediction, guidance=guidance,
     )
     sampler = Sampler(spec)

@@ -4,7 +4,10 @@ Requests are grouped by **bucket key** — ``(SamplerSpec, latent shape,
 dtype, cond structure)`` — because that tuple determines the compiled
 executor: the spec
 fixes the sampler family and its trace-relevant statics (including the
-denoiser adapter's prediction type and the guidance on/off flag), the
+denoiser adapter's prediction type, the guidance on/off flag, the
+history layout, and the ``precision`` policy — an f32 and a bf16
+request compile different hot loops and therefore land in different
+buckets), the
 shape/dtype fix the argument avals, and the conditioning pytree joins
 only by its shape/dtype *structure*. Everything else (tau value,
 coefficient tables, the solve grid values, the conditioning values, the

@@ -10,7 +10,12 @@ queue, and the serving loop:
   different specs/shapes coexist in the queue; the engine groups them by
   ``(spec, shape, dtype, cond structure)`` bucket (see
   :mod:`repro.serve.batching`) — conditioning *values* and the guidance
-  scale are traced data and never split a bucket or recompile.
+  scale are traced data and never split a bucket or recompile. The
+  spec's ``precision`` ("f32" | "bf16") and ``history`` fields ride the
+  bucket key like every other static: a bf16 request is AOT-warmed as
+  its own bucket whose scan state and evaluation history live in
+  bfloat16 (f32 accumulation in-kernel), halving the hot loop's HBM
+  bytes for precision-tolerant traffic.
 - ``step()`` serves the oldest bucket as one microbatch: ragged tails are
   padded with *masked* dummy lanes (never duplicated requests), each lane
   draws its initial noise and solve path from ``fold_in(seed, rid)`` so
@@ -46,6 +51,7 @@ from typing import Any, Callable, Hashable, Sequence
 import jax
 import jax.numpy as jnp
 
+from ..core.denoiser import Denoiser
 from ..core.samplers import (SamplerSpec, build_plan, compile_cache_stats,
                              sample_batched, sample_sharded, warmup)
 from .batching import MicroBatch, Request, fold_keys, form_microbatches
@@ -135,6 +141,15 @@ class ServeEngine:
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
+        # validate here, where the scale is still a host float: by serve
+        # time it rides the executor as a traced per-lane array, so the
+        # base layer's sync-free guard can no longer see its value
+        guided = isinstance(self.model_fn, Denoiser) and \
+            self.model_fn.guidance
+        if not guided and float(guidance_scale) != 1.0:
+            raise ValueError(
+                "guidance_scale has no effect without a guidance-enabled "
+                "Denoiser engine model — it would be silently dropped")
         if cond is not None:
             cond = jax.tree.map(jnp.asarray, cond)
         self._queue.append(Request(

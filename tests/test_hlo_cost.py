@@ -69,6 +69,75 @@ print("OK")
     assert "OK" in out
 
 
+def test_dynamic_update_slice_charged_at_update_size():
+    """The ring-buffer history write is one row, not 2 x [P, N]: both a
+    raw dynamic-update-slice and the kLoop fusion XLA wraps it in must be
+    charged at the update region."""
+    out = run_sub("""
+import jax, jax.numpy as jnp
+from repro.launch.hlo_cost import analyze_hlo
+P, N = 4, 4096
+buf = jax.ShapeDtypeStruct((P, N), jnp.float32)
+e = jax.ShapeDtypeStruct((N,), jnp.float32)
+i = jax.ShapeDtypeStruct((), jnp.int32)
+def dus(b, v, j):
+    return jax.lax.dynamic_update_index_in_dim(b, v, j % P, axis=0)
+row = N * 4
+c = jax.jit(dus, donate_argnums=(0,)).lower(buf, e, i).compile()
+b_dus = analyze_hlo(c.as_text()).bytes
+assert b_dus < 3 * row, (b_dus / row,)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_raw_dynamic_slice_ops_charged_at_slice_size():
+    """Analyzer-level contract on handcrafted HLO: raw dynamic-slice and
+    dynamic-update-slice instructions are charged at the slice/update
+    they move (mirroring HloCostAnalysis), not at their full operand."""
+    from repro.launch.hlo_cost import analyze_hlo
+    hlo = """
+ENTRY %main (p0: f32[4,1024], p1: f32[1,1024], p2: s32[]) -> f32[4,1024] {
+  %p0 = f32[4,1024]{1,0} parameter(0)
+  %p1 = f32[1,1024]{1,0} parameter(1)
+  %p2 = s32[] parameter(2)
+  %ds = f32[1,1024]{1,0} dynamic-slice(f32[4,1024]{1,0} %p0, s32[] %p2, s32[] %p2), dynamic_slice_sizes={1,1024}
+  ROOT %dus = f32[4,1024]{1,0} dynamic-update-slice(f32[4,1024]{1,0} %p0, f32[1,1024]{1,0} %ds, s32[] %p2, s32[] %p2)
+}
+"""
+    row = 1024 * 4
+    cost = analyze_hlo(hlo)
+    # ds: 2 rows (slice read + write) + 8 index bytes; dus: 2 rows + 8
+    assert cost.bytes == 4 * row + 16, (cost.bytes / row,)
+
+
+def test_dus_fusion_with_in_fusion_base_not_over_corrected():
+    """A DUS-rooted fusion whose base buffer is produced INSIDE the
+    fusion (e.g. the zeros-init ``.at[0].set(e0)``) never charged that
+    operand, so the aliasing correction must not fire — bytes stay
+    non-negative."""
+    from repro.launch.hlo_cost import analyze_hlo
+    hlo = """
+%fused_init (p0: f32[1,1024], p1: s32[]) -> f32[4,1024] {
+  %p0 = f32[1,1024]{1,0} parameter(0)
+  %p1 = s32[] parameter(1)
+  %zero = f32[] constant(0)
+  %base = f32[4,1024]{1,0} broadcast(f32[] %zero), dimensions={}
+  ROOT %dus = f32[4,1024]{1,0} dynamic-update-slice(f32[4,1024]{1,0} %base, f32[1,1024]{1,0} %p0, s32[] %p1, s32[] %p1)
+}
+
+ENTRY %main (e: f32[1,1024], i: s32[]) -> f32[4,1024] {
+  %e = f32[1,1024]{1,0} parameter(0)
+  %i = s32[] parameter(1)
+  ROOT %f = f32[4,1024]{1,0} fusion(f32[1,1024]{1,0} %e, s32[] %i), kind=kLoop, calls=%fused_init
+}
+"""
+    cost = analyze_hlo(hlo)
+    # fusion charge: operands (1 row + 4) + result (4 rows), un-corrected
+    assert cost.bytes > 0
+    assert cost.bytes == 5 * 1024 * 4 + 4, (cost.bytes,)
+
+
 def test_nested_while_multiplicity():
     out = run_sub("""
 import jax, jax.numpy as jnp

@@ -1,0 +1,256 @@
+"""Zero-copy hot path: ring-buffer history, fused dual-output combine,
+and the precision policy.
+
+The load-bearing contract: the f32 ring executor (einsum AND kernel
+combine) is **bitwise identical** to the seed concat executor across
+PEC/PECE, predictor/corrector orders, trajectory on/off, and both
+parameterizations — the ring gathers its rows newest-first before the
+combine, so the same values flow through the same reduction. The fused
+dual-output combine and the bf16 policy are tolerance modes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GMM, get_schedule, samplers
+from repro.core.samplers import SamplerSpec, build_plan, make_sampler
+
+SCHED = get_schedule("vp_linear")
+GMM2 = GMM.default_2d()
+MODEL = GMM2.model_fn(SCHED, "data")
+MODEL_EPS = GMM2.model_fn(SCHED, "noise")
+XT = jax.random.normal(jax.random.PRNGKey(9), (96, 2))
+KEY = jax.random.PRNGKey(0)
+LINEAR = lambda x, t: 0.8 * x
+
+
+def _solve(history, trajectory=False, model=MODEL, x=XT, **kw):
+    s = make_sampler("sa", schedule=SCHED, history=history, **kw)
+    return s.sample(model, x, KEY, trajectory=trajectory)
+
+
+def _assert_bitwise(a, b):
+    if isinstance(a, tuple):
+        (xa, ta), (xb, tb) = a, b
+        assert bool(jnp.all(xa == xb))
+        for k in ta:
+            assert bool(jnp.all(ta[k] == tb[k])), f"traj[{k}] differs"
+    else:
+        assert a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+
+
+# ------------------------------------------------- ring bitwise vs concat
+@pytest.mark.parametrize("combine", ["einsum", "kernel"])
+@pytest.mark.parametrize("mode", ["PEC", "PECE"])
+@pytest.mark.parametrize("p,c", [(1, 1), (2, 2), (3, 3)])
+def test_ring_bitwise_matrix(combine, mode, p, c):
+    """PEC/PECE x orders 1-3 x einsum/kernel combine, with trajectory:
+    f32 ring == seed concat executor, bit for bit."""
+    kw = dict(n_steps=5, tau=0.8, predictor_order=p, corrector_order=c,
+              mode=mode, combine=combine)
+    _assert_bitwise(_solve("concat", trajectory=True, **kw),
+                    _solve("ring", trajectory=True, **kw))
+
+
+@pytest.mark.parametrize("combine", ["einsum", "kernel"])
+@pytest.mark.parametrize("p,c", [(3, 3), (3, 0)])
+def test_ring_bitwise_no_trajectory(combine, p, c):
+    kw = dict(n_steps=6, tau=0.5, predictor_order=p, corrector_order=c,
+              combine=combine)
+    _assert_bitwise(_solve("concat", **kw), _solve("ring", **kw))
+
+
+def test_ring_bitwise_noise_param_no_denoise():
+    """Noise parameterization exercises the x0-preview reconstruction and
+    denoise_final=False the plain final state."""
+    kw = dict(n_steps=6, tau=0.4, parameterization="noise",
+              denoise_final=False, predictor_order=2, corrector_order=2)
+    _assert_bitwise(_solve("concat", trajectory=True, model=MODEL_EPS, **kw),
+                    _solve("ring", trajectory=True, model=MODEL_EPS, **kw))
+
+
+def test_ring_bitwise_denoise_final_picks_newest_eval():
+    """denoise_final replaces x by the newest buffered eval: ring slot
+    M mod P must equal concat row 0."""
+    for steps in (4, 5, 7):  # sweep M mod P over 1, 2, 0
+        kw = dict(n_steps=steps, tau=0.3, denoise_final=True)
+        _assert_bitwise(_solve("concat", **kw), _solve("ring", **kw))
+
+
+def test_ring_bitwise_identical_to_legacy_sasolver():
+    """The ring default keeps the legacy bitwise-regression contract: the
+    legacy SASolver shim and the ring registry path agree bit for bit."""
+    from repro.core import SASolver, SASolverConfig
+    cfg = SASolverConfig(n_steps=10, predictor_order=3, corrector_order=3,
+                         tau=1.0, mode="PEC")
+    legacy = SASolver(SCHED, cfg).sample(MODEL, XT, KEY)
+    ring = _solve("ring", n_steps=10, tau=1.0)
+    assert bool(jnp.all(legacy == ring))
+
+
+# --------------------------------------------------- fused dual combine
+@pytest.mark.parametrize("mode", ["PEC", "PECE"])
+@pytest.mark.parametrize("p,c", [(3, 3), (2, 1), (3, 0)])
+def test_fused_combine_matches_einsum_tight_tol(mode, p, c):
+    kw = dict(n_steps=8, tau=0.7, predictor_order=p, corrector_order=c,
+              mode=mode)
+    a = _solve("ring", **kw)
+    b = _solve("ring", combine="fused", **kw)
+    assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+
+
+def test_fused_requires_ring_history():
+    with pytest.raises(ValueError, match="fused"):
+        build_plan(SamplerSpec(name="sa", schedule=SCHED, combine="fused",
+                               history="concat"))
+
+
+@pytest.mark.parametrize("field,value", [
+    ("combine", "nope"), ("history", "nope"), ("precision", "f16")])
+def test_invalid_static_values_raise(field, value):
+    with pytest.raises(ValueError, match=field):
+        build_plan(SamplerSpec(name="sa", schedule=SCHED, **{field: value}))
+
+
+# ----------------------------------------------------- precision policy
+def test_bf16_policy_tracks_f32_pointwise():
+    """bf16 carries the state/history in bfloat16 but accumulates in f32
+    and draws the SAME noise stream as f32 — pointwise drift stays at
+    bf16 rounding scale."""
+    a = _solve("ring", model=LINEAR, n_steps=8, tau=0.7)
+    b = _solve("ring", model=LINEAR, n_steps=8, tau=0.7, combine="fused",
+               precision="bf16")
+    assert b.dtype == jnp.bfloat16
+    dev = float(jnp.max(jnp.abs(a - b.astype(jnp.float32))))
+    assert dev < 0.1 * float(jnp.std(a) + 1.0), dev
+
+
+def test_bf16_policy_solves_gmm_to_f32_quality():
+    """Distribution-level quality of the bf16 hot loop matches f32."""
+    from repro.core.metrics import sliced_w2
+    target = GMM2.sample(jax.random.PRNGKey(5), XT.shape[0])
+    mkey = jax.random.PRNGKey(6)
+    w32 = sliced_w2(_solve("ring", n_steps=12), target, mkey)
+    w16 = sliced_w2(
+        _solve("ring", n_steps=12, combine="fused",
+               precision="bf16").astype(jnp.float32), target, mkey)
+    assert float(w16) < 1.3 * float(w32) + 0.05
+
+
+def test_bf16_baselines_track_f32():
+    """Every baseline honors spec.precision: bf16 carry, f32 math."""
+    for name in ("ddim", "ddpm_ancestral", "dpm_solver_pp_2m",
+                 "euler_maruyama", "edm_heun", "edm_stochastic"):
+        a = make_sampler(name, schedule=SCHED, n_steps=6).sample(
+            LINEAR, XT, KEY)
+        b = make_sampler(name, schedule=SCHED, n_steps=6,
+                         precision="bf16").sample(LINEAR, XT, KEY)
+        assert b.dtype == jnp.bfloat16, name
+        dev = float(jnp.max(jnp.abs(a - b.astype(jnp.float32))))
+        assert dev < 0.1 * float(jnp.std(a) + 1.0), (name, dev)
+
+
+def test_baseline_precision_f32_stays_bitwise():
+    """At f32 the baseline policy casts are identities: explicit f32
+    precision equals the default path bit for bit."""
+    for name in ("ddim", "dpm_solver_pp_2m", "edm_stochastic"):
+        a = make_sampler(name, schedule=SCHED, n_steps=6).sample(
+            MODEL, XT, KEY)
+        b = make_sampler(name, schedule=SCHED, n_steps=6,
+                         precision="f32").sample(MODEL, XT, KEY)
+        assert bool(jnp.all(a == b)), name
+
+
+# ------------------------------------------- statics / compile-cache keys
+def test_precision_and_history_key_the_compile_cache():
+    samplers.clear_compile_cache()
+    for kw in (dict(), dict(precision="bf16"), dict(history="concat"),
+               dict(combine="fused")):
+        make_sampler("sa", schedule=SCHED, n_steps=5, **kw).sample(
+            MODEL, XT[:32], KEY, model_key="hotpath-key")
+    assert samplers.compile_cache_stats()["misses"] == 4
+
+
+def test_ring_tau_sweep_reuses_one_executor():
+    """The ring head is derived from the step index, so tau stays pure
+    data: a tau sweep at fixed step count never recompiles."""
+    samplers.clear_compile_cache()
+    for tau in (0.0, 0.5, 1.0, 1.5):
+        make_sampler("sa", schedule=SCHED, n_steps=5, tau=tau).sample(
+            MODEL, XT[:32], KEY, model_key="hotpath-tau")
+    stats = samplers.compile_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 3
+
+
+# ------------------------------------ serving: precision splits buckets
+def test_serve_buckets_split_by_precision():
+    from repro.serve import ServeEngine
+    engine = ServeEngine(MODEL, bucket_sizes=(4,))
+    spec32 = SamplerSpec(name="sa", schedule=SCHED, n_steps=4, tau=0.5)
+    spec16 = spec32.replace(precision="bf16", combine="fused")
+    engine.submit(spec32, (32, 2))
+    engine.submit(spec16, (32, 2))
+    engine.submit(spec32, (32, 2))
+    results = engine.run()
+    assert len(results) == 3
+    stats = engine.stats()
+    assert stats["microbatches"] == 2  # f32 and bf16 never share a bucket
+    dtypes = {r.rid: r.x0.dtype for r in results}
+    assert dtypes[1] == jnp.bfloat16
+    assert dtypes[0] == dtypes[2] == jnp.float32
+
+
+def test_serve_submit_rejects_unguided_scale():
+    """By serve time the scale is traced per-lane data, so submit() —
+    which still holds the host float — is where a non-unity scale
+    against a plain engine model must be rejected."""
+    from repro.serve import ServeEngine
+    engine = ServeEngine(MODEL, bucket_sizes=(2,))
+    spec = SamplerSpec(name="sa", schedule=SCHED, n_steps=4, tau=0.5)
+    with pytest.raises(ValueError, match="guidance_scale"):
+        engine.submit(spec, (16, 2), guidance_scale=3.0)
+    engine.submit(spec, (16, 2))  # unity scale is fine
+    assert engine.pending() == 1
+
+
+# ----------------------------- guidance-scale guard: no blocking sync
+def test_scalar_guidance_guard_is_host_side():
+    """sample() with a Python-scalar guidance_scale must never execute a
+    device->host sync (the old ``bool(jnp.any(...))`` guard blocked the
+    serving hot path once per call)."""
+    def boom(*a, **k):  # pragma: no cover - should never run
+        raise AssertionError("jnp.any called on the scalar-scale path "
+                             "(device round-trip)")
+    real = jnp.any
+    s = make_sampler("sa", schedule=SCHED, n_steps=4, tau=0.5)
+    s.sample(MODEL, XT[:32], KEY)  # compile outside the patch
+    try:
+        jnp.any = boom
+        x = s.sample(MODEL, XT[:32], KEY)                   # default 1.0
+        x2 = s.sample(MODEL, XT[:32], KEY, guidance_scale=1.0)
+    finally:
+        jnp.any = real
+    assert bool(jnp.all(jnp.isfinite(x))) and bool(jnp.all(x == x2))
+
+
+def test_scalar_guidance_guard_still_validates():
+    s = make_sampler("sa", schedule=SCHED, n_steps=4, tau=0.5)
+    with pytest.raises(ValueError, match="guidance_scale"):
+        s.sample(MODEL, XT[:32], KEY, guidance_scale=3.0)
+    # numpy scalars/arrays are host values too: checked for free, no sync
+    with pytest.raises(ValueError, match="guidance_scale"):
+        s.sample(MODEL, XT[:32], KEY, guidance_scale=np.float32(3.0))
+    with pytest.raises(ValueError, match="guidance_scale"):
+        s.sample(MODEL, XT[:32], KEY, guidance_scale=np.array(3.0))
+
+
+def test_array_guidance_scale_skips_guard_without_sync():
+    """Device-array scales skip the unity check (checking would force
+    the very sync the host path avoids); the call must still succeed."""
+    s = make_sampler("sa", schedule=SCHED, n_steps=4, tau=0.5)
+    x = s.sample(MODEL, XT[:32], KEY,
+                 guidance_scale=jnp.asarray(1.0, jnp.float32))
+    assert bool(jnp.all(jnp.isfinite(x)))

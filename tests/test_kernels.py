@@ -6,9 +6,11 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ref import flash_attention_ref, sa_update_ref, wkv_ref
+from repro.kernels.ref import (flash_attention_ref, sa_fused_update_ref,
+                               sa_update_ref, wkv_ref)
 from repro.kernels.rwkv6_scan import rwkv6_wkv
-from repro.kernels.sa_update import sa_update
+from repro.kernels.sa_fused import sa_fused_update
+from repro.kernels.sa_update import LANE_ALIGN, choose_tile, sa_update
 
 
 @pytest.mark.parametrize("shape", [(64,), (4, 100, 7), (2, 33, 5, 3), (1,)])
@@ -27,6 +29,82 @@ def test_sa_update_sweep(shape, P, dtype):
     tol = 1e-6 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", [(64,), (4, 100, 7), (1,)])
+@pytest.mark.parametrize("P", [1, 3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sa_fused_sweep(shape, P, dtype):
+    """Dual-output kernel vs its jnp oracle: both outputs, ragged tiles
+    included ((4,100,7) has no 128-aligned divisor)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    buf = jax.random.normal(ks[1], (P,) + shape, dtype)
+    xi = jax.random.normal(ks[2], shape, dtype)
+    coeffs = jnp.stack([
+        jnp.asarray([0.9, 0.1] + [0.3 / (j + 1) for j in range(P)]),
+        jnp.asarray([0.9, 0.1] + [-0.2 * (j + 1) for j in range(P)]),
+    ]).astype(jnp.float32)
+    pred, corr = sa_fused_update(x, buf, xi, coeffs, tile=128)
+    pred_r, corr_r = sa_fused_update_ref(x, buf, xi, coeffs)
+    tol = 2e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(pred, np.float32),
+                               np.asarray(pred_r, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(corr, np.float32),
+                               np.asarray(corr_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_sa_fused_rows_match_single_combines():
+    """Each fused output equals the single-combine oracle with the same
+    packed row — the dual kernel is two sa_updates in one pass."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    x = jax.random.normal(ks[0], (512,))
+    buf = jax.random.normal(ks[1], (3, 512))
+    xi = jax.random.normal(ks[2], (512,))
+    c = jnp.asarray([[0.8, 0.2, 0.1, -0.2, 0.3],
+                     [0.8, 0.2, 0.4, 0.1, -0.1]], jnp.float32)
+    pred, corr = sa_fused_update(x, buf, xi, c, tile=128)
+    np.testing.assert_allclose(np.asarray(pred),
+                               np.asarray(sa_update_ref(x, buf, xi, c[0])),
+                               atol=2e-6, rtol=2e-6)
+    np.testing.assert_allclose(np.asarray(corr),
+                               np.asarray(sa_update_ref(x, buf, xi, c[1])),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_choose_tile_prefers_aligned_divisors():
+    """Steady-state scan steps must be copy-free: when the flattened size
+    has a lane-aligned divisor, the tile divides it exactly (no padding,
+    no ragged block); otherwise the requested tile is kept and the final
+    block is masked."""
+    A = LANE_ALIGN
+    assert choose_tile(8 * A, 64 * A) == 8 * A          # n <= tile: one block
+    assert choose_tile(6 * A, 4 * A) == 3 * A           # largest divisor <= 4A
+    assert choose_tile(12 * A, 5 * A) == 4 * A
+    assert 2800 % choose_tile(2800, 65536) == 0         # n itself
+    assert choose_tile(2800, 128) == 128                # ragged fallback
+    assert choose_tile(7, 128) == 7                     # tiny latent
+    n = 100 * A + 3  # prime-ish: no aligned divisor
+    assert choose_tile(n, 4 * A) == 4 * A
+    # a tiny sole divisor (A * large_prime) must NOT shrink the tile to
+    # A and explode the grid — the ragged masked path wins below tile/8
+    assert choose_tile(A * 9973, 32 * A) == 32 * A
+
+
+def test_sa_update_unaligned_sizes_are_exact():
+    """Ragged final blocks (masked, not padded) stay exact for sizes with
+    no aligned divisor."""
+    for n in (1, 7, 130, 2800, 5003):
+        ks = jax.random.split(jax.random.PRNGKey(n), 3)
+        x = jax.random.normal(ks[0], (n,))
+        buf = jax.random.normal(ks[1], (2, n))
+        xi = jax.random.normal(ks[2], (n,))
+        c = jnp.asarray([0.7, 0.1, 0.5, -0.3], jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(sa_update(x, buf, xi, c, tile=256)),
+            np.asarray(sa_update_ref(x, buf, xi, c)), atol=1e-6, rtol=1e-6)
 
 
 @pytest.mark.slow
