@@ -1,0 +1,220 @@
+"""Step-program search: per-interval (order, mode, tau) programs vs the
+fixed-spec SA-Solver default, on the GMM oracle at a hard NFE budget.
+
+    PYTHONPATH=src python benchmarks/bench_step_programs.py [--smoke]
+
+The paper tunes ONE tau (banded over sigma, Appendix E) on top of a
+fixed-order Adams scheme; solver-search follow-ups (Unified Sampling
+Framework; Adaptive Stochastic Coefficients) let order, corrector usage,
+and stochastic coefficients vary per step. This benchmark is that search
+at small scale: every candidate is a :class:`repro.core.StepProgram` at
+NFE <= 8 (7 PEC steps, or fewer steps when a PECE/mode variant spends
+evals twice), solved against the exact GMM x0-posterior so the program is
+the ONLY variable, and scored by sliced-W2 against ground-truth samples
+(averaged over projection keys and solve seeds).
+
+Contracts asserted here (this benchmark is the PR's regression gate):
+
+- the constant-order/constant-tau program is **bitwise identical** to the
+  fixed-spec default it mirrors (same compiled executor, byte-equal
+  tables);
+- the main sweep — programs varying per-interval *orders and taus* at a
+  fixed step count and mode pattern — causes exactly ONE compile-cache
+  miss (the first solve): programs are table data, not trace structure;
+- the best program beats the fixed order-3 constant-tau default on the
+  oracle metric, and is recorded (as JSON) in ``BENCH_RESULTS.json`` via
+  ``benchmarks.run``.
+"""
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BandedTau, StepProgram, program_preset, samplers
+from repro.core.metrics import sliced_w2
+from repro.core.programs import (anneal_taus, program_preset_for_nfe,
+                                 ramp_orders)
+from repro.core.samplers import SamplerSpec, build_plan
+from repro.core.samplers import sample as plan_sample
+
+try:  # python -m benchmarks.run
+    from .common import (GMM_TARGET, SCHED, data_model, print_table,
+                         target_samples)
+except ImportError:  # python benchmarks/bench_step_programs.py
+    from common import (GMM_TARGET, SCHED, data_model, print_table,
+                        target_samples)
+
+NFE_BUDGET = 8
+N_STEPS = NFE_BUDGET - 1  # PEC spends steps + 1
+
+
+def _spec(n_steps: int, program: StepProgram | None = None,
+          **kw) -> SamplerSpec:
+    return SamplerSpec(name="sa", schedule=SCHED, grid="logsnr",
+                       n_steps=n_steps, denoise_final=False,
+                       program=program, **kw)
+
+
+def _w3(prog: StepProgram) -> StepProgram:
+    return prog.replace(width=3)
+
+
+def order_tau_candidates(smoke: bool):
+    """The main sweep: fixed step count (N_STEPS), fixed mode pattern
+    (all PEC, corrector on) — orders and taus are pure table data, so
+    the whole family shares ONE compiled executor. ``width=3`` pins the
+    table row count so lower-order programs keep the same aval.
+    Candidates come from the shipped presets (and their ``anneal_taus``/
+    ``ramp_orders`` building blocks) so what the search scores is
+    definitionally what ``program_preset`` serves."""
+    M = N_STEPS
+    taus = ((0.0, 0.6, 1.0) if smoke
+            else (0.0, 0.2, 0.4, 0.6, 0.8, 1.0))
+    for t in taus:
+        yield f"const tau={t}", _w3(program_preset("constant", M, tau=t))
+    for t in ((1.0,) if smoke else (0.6, 1.0, 1.4)):
+        yield (f"anneal tau={t}->0",
+               _w3(program_preset("tau-anneal", M, tau=t)))
+        yield (f"anneal tau={t}->0, order ramp",
+               _w3(program_preset("order-ramp", M).replace(
+                   tau=anneal_taus(t, M))))
+    yield "banded tau (App. E)", _w3(program_preset("tau-band", M))
+    head = M // 2
+    for t in ((1.0,) if smoke else (0.6, 1.0)):
+        yield (f"tau={t} head, 0 tail",
+               StepProgram(tau=(t,) * head + (0.0,) * (M - head), width=3))
+    if not smoke:
+        yield ("low-order head (1,2 then 3s)",
+               StepProgram(predictor_order=ramp_orders(M, 2)[:2]
+                           + (3,) * (M - 2),
+                           corrector_order=(1, 2) + (3,) * (M - 2),
+                           tau=anneal_taus(1.0, M), width=3))
+        yield ("order-2 everywhere, tau anneal",
+               StepProgram(predictor_order=2, corrector_order=2,
+                           tau=anneal_taus(1.0, M), width=3))
+
+
+def mode_candidates(smoke: bool):
+    """The mode frontier: PECE/predictor-only patterns change the traced
+    graph (and the per-step NFE), so these compile their own executors
+    and may run fewer steps to stay inside the NFE budget. The shipped
+    presets are stamped through ``program_preset_for_nfe`` — exactly
+    what ``launch.sample --program <preset>`` runs."""
+    pece = program_preset_for_nfe("pece-head", NFE_BUDGET)
+    yield (f"pece-head preset, {pece.length()} steps", _w3(pece)), \
+        pece.length()
+    winner = program_preset_for_nfe("nfe8-gmm", NFE_BUDGET)
+    yield (f"nfe8-gmm preset (anneal + P tail), {winner.length()} steps",
+           winner), winner.length()
+    if not smoke:
+        tail = program_preset_for_nfe("predictor-tail", NFE_BUDGET)
+        yield (f"predictor-tail preset (const tau), {tail.length()} steps",
+               _w3(tail)), tail.length()
+        # deterministic predictor-only tail, PECE head
+        yield ("PECE head + P tail, 6 steps",
+               StepProgram(mode=("PECE",) + ("PEC",) * 3 + ("P",) * 2,
+                           tau=(1.0, 0.8, 0.5, 0.2, 0.0, 0.0), width=3)), 6
+
+
+def evaluate(spec: SamplerSpec, n: int, seeds, proj_keys,
+             model_key: str) -> float:
+    """Mean sliced-W2 of ``n`` oracle solves against GMM ground truth,
+    averaged over solve seeds x projection keys (the search metric)."""
+    plan = build_plan(spec)
+    model = data_model("data")
+    vals = []
+    for s in seeds:
+        x_T = jax.random.normal(jax.random.PRNGKey(100 + s), (n, 2))
+        x = plan_sample(plan, model, x_T, jax.random.PRNGKey(s),
+                        model_key=model_key)
+        tgt = target_samples(jax.random.PRNGKey(200 + s), n)
+        vals.extend(float(sliced_w2(x, tgt, jax.random.PRNGKey(pk)))
+                    for pk in proj_keys)
+    return float(np.mean(vals))
+
+
+def run(smoke: bool = False) -> dict:
+    n = 2048 if smoke else 8192
+    seeds = (0,) if smoke else (0, 1, 2)
+    proj_keys = (13,) if smoke else (13, 17)
+
+    # -- the fixed-spec default this search has to beat ------------------
+    default_spec = _spec(N_STEPS)  # order 3, constant tau=1.0, PEC
+    assert default_spec.nfe == NFE_BUDGET
+    default_sw2 = evaluate(default_spec, n, seeds, proj_keys, "prog-bench")
+
+    # -- bitwise lock: the constant program IS the default ---------------
+    const_spec = _spec(N_STEPS, program=program_preset("constant", N_STEPS))
+    x_T = jax.random.normal(jax.random.PRNGKey(100), (256, 2))
+    a = plan_sample(build_plan(default_spec), data_model("data"), x_T,
+                    jax.random.PRNGKey(0), model_key="prog-bench")
+    b = plan_sample(build_plan(const_spec), data_model("data"), x_T,
+                    jax.random.PRNGKey(0), model_key="prog-bench")
+    assert bool(jnp.all(a == b)), \
+        "constant program must be bitwise-identical to the fixed spec"
+
+    # -- main sweep: order/tau programs, ONE executor --------------------
+    samplers.clear_compile_cache()
+    rows, results = [], []
+    for label, prog in order_tau_candidates(smoke):
+        spec = _spec(N_STEPS, program=prog)
+        assert spec.nfe <= NFE_BUDGET, (label, spec.nfe)
+        sw2 = evaluate(spec, n, seeds, proj_keys, "prog-bench")
+        results.append((label, prog, spec.nfe, sw2))
+        rows.append([label, spec.nfe, sw2])
+    stats = samplers.compile_cache_stats()
+    assert stats["misses"] == 1, (
+        f"order/tau program sweep must reuse ONE executor (orders and "
+        f"taus are table data), saw {stats['misses']} misses")
+
+    # -- mode frontier: own executors, still inside the budget -----------
+    for (label, prog), steps in mode_candidates(smoke):
+        spec = _spec(steps, program=prog)
+        assert spec.nfe <= NFE_BUDGET, (label, spec.nfe)
+        sw2 = evaluate(spec, n, seeds, proj_keys, "prog-bench")
+        results.append((label, prog, spec.nfe, sw2))
+        rows.append([label, spec.nfe, sw2])
+
+    rows.append(["FIXED DEFAULT (P3C3 PEC tau=1.0)", NFE_BUDGET,
+                 default_sw2])
+    print_table(
+        f"Step-program search at NFE<={NFE_BUDGET} "
+        f"(sliced-W2 vs GMM ground truth; lower is better)",
+        ["program", "nfe", "sw2"], rows)
+
+    best_label, best_prog, best_nfe, best_sw2 = min(results,
+                                                    key=lambda r: r[-1])
+    print(f"best: {best_label!r} sw2={best_sw2:.4f} "
+          f"vs default {default_sw2:.4f}")
+    assert best_sw2 < default_sw2, (
+        f"no program beat the fixed default ({best_sw2:.4f} vs "
+        f"{default_sw2:.4f})")
+    return {
+        "nfe_budget": NFE_BUDGET,
+        "metric": "sliced_w2_gmm",
+        "fixed_default_sw2": default_sw2,
+        "n_candidates": len(results),
+        "best_label": best_label,
+        "best_sw2": best_sw2,
+        "best_nfe": best_nfe,
+        "best_program": json.loads(best_prog.to_json()),
+        "compile_cache_misses_order_tau_sweep": stats["misses"],
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small candidate set / sample counts (CI)")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    print(json.dumps(out, indent=2, sort_keys=True))
+    print("step-program search OK: best program beats the fixed default; "
+          "order/tau sweep compiled once")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,8 @@ SECTIONS = [
     ("kernels", "kernel micro-benchmarks"),
     ("solver_overhead", "solver bookkeeping overhead"),
     ("hotpath", "hot path: ring vs concat history HBM bytes + latency"),
+    ("step_programs", "step-program search: per-interval order/mode/tau "
+     "vs the fixed default at NFE<=8"),
     ("serving", "serve engine: bucket throughput + compile-cache contract"),
     ("guidance", "denoiser adapter: CFG scale sweep + cache contract"),
 ]

@@ -3,6 +3,7 @@
 The paper's contribution, as a composable JAX module:
 
 - unified plan/execute sampler registry (SA + all baselines)      samplers/
+- per-step solver programs (variable order / mode / tau)          programs.py
 - variance-controlled diffusion SDE family (tau schedules)        tau.py
 - exact semi-linear solution machinery / Adams coefficients       coefficients.py
 - SA-Predictor / SA-Corrector, Algorithm 1 (legacy shim)          solver.py
@@ -17,6 +18,8 @@ Sampling entry point: ``make_sampler(name, nfe=..., ...)`` — see
 from .coefficients import SolverTables, build_tables, exp_monomial_integrals
 from .denoiser import Denoiser, canonical_prediction, convert_prediction
 from .oracle import GMM, gaussian_oracle, perturb_model
+from .programs import (StepProgram, list_presets, parse_program,
+                       program_preset)
 from . import samplers
 from .samplers import (
     Sampler,
@@ -66,6 +69,10 @@ __all__ = [
     "ConstantTau",
     "BandedTau",
     "DDIMEtaTau",
+    "StepProgram",
+    "program_preset",
+    "list_presets",
+    "parse_program",
     "GMM",
     "gaussian_oracle",
     "perturb_model",

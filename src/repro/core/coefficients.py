@@ -130,6 +130,10 @@ class SolverTables:
     #: schedule values on the grid (M+1,); used by the trajectory hook
     alphas: np.ndarray | None = None
     sigmas: np.ndarray | None = None
+    #: per-interval *effective* orders after the warm-up clamp (M,);
+    #: populated for step-program builds, None for fixed-spec builds
+    p_orders: np.ndarray | None = None
+    c_orders: np.ndarray | None = None
 
     @property
     def n_steps(self) -> int:
@@ -187,6 +191,7 @@ def build_tables(
     predictor_order: int = 3,
     corrector_order: int = 0,
     parameterization: str = "data",
+    program=None,
 ) -> SolverTables:
     """Precompute all per-step solver constants for the grid ``ts``.
 
@@ -194,28 +199,50 @@ def build_tables(
     Warm-up (Algorithm 1): at step i (0-based; i+1 prior evals available)
     the effective orders are min(i+1, predictor_order) and
     min(i+1, corrector_order).
+
+    ``program`` (a :class:`repro.core.programs.StepProgram`) overrides
+    ``tau``/``predictor_order``/``corrector_order`` with *per-interval*
+    tracks: each interval gets its own orders and tau, zero-padded into
+    tables of one fixed width, so variable-order tables are pure data to
+    the executor. Requested orders are clamped to the same warm-up ramp;
+    a program that pins constant order/tau produces byte-identical tables
+    to the fixed arguments it shadows.
     """
     if parameterization not in ("data", "noise"):
         raise ValueError(parameterization)
-    if isinstance(tau, (int, float)):
-        tau = ConstantTau(float(tau))
     ts = np.asarray(ts, dtype=np.float64)
     M = len(ts) - 1
     lams = schedule.lam(ts)
     alphas = schedule.alpha(ts)
     sigmas = schedule.sigma(ts)
-    taus = tau.on_intervals(schedule, ts)
+
+    if program is not None:
+        rp = program.resolve(schedule, ts)
+        taus = rp.taus
+        p_req = rp.p_orders
+        c_req = rp.c_orders
+        P = max(1, int(p_req.max()))
+        Cn = int(c_req.max())
+        R = max(P, Cn, 1, int(getattr(program, "width", 0)))
+    else:
+        if isinstance(tau, (int, float)):
+            tau = ConstantTau(float(tau))
+        taus = tau.on_intervals(schedule, ts)
+        p_req = np.full(M, max(1, predictor_order), dtype=int)
+        c_req = np.full(M, corrector_order, dtype=int)
+        P = max(1, predictor_order)
+        Cn = corrector_order
+        R = max(P, Cn, 1)  # buffer rows: both tables padded to this width
     if len(taus) != M:
         raise ValueError("tau schedule returned wrong length")
 
-    P = max(1, predictor_order)
-    Cn = corrector_order
-    R = max(P, Cn, 1)  # buffer rows: both tables padded to this width
     decay = np.zeros(M)
     noise = np.zeros(M)
     pred = np.zeros((M, R))
     corr_new = np.zeros(M)
     corr = np.zeros((M, R))
+    p_eff = np.zeros(M, dtype=int)
+    c_eff = np.zeros(M, dtype=int)
 
     for i in range(M):
         h = lams[i + 1] - lams[i]
@@ -230,15 +257,17 @@ def build_tables(
             j0 = (math.exp(2.0 * h) - 1.0) / 2.0 if h > 0 else 0.0
             noise[i] = sigmas[i + 1] * math.sqrt(max(2.0 * t2 * j0, 0.0))
 
-        p_ord = min(i + 1, P)
+        p_ord = min(i + 1, max(1, int(p_req[i])))
+        p_eff[i] = p_ord
         bp = _interval_coeffs(
             lams, i, p_ord, taus[i], alphas[i + 1], sigmas[i + 1],
             parameterization, include_new=False,
         )
         pred[i, :p_ord] = bp
 
-        if Cn > 0:
-            c_ord = min(i + 1, Cn)
+        if c_req[i] > 0:
+            c_ord = min(i + 1, int(c_req[i]))
+            c_eff[i] = c_ord
             bc = _interval_coeffs(
                 lams, i, c_ord, taus[i], alphas[i + 1], sigmas[i + 1],
                 parameterization, include_new=True,
@@ -252,4 +281,6 @@ def build_tables(
         predictor_order=P, corrector_order=Cn,
         parameterization=parameterization,
         alphas=alphas, sigmas=sigmas,
+        p_orders=p_eff if program is not None else None,
+        c_orders=c_eff if program is not None else None,
     )

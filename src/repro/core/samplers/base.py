@@ -134,6 +134,15 @@ class SamplerSpec:
     predictor_order: int = 3
     corrector_order: int = 3
     mode: str = "PEC"  # "PEC" | "PECE"
+    #: optional :class:`repro.core.programs.StepProgram` — per-interval
+    #: (predictor order, corrector order, P/PEC/PECE mode, tau) tracks.
+    #: When set it shadows tau/predictor_order/corrector_order/mode
+    #: above. Hashable, so it joins the compile-cache key (via the
+    #: family statics) and the serving bucket key (the spec itself);
+    #: per-interval orders and taus are table *data* — only the mode
+    #: pattern is trace-relevant. A program pinning constant order/tau
+    #: is bitwise-identical to the fixed-spec path.
+    program: Any = None
     #: "einsum" (one XLA contraction), "kernel" (the Pallas sa_update
     #: path; interpret-mode on CPU), or "fused" (dual-output
     #: predictor+corrector kernel — one pass over x/xi/history, ring only)

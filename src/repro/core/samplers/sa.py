@@ -50,10 +50,23 @@ stay f32. At f32 the policy casts are dtype-identities, so the default
 path stays bitwise-stable; bf16 halves the hot loop's HBM bytes at ~1e-2
 tolerance.
 
-Statics (compile-cache key): parameterization, corrector on/off, PECE,
-combine mode, denoise_final, history layout, precision. tau, the grid,
-and the coefficient values are *data*, so tau sweeps at a fixed step
-count reuse one compilation.
+Step programs (``spec.program``, a
+:class:`repro.core.programs.StepProgram`): per-interval (predictor order,
+corrector order, P/PEC/PECE mode, tau) tracks. Orders and taus land in
+the zero-padded coefficient tables — pure *data*, one executor per mode
+pattern — while the mode pattern itself is trace-relevant (a PECE step
+evaluates the model twice) and is baked into the statics as contiguous
+``(use_corrector, pece, length)`` segments, each run as its own
+``lax.scan`` over the shared carry. A single-segment (mode-uniform)
+program collapses to exactly the fixed-spec statics, so constant
+programs share the fixed path's compile-cache entry and are bitwise
+identical to it.
+
+Statics (compile-cache key): parameterization, mode structure (corrector
+on/off + PECE — or the program's segment tuple), combine mode,
+denoise_final, history layout, precision. tau, the grid, per-interval
+orders, and the coefficient values are *data*, so tau/order/program
+sweeps at a fixed step count reuse one compilation.
 """
 
 from __future__ import annotations
@@ -64,6 +77,7 @@ import jax.numpy as jnp
 from ...kernels import ops
 from ...kernels.sa_update import sa_update
 from ..coefficients import SolverTables, build_tables
+from ..programs import StepProgram
 from .base import (SamplerFamily, SamplerSpec, carry_dtype,
                    register_sampler)
 
@@ -90,6 +104,23 @@ def tables_to_arrays(tables: SolverTables) -> dict:
     return arrays
 
 
+def _check_program(spec: SamplerSpec) -> StepProgram | None:
+    if spec.program is None:
+        return None
+    if not isinstance(spec.program, StepProgram):
+        raise TypeError(
+            f"spec.program must be a StepProgram, got "
+            f"{type(spec.program).__name__} (build one with "
+            "repro.core.programs.StepProgram / program_preset / "
+            "parse_program)")
+    L = spec.program.length()
+    if L is not None and L != spec.n_steps:
+        raise ValueError(
+            f"program covers {L} intervals but the spec solves "
+            f"{spec.n_steps} steps")
+    return spec.program
+
+
 def plan_sa(spec: SamplerSpec):
     schedule = spec.resolve_schedule()
     ts = spec.grid_ts()
@@ -99,6 +130,7 @@ def plan_sa(spec: SamplerSpec):
         predictor_order=spec.predictor_order,
         corrector_order=spec.corrector_order,
         parameterization=spec.parameterization,
+        program=_check_program(spec),
     )
     return tables_to_arrays(tables), {"ts": ts, "tables": tables}
 
@@ -116,11 +148,22 @@ def sa_statics(spec: SamplerSpec) -> tuple:
             "combine='fused' takes the ring-buffer layout (its rotated "
             "coefficient columns encode the ring head); use "
             "history='ring' or a non-fused combine")
-    use_corrector = spec.corrector_order > 0
+    program = _check_program(spec)
+    if program is not None:
+        segs = program.segments(spec.n_steps)
+        if len(segs) == 1:
+            # mode-uniform program: exactly the fixed-spec statics, so it
+            # shares the fixed path's compile-cache entry (the bitwise
+            # regression lock — same executor, byte-equal tables)
+            modes = (segs[0][0], segs[0][1])
+        else:
+            modes = ("segments", segs)
+    else:
+        use_corrector = spec.corrector_order > 0
+        modes = (use_corrector, spec.mode == "PECE" and use_corrector)
     return (
         spec.parameterization,
-        use_corrector,
-        spec.mode == "PECE" and use_corrector,
+        modes,
         spec.combine,
         spec.denoise_final and spec.parameterization == "data",
         spec.history == "ring",
@@ -129,9 +172,17 @@ def sa_statics(spec: SamplerSpec) -> tuple:
 
 
 def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
-    """Algorithm 1 as one scan; see repro.core.solver for the step math."""
-    (parameterization, use_corrector, pece, combine, denoise, ring,
-     precision) = statics
+    """Algorithm 1 as one scan per mode segment; see repro.core.solver
+    for the step math. Fixed specs and mode-uniform programs are a single
+    segment — one scan over ``arange(M)``, exactly the seed executor;
+    multi-segment programs chain scans over the shared (x, history)
+    carry, with the global step index threaded through so the ring head
+    stays consistent across segment boundaries."""
+    (parameterization, modes, combine, denoise, ring, precision) = statics
+    if modes[0] == "segments":
+        segments = modes[1]  # ((use_corrector, pece, length), ...)
+    else:
+        segments = ((modes[0], modes[1], None),)  # None = all M steps
     P = dev["pred"].shape[1]  # buffer rows = max(pred order, corr order)
     M = dev["decay"].shape[0]
     cdt = carry_dtype(precision)
@@ -164,7 +215,6 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
         return ((x_eval.astype(f32) - dev["sigmas"][i + 1]
                  * e_new.astype(f32)) / dev["alphas"][i + 1]).astype(cdt)
 
-    # ------------------------------------------------------- concat layout
     def draw_noise(step_key, shape):
         # drawn in f32 then rounded to the policy dtype: the bf16 policy
         # narrows precision but keeps the SAME noise stream as f32, so
@@ -172,33 +222,38 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
         # an identity — bitwise the seed draw)
         return jax.random.normal(step_key, shape, f32).astype(cdt)
 
-    def step_concat(carry, per_step):
-        x, buf = carry
-        (i, step_key) = per_step
-        xi = draw_noise(step_key, x.shape)
-        decay_i = dev["decay"][i]
-        noise_i = dev["noise"][i]
-        t_next = dev["ts"][i + 1]
+    # ------------------------------------------------------- concat layout
+    def make_step_concat(use_corrector, pece):
+        def step_concat(carry, per_step):
+            x, buf = carry
+            (i, step_key) = per_step
+            xi = draw_noise(step_key, x.shape)
+            decay_i = dev["decay"][i]
+            noise_i = dev["noise"][i]
+            t_next = dev["ts"][i + 1]
 
-        x_pred = combine_rows(decay_i, x, dev["pred"][i], buf, noise_i, xi)
-        e_new = model_fn(x_pred, t_next).astype(cdt)
-        x_eval = x_pred  # the state e_new was actually evaluated at
-        if use_corrector:
-            # corrector: fold the predicted-point eval in as one more row
-            coeffs = jnp.concatenate([dev["corr_new"][i][None],
-                                      dev["corr"][i]])
-            rows = jnp.concatenate([e_new[None], buf], axis=0)
-            x_next = combine_rows(decay_i, x, coeffs, rows, noise_i, xi)
-            if pece:
-                e_new = model_fn(x_next, t_next).astype(cdt)
-                x_eval = x_next
-        else:
-            x_next = x_pred
-        buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
-        if trajectory:
-            return (x_next, buf), {"x": x_next,
-                                   "x0": x0_preview(x_eval, e_new, i)}
-        return (x_next, buf), None
+            x_pred = combine_rows(decay_i, x, dev["pred"][i], buf,
+                                  noise_i, xi)
+            e_new = model_fn(x_pred, t_next).astype(cdt)
+            x_eval = x_pred  # the state e_new was actually evaluated at
+            if use_corrector:
+                # corrector: fold the predicted-point eval in as one more
+                # row
+                coeffs = jnp.concatenate([dev["corr_new"][i][None],
+                                          dev["corr"][i]])
+                rows = jnp.concatenate([e_new[None], buf], axis=0)
+                x_next = combine_rows(decay_i, x, coeffs, rows, noise_i, xi)
+                if pece:
+                    e_new = model_fn(x_next, t_next).astype(cdt)
+                    x_eval = x_next
+            else:
+                x_next = x_pred
+            buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
+            if trajectory:
+                return (x_next, buf), {"x": x_next,
+                                       "x0": x0_preview(x_eval, e_new, i)}
+            return (x_next, buf), None
+        return step_concat
 
     # --------------------------------------------------------- ring layout
     def age_rows(buf, i, k):
@@ -216,62 +271,82 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
         c = c.at[:, 0].set(dev["decay"][i]).at[:, 1].set(dev["noise"][i])
         return c.at[:, 2 + pos].set(jnp.stack(tables_i))
 
-    def step_ring(carry, per_step):
-        x, buf = carry
-        (i, step_key) = per_step
-        xi = draw_noise(step_key, x.shape)
-        decay_i = dev["decay"][i]
-        noise_i = dev["noise"][i]
-        t_next = dev["ts"][i + 1]
+    def make_step_ring(use_corrector, pece):
+        def step_ring(carry, per_step):
+            x, buf = carry
+            (i, step_key) = per_step
+            xi = draw_noise(step_key, x.shape)
+            decay_i = dev["decay"][i]
+            noise_i = dev["noise"][i]
+            t_next = dev["ts"][i + 1]
 
-        if combine == "fused":
-            if use_corrector:
-                x_pred, corr_base = ops.sa_fused_update(
-                    x, buf, xi, rotated(i, dev["pred"][i], dev["corr"][i]))
+            if combine == "fused":
+                if use_corrector:
+                    x_pred, corr_base = ops.sa_fused_update(
+                        x, buf, xi,
+                        rotated(i, dev["pred"][i], dev["corr"][i]))
+                else:
+                    x_pred = ops.sa_update(
+                        x, buf, xi, rotated(i, dev["pred"][i])[0])
+                e_new = model_fn(x_pred, t_next).astype(cdt)
+                x_eval = x_pred
+                if use_corrector:
+                    # post-eval corrector: only e_new is touched — the
+                    # history was already folded into corr_base
+                    x_next = (corr_base.astype(f32) + dev["corr_new"][i]
+                              * e_new.astype(f32)).astype(cdt)
+                    if pece:
+                        e_new = model_fn(x_next, t_next).astype(cdt)
+                        x_eval = x_next
+                else:
+                    x_next = x_pred
             else:
-                x_pred = ops.sa_update(
-                    x, buf, xi, rotated(i, dev["pred"][i])[0])
-            e_new = model_fn(x_pred, t_next).astype(cdt)
-            x_eval = x_pred
-            if use_corrector:
-                # post-eval corrector: only e_new is touched — the
-                # history was already folded into corr_base
-                x_next = (corr_base.astype(f32) + dev["corr_new"][i]
-                          * e_new.astype(f32)).astype(cdt)
-                if pece:
-                    e_new = model_fn(x_next, t_next).astype(cdt)
-                    x_eval = x_next
-            else:
-                x_next = x_pred
-        else:
-            rows = age_rows(buf, i, P)
-            x_pred = combine_rows(decay_i, x, dev["pred"][i],
-                                  jnp.stack(rows), noise_i, xi)
-            e_new = model_fn(x_pred, t_next).astype(cdt)
-            x_eval = x_pred
-            if use_corrector:
-                coeffs = jnp.concatenate([dev["corr_new"][i][None],
-                                          dev["corr"][i]])
-                x_next = combine_rows(decay_i, x, coeffs,
-                                      jnp.stack([e_new] + rows),
-                                      noise_i, xi)
-                if pece:
-                    e_new = model_fn(x_next, t_next).astype(cdt)
-                    x_eval = x_next
-            else:
-                x_next = x_pred
-        # the ONE history write: e_new becomes age 0 of step i+1, in slot
-        # (i+1) mod P — overwriting age P-1, which no combine needs again
-        buf = jax.lax.dynamic_update_index_in_dim(buf, e_new, (i + 1) % P,
-                                                  axis=0)
-        if trajectory:
-            return (x_next, buf), {"x": x_next,
-                                   "x0": x0_preview(x_eval, e_new, i)}
-        return (x_next, buf), None
+                rows = age_rows(buf, i, P)
+                x_pred = combine_rows(decay_i, x, dev["pred"][i],
+                                      jnp.stack(rows), noise_i, xi)
+                e_new = model_fn(x_pred, t_next).astype(cdt)
+                x_eval = x_pred
+                if use_corrector:
+                    coeffs = jnp.concatenate([dev["corr_new"][i][None],
+                                              dev["corr"][i]])
+                    x_next = combine_rows(decay_i, x, coeffs,
+                                          jnp.stack([e_new] + rows),
+                                          noise_i, xi)
+                    if pece:
+                        e_new = model_fn(x_next, t_next).astype(cdt)
+                        x_eval = x_next
+                else:
+                    x_next = x_pred
+            # the ONE history write: e_new becomes age 0 of step i+1, in
+            # slot (i+1) mod P — overwriting age P-1, which no combine
+            # needs again
+            buf = jax.lax.dynamic_update_index_in_dim(buf, e_new,
+                                                      (i + 1) % P, axis=0)
+            if trajectory:
+                return (x_next, buf), {"x": x_next,
+                                       "x0": x0_preview(x_eval, e_new, i)}
+            return (x_next, buf), None
+        return step_ring
 
+    make_step = make_step_ring if ring else make_step_concat
     keys = jax.random.split(key, M)
-    (x, buffer), traj = jax.lax.scan(step_ring if ring else step_concat,
-                                     (x, buffer), (jnp.arange(M), keys))
+    idx = jnp.arange(M)
+    carry = (x, buffer)
+    traj_parts = []
+    start = 0
+    for (use_corrector, pece, length) in segments:
+        L = M - start if length is None else length
+        carry, traj = jax.lax.scan(make_step(use_corrector, pece), carry,
+                                   (idx[start:start + L],
+                                    keys[start:start + L]))
+        traj_parts.append(traj)
+        start += L
+    if start != M:
+        raise ValueError(
+            f"mode segments cover {start} steps but the tables have {M}")
+    (x, buffer) = carry
+    traj = (traj_parts[0] if len(traj_parts) == 1 else jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *traj_parts))
 
     if denoise:
         # newest eval: ring slot M mod P, concat row 0
@@ -282,11 +357,29 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
 
 
 def _sa_nfe(spec: SamplerSpec) -> int:
+    program = _check_program(spec)
+    if program is not None:
+        # 1 init eval + 1 per step + 1 more per PECE step (exact)
+        return program.nfe(spec.n_steps)
     per_step = 2 if (spec.mode == "PECE" and spec.corrector_order > 0) else 1
     return spec.n_steps * per_step + 1
 
 
 def _sa_steps_from_nfe(nfe: int, kw: dict) -> int:
+    program = kw.get("program")
+    if isinstance(program, StepProgram):
+        L = program.length()
+        if L is not None:
+            # explicit per-interval tracks dictate the step count; honor
+            # the "at most nfe" contract loudly instead of truncating
+            if program.nfe(L) > nfe:
+                raise ValueError(
+                    f"program spends {program.nfe(L)} evaluations over "
+                    f"its {L} intervals but the budget is nfe={nfe}")
+            return L
+        # all-scalar program: invert its uniform per-step cost
+        _, pece = program.mode_flags(1)[0]
+        return max(1, (nfe - 1) // (2 if pece else 1))
     pece = kw.get("mode", "PEC") == "PECE" and kw.get("corrector_order", 3) > 0
     return max(1, (nfe - 1) // (2 if pece else 1))
 

@@ -86,10 +86,11 @@ class NoiseSchedule:
     t_end: float = 1e-3
 
     def prior_scale(self, t) -> float:
-        """Std of the terminal prior x_T ~ N(0, prior_scale^2 I)."""
-        a = float(self.alpha(t))
-        s = float(self.sigma(t))
-        return math.sqrt(a * a + s * s) if isinstance(self, VESchedule) else 1.0
+        """Std of the terminal prior x_T ~ N(0, prior_scale^2 I).
+
+        VP schedules terminate at the unit Gaussian; variance-exploding
+        schedules override this (VESchedule returns sigma(t))."""
+        return 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,7 +164,18 @@ class VPCosineSchedule(NoiseSchedule):
         f0 = math.cos(math.pi / 2.0 * self.s / (1.0 + self.s))
         arg = np.clip(np.exp(log_alpha) * f0, -1.0, 1.0)
         t = (2.0 * (1.0 + self.s) / np.pi) * np.arccos(arg) - self.s
-        return np.clip(t, 0.0, 1.0)
+        # Clip the upper end to the schedule's own t_start, NOT 1.0:
+        # log_alpha saturates (the 1e-12 clip) as t -> 1, so the inversion
+        # quantizes there — a [0, 1] clip let near-duplicate t's through
+        # and timestep_grid(kind="logsnr"|"karras") could emit repeated
+        # endpoints at high step counts and die on its strictly-decreasing
+        # check. t_start = 0.9946 is the standard operating boundary
+        # (the DPM-Solver cosine clip); beyond it the schedule is out of
+        # contract anyway. The LOWER bound stays the formula's domain
+        # edge 0.0, not t_end: the inversion is well-conditioned all the
+        # way down, and pinning it at t_end would quantize (or kill)
+        # custom-span grids that solve below the default 1e-3.
+        return np.clip(t, 0.0, self.t_start)
 
     def log_alpha_j(self, t):
         f = jnp.cos(jnp.pi / 2.0 * (t + self.s) / (1.0 + self.s))

@@ -6,10 +6,11 @@ constant value inside an EDM-sigma band [band_lo, band_hi] and zero outside
 
 The coefficient engine (coefficients.py) assumes tau is constant on each
 solver interval [t_{i+1}, t_i]; we therefore evaluate the schedule once per
-interval. For the banded schedule we evaluate at the interval midpoint in
-lambda — intervals that straddle a band edge get the midpoint value, which
-matches the paper's own discrete treatment (their bands are aligned to the
-step grid in practice).
+interval. For the banded schedule, band membership is decided at the
+interval's *source* grid point t_i — the band edges are snapped to the
+step grid, matching the paper's own discrete treatment (their bands are
+aligned to the step grid in practice), and the band itself is half-open
+(band_lo, band_hi] exactly as Appendix E writes it.
 """
 
 from __future__ import annotations
@@ -39,7 +40,16 @@ class ConstantTau(TauSchedule):
 
 @dataclasses.dataclass(frozen=True)
 class BandedTau(TauSchedule):
-    """tau = value when band_lo <= sigma_EDM(t_mid) <= band_hi else 0."""
+    """tau = value when band_lo < sigma_EDM(t_i) <= band_hi else 0.
+
+    The band is *half-open* — Appendix E: CIFAR10 (0.05, 1], ImageNet64
+    (0.05, 50] — so sigma exactly at ``band_hi`` is stochastic and sigma
+    exactly at ``band_lo`` is not. Membership is decided at each
+    interval's source grid point ``t_i`` (sampling runs in reverse time,
+    so t_i is the higher-noise end): the effective band edges are thereby
+    snapped to the step grid, as the paper's discrete runs do — an
+    interval is wholly in or wholly out, never fractionally straddled.
+    """
 
     tau: float = 1.0
     band_lo: float = 0.05
@@ -47,10 +57,14 @@ class BandedTau(TauSchedule):
 
     def on_intervals(self, schedule, ts):
         ts = np.asarray(ts, dtype=np.float64)
-        lam = schedule.lam(ts)
-        lam_mid = 0.5 * (lam[:-1] + lam[1:])
-        sig = np.exp(-lam_mid)
-        inside = (sig >= self.band_lo) & (sig <= self.band_hi)
+        sig = np.exp(-schedule.lam(ts))[:-1]  # sigma_EDM at each source t_i
+        # half-open membership with the edges snapped at relative float
+        # tolerance: sigma is reconstructed through exp(-lambda), so a
+        # grid point sitting exactly on an edge lands within ~1 ulp of
+        # it — without the snap, round-off would flip its membership
+        lo = self.band_lo * (1.0 + 1e-12)
+        hi = self.band_hi * (1.0 + 1e-12)
+        inside = (sig > lo) & (sig <= hi)
         return np.where(inside, float(self.tau), 0.0)
 
 

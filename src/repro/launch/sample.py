@@ -22,7 +22,10 @@ code path a real eps- or v-prediction checkpoint takes.
 into one doubled-lane network eval; the scale is traced data), and
 ``--cond-file`` loads a ``.npy`` conditioning array threaded to the
 network alongside ``x`` (the unconditional zoo backbones consume it as an
-input-space prompt added to the latent).
+input-space prompt added to the latent). ``--program`` attaches a
+per-step solver program (preset name, inline JSON, or ``@file.json``)
+assigning per-interval orders, P/PEC/PECE mode, and tau — see the README
+"Step programs" section.
 """
 
 import argparse
@@ -34,6 +37,7 @@ import numpy as np
 
 from ..configs import get_config, get_smoke
 from ..core import Denoiser, convert_prediction, get_schedule
+from ..core.programs import list_presets, parse_program
 from ..core.samplers import SamplerSpec, Sampler, list_samplers
 from ..models import build_model, init_params
 
@@ -75,6 +79,13 @@ def main():
     ap.add_argument("--predictor", type=int, default=3)
     ap.add_argument("--corrector", type=int, default=3)
     ap.add_argument("--mode", default="PEC", choices=["PEC", "PECE"])
+    ap.add_argument("--program", default=None,
+                    help="per-step solver program: a preset name "
+                    f"({', '.join(list_presets())}), an inline JSON "
+                    "object, or @path to a JSON file — assigns per-"
+                    "interval predictor/corrector order, P/PEC/PECE "
+                    "mode, and tau (shadows --tau/--predictor/"
+                    "--corrector/--mode)")
     ap.add_argument("--grid", default="logsnr",
                     choices=["time", "logsnr", "karras"])
     ap.add_argument("--schedule", default="vp_linear")
@@ -110,11 +121,22 @@ def main():
     schedule = get_schedule(args.schedule)
     guidance = args.guidance_scale is not None
     g_scale = 1.0 if args.guidance_scale is None else args.guidance_scale
+    program = None
+    if args.program is not None:
+        if args.sampler != "sa":
+            raise SystemExit("--program is an SA-family feature")
+        # presets are stamped at the largest step count whose own cost
+        # (PECE steps evaluate twice) fits --nfe; an explicit JSON
+        # program dictates its own step count through from_nfe, which
+        # re-checks the budget
+        program = parse_program(args.program, args.nfe - 1, tau=args.tau,
+                                nfe=args.nfe)
     spec = SamplerSpec.from_nfe(
         args.sampler, args.nfe,
         schedule=schedule, grid=args.grid,
         tau=args.tau, predictor_order=args.predictor,
         corrector_order=args.corrector, mode=args.mode,
+        program=program,  # shadows the four fields above when set
         combine=args.combine, history=args.history,
         precision=args.precision,
         prediction=args.prediction, guidance=guidance,
@@ -141,8 +163,11 @@ def main():
     print(f"arch={cfg.name} latent={dz} sampler={args.sampler} "
           f"NFE={sampler.nfe} (network NFE={spec.network_nfe}) "
           f"(requested {args.nfe}) steps={spec.n_steps} "
-          f"tau={args.tau} P{args.predictor}C{args.corrector} {args.mode} "
-          f"prediction={args.prediction} "
+          + (f"program={args.program}"  # the program shadows tau/P/C/mode
+             if program is not None else
+             f"tau={args.tau} P{args.predictor}C{args.corrector} "
+             f"{args.mode}")
+          + f" prediction={args.prediction} "
           f"guidance={g_scale if guidance else 'off'}")
     print(f"compile+run {t1-t0:.2f}s, steady {t2-t1:.2f}s; "
           f"out mean={float(jnp.mean(x0)):.4f} std={float(jnp.std(x0)):.4f} "

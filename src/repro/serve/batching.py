@@ -5,12 +5,14 @@ dtype, cond structure)`` — because that tuple determines the compiled
 executor: the spec
 fixes the sampler family and its trace-relevant statics (including the
 denoiser adapter's prediction type, the guidance on/off flag, the
-history layout, and the ``precision`` policy — an f32 and a bf16
+history layout, the ``precision`` policy — an f32 and a bf16
 request compile different hot loops and therefore land in different
-buckets), the
+buckets — and the step ``program``, whose mode pattern shapes the
+traced scan segments), the
 shape/dtype fix the argument avals, and the conditioning pytree joins
 only by its shape/dtype *structure*. Everything else (tau value,
-coefficient tables, the solve grid values, the conditioning values, the
+per-interval program orders/taus, coefficient tables, the solve grid
+values, the conditioning values, the
 guidance scale) is traced data, so requests that differ only in
 those ride the same executable — a guidance-scale sweep never recompiles.
 

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import get_schedule, timestep_grid
-from repro.core.coefficients import build_tables
+from repro.core.coefficients import build_tables, exp_monomial_integrals
 
 
 @pytest.mark.parametrize("tau", [0.0, 0.5, 1.0, 1.6])
@@ -68,6 +68,19 @@ def test_decay_identity():
         h = lam[i + 1] - lam[i]
         expect = sig[i + 1] / sig[i] * np.exp(-tau * tau * h)
         assert tb.decay[i] == pytest.approx(expect, rel=1e-9)
+
+
+@pytest.mark.parametrize("a", [-4.0, -1.0, -0.3, 0.7, 1.0, 2.5, 6.0])
+@pytest.mark.parametrize("k", [0, 2, 5])
+def test_exp_monomial_integrals_continuous_at_branch_switch(a, k):
+    """I_k(a, h) switches from the series to the closed-form recursion at
+    |a|*h = 0.5; the two branches must agree where they meet. Evaluating
+    one float step either side of the switch point pits series against
+    recursion: any branch mismatch would dwarf the ~1e-16 true change."""
+    h = 0.5 / abs(a)
+    lo = exp_monomial_integrals(a, h * (1 - 1e-13), k)[k]  # series branch
+    hi = exp_monomial_integrals(a, h * (1 + 1e-13), k)[k]  # recursion
+    assert hi == pytest.approx(lo, rel=5e-12, abs=1e-300)
 
 
 def test_coefficients_vs_quadrature_eq15():

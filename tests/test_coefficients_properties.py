@@ -28,6 +28,20 @@ def test_exp_monomial_integrals_vs_quadrature(a, h, k):
     assert I == pytest.approx(ref, rel=2e-4, abs=1e-10)
 
 
+@given(a=st.one_of(st.floats(-4.0, -0.05), st.floats(0.05, 6.0)),
+       k=st.integers(0, 5))
+@settings(max_examples=200, deadline=None)
+def test_exp_monomial_integrals_branch_continuity(a, k):
+    """Property form of the branch-switch continuity check: for any a,
+    the series (|a|h just below 0.5) and the recursion (just above)
+    agree to ~1e-12 relative — the integral is smooth in h, so any gap
+    is a branch inconsistency, not a real feature."""
+    h = 0.5 / abs(a)
+    lo = exp_monomial_integrals(a, h * (1 - 1e-13), k)[k]
+    hi = exp_monomial_integrals(a, h * (1 + 1e-13), k)[k]
+    assert hi == pytest.approx(lo, rel=5e-12, abs=1e-300)
+
+
 @given(n=st.integers(1, 5), seed=st.integers(0, 10_000))
 @settings(max_examples=100, deadline=None)
 def test_lagrange_partition_of_unity(n, seed):

@@ -54,6 +54,67 @@ def test_jnp_matches_numpy():
             np.asarray(s.lam_j(jnp.asarray(ts))), s.lam(ts), rtol=2e-4)  # f32 device math
 
 
+@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("kind", ["time", "logsnr", "karras"])
+@pytest.mark.parametrize("n", [10, 200, 1000])
+def test_grids_survive_high_step_counts(name, kind, n):
+    """Regression (t_of_lam clip): the cosine inversion saturates near
+    t = 1 (the 1e-12 log-alpha clip), and a [0, 1] output clip let the
+    quantized near-duplicate t's through — high step counts could emit
+    repeated endpoints and die on the strictly-decreasing check. The
+    inversion now clips its UPPER end to the schedule's own t_start
+    (the lower end stays 0.0 — the inversion is accurate down to t -> 0,
+    see test_cosine_grids_below_default_t_end_still_work); all grid
+    kinds must build clean at any step count."""
+    s = get_schedule(name)
+    ts = timestep_grid(s, n, kind=kind)
+    assert len(ts) == n + 1
+    assert np.all(np.diff(ts) < 0)
+    assert ts[0] == pytest.approx(s.t_start) and ts[-1] == pytest.approx(s.t_end)
+    # every interior point stays strictly inside the span: the endpoint
+    # overwrite can never create a duplicate against a clipped neighbour
+    assert np.all(ts[1:-1] < s.t_start) and np.all(ts[1:-1] > s.t_end)
+
+
+def test_cosine_t_of_lam_clips_to_schedule_span():
+    """The inversion's upper output bound is the schedule's t_start, not
+    1.0: lambdas in the saturated near-t=1 zone pin to the boundary
+    instead of emitting quantized near-duplicate t's."""
+    s = VPCosineSchedule()
+    lam_lo = s.lam(np.array([1.0]))  # inside the saturation zone
+    t = s.t_of_lam(np.array([lam_lo[0], -30.0]))
+    assert t[0] == s.t_start and t[1] == s.t_start
+    # in-span values still invert exactly
+    ts = np.linspace(s.t_end, s.t_start, 50)
+    np.testing.assert_allclose(s.t_of_lam(s.lam(ts)), ts,
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_cosine_grids_below_default_t_end_still_work():
+    """The low end is NOT clipped to t_end: the inversion is well-
+    conditioned down to t -> 0, and custom-span grids that solve below
+    the default 1e-3 (e.g. sweeping the terminal time) must keep
+    building — pinning the lower bound would quantize their tail points
+    to the boundary (silently at small n, fatally at large n)."""
+    s = VPCosineSchedule()
+    for n in (50, 400):
+        for kind in ("logsnr", "karras"):
+            ts = timestep_grid(s, n, kind=kind, t_end=5e-4)
+            assert np.all(np.diff(ts) < 0)
+            assert ts[-1] == pytest.approx(5e-4)
+            # the tail inverts truly, not onto the default-span boundary
+            assert np.all(np.abs(ts[1:-1] - s.t_end) > 1e-8)
+
+
+def test_prior_scale_base_is_unit_ve_overrides():
+    """Satellite: the dead isinstance(self, VESchedule) branch is gone —
+    the base prior is the unit Gaussian, VE's override returns sigma(t)."""
+    assert get_schedule("vp_linear").prior_scale(1.0) == 1.0
+    assert get_schedule("vp_cosine").prior_scale(0.9946) == 1.0
+    ve = get_schedule("ve")
+    assert ve.prior_scale(ve.t_start) == pytest.approx(ve.sigma_max)
+
+
 def test_grid_validation():
     s = get_schedule("vp_linear")
     with pytest.raises(ValueError):

@@ -1,0 +1,477 @@
+"""Step-program subsystem: per-interval order / PEC-PECE / tau programs.
+
+The load-bearing contract (mirrors PR 4's ring lock): a program that pins
+constant order/tau is **bitwise identical** to the fixed-spec executor —
+uniform programs collapse to the fixed-spec statics (one shared
+compile-cache entry) and build byte-equal coefficient tables. Per-interval
+orders and taus are table *data* (a program sweep at fixed step count
+never recompiles); only the mode pattern (P / PEC / PECE segments) is
+trace-relevant.
+
+Also home to the schedule-layer satellites this PR fixes underneath the
+programs: the half-open grid-snapped BandedTau band and the DDIMEtaTau
+source-sigma convention.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (GMM, BandedTau, ConstantTau, DDIMEtaTau, StepProgram,
+                        get_schedule, list_presets, parse_program,
+                        program_preset, samplers, timestep_grid)
+from repro.core.programs import program_preset_for_nfe
+from repro.core.coefficients import build_tables
+from repro.core.programs import MODES
+from repro.core.samplers import SamplerSpec, build_plan, make_sampler
+
+SCHED = get_schedule("vp_linear")
+GMM2 = GMM.default_2d()
+MODEL = GMM2.model_fn(SCHED, "data")
+XT = jax.random.normal(jax.random.PRNGKey(9), (96, 2))
+KEY = jax.random.PRNGKey(0)
+
+
+def _sa(**kw):
+    return make_sampler("sa", schedule=SCHED, **kw)
+
+
+# -------------------------------------------- bitwise lock vs fixed specs
+@pytest.mark.parametrize("history", ["ring", "concat"])
+@pytest.mark.parametrize("mode", ["PEC", "PECE"])
+@pytest.mark.parametrize("p,c", [(1, 1), (2, 2), (3, 3)])
+def test_constant_program_bitwise_matrix(history, mode, p, c):
+    """PEC/PECE x orders 1-3 x ring/concat: a program pinning the fixed
+    spec's constants is bitwise-identical to the fixed-spec path."""
+    fixed = _sa(n_steps=6, tau=0.7, predictor_order=p, corrector_order=c,
+                mode=mode, history=history)
+    prog = StepProgram(predictor_order=p, corrector_order=c, mode=mode,
+                       tau=0.7)
+    programmed = _sa(n_steps=6, program=prog, history=history)
+    a = fixed.sample(MODEL, XT, KEY, trajectory=True)
+    b = programmed.sample(MODEL, XT, KEY, trajectory=True)
+    assert bool(jnp.all(a[0] == b[0]))
+    for k in a[1]:
+        assert bool(jnp.all(a[1][k] == b[1][k])), f"traj[{k}] differs"
+
+
+def test_constant_program_shares_fixed_statics_and_tables():
+    """The bitwise lock is by construction: uniform programs emit the
+    fixed-spec statics (same compile-cache entry) and byte-equal
+    tables."""
+    fixed = build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=5,
+                                   tau=0.4))
+    prog = build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=5,
+                                  program=StepProgram(tau=0.4)))
+    assert fixed.statics == prog.statics
+    ta, tb = fixed.host["tables"], prog.host["tables"]
+    for f in ("decay", "noise", "pred", "corr_new", "corr", "taus"):
+        assert np.array_equal(getattr(ta, f), getattr(tb, f)), f
+
+
+def test_predictor_only_program_matches_c0_spec():
+    """mode='P' everywhere == corrector_order=0 fixed spec, bitwise."""
+    fixed = _sa(n_steps=6, tau=0.5, corrector_order=0)
+    programmed = _sa(n_steps=6,
+                     program=StepProgram(mode="P", tau=0.5))
+    assert bool(jnp.all(fixed.sample(MODEL, XT, KEY)
+                        == programmed.sample(MODEL, XT, KEY)))
+
+
+def test_order_ramp_preset_is_bitwise_the_default():
+    """The explicit 1->2->3 ramp is what the warm-up clamp produces
+    anyway: the order-ramp preset == the constant default, bitwise."""
+    a = _sa(n_steps=7, program=program_preset("constant", 7))
+    b = _sa(n_steps=7, program=program_preset("order-ramp", 7))
+    assert a.plan.statics == b.plan.statics
+    assert bool(jnp.all(a.sample(MODEL, XT, KEY) == b.sample(MODEL, XT, KEY)))
+
+
+# ------------------------------------------------ programs as table data
+def test_program_sweep_zero_compile_misses():
+    """Varying per-interval orders AND taus at a fixed step count / mode
+    pattern reuses one executor: programs are data, not trace."""
+    samplers.clear_compile_cache()
+    programs = [
+        StepProgram(tau=0.0, width=3),
+        StepProgram(tau=(1.0, 0.8, 0.6, 0.4, 0.2), width=3),
+        StepProgram(predictor_order=(1, 2, 3, 3, 3),
+                    corrector_order=(1, 1, 2, 3, 3), tau=0.7, width=3),
+        StepProgram(predictor_order=2, corrector_order=2, tau=1.2, width=3),
+        StepProgram(tau=BandedTau(tau=0.9), width=3),
+    ]
+    for prog in programs:
+        _sa(n_steps=5, program=prog).sample(MODEL, XT, KEY,
+                                            model_key="prog-sweep")
+    stats = samplers.compile_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == len(programs) - 1
+
+
+def test_mode_pattern_is_trace_relevant():
+    """Different mode patterns = different statics = separate executors
+    (a PECE step evaluates the model twice — the graph changes)."""
+    samplers.clear_compile_cache()
+    for mode in ("PEC", ("PECE",) + ("PEC",) * 4,
+                 ("PEC",) * 4 + ("P",)):
+        _sa(n_steps=5, program=StepProgram(mode=mode)).sample(
+            MODEL, XT, KEY, model_key="prog-modes")
+    assert samplers.compile_cache_stats()["misses"] == 3
+
+
+def test_program_joins_serve_bucket_key():
+    """Two requests with different programs never share a microbatch;
+    equal programs do (the spec — program included — is the bucket
+    key)."""
+    from repro.serve import ServeEngine
+    engine = ServeEngine(MODEL, bucket_sizes=(4,))
+    base = SamplerSpec(name="sa", schedule=SCHED, n_steps=4, tau=0.5)
+    annealed = base.replace(program=StepProgram(tau=(1.0, 0.6, 0.3, 0.0)))
+    engine.submit(base, (32, 2))
+    engine.submit(annealed, (32, 2))
+    engine.submit(annealed, (32, 2))
+    results = engine.run()
+    assert len(results) == 3
+    assert engine.stats()["microbatches"] == 2
+
+
+# ----------------------------------------------- segmented mode execution
+def _reference_solve(tables, modes, x, key):
+    """Direct per-step Algorithm 1 loop (no scan, newest-first buffer)
+    with per-step modes — the structural reference for the segmented
+    executor."""
+    f32 = jnp.float32
+    dev = {k: jnp.asarray(getattr(tables, k), f32)
+           for k in ("ts", "decay", "noise", "pred", "corr_new", "corr")}
+    P = dev["pred"].shape[1]
+    M = dev["decay"].shape[0]
+    e = MODEL(x, dev["ts"][0]).astype(f32)
+    rows = [e] + [jnp.zeros_like(e)] * (P - 1)
+    keys = jax.random.split(key, M)
+    for i in range(M):
+        xi = jax.random.normal(keys[i], x.shape, f32)
+        buf = jnp.stack(rows)
+        x_pred = (dev["decay"][i] * x
+                  + jnp.einsum("p,p...->...", dev["pred"][i], buf)
+                  + dev["noise"][i] * xi)
+        e_new = MODEL(x_pred, dev["ts"][i + 1]).astype(f32)
+        if modes[i] == "P":
+            x = x_pred
+        else:
+            coeffs = jnp.concatenate([dev["corr_new"][i][None],
+                                      dev["corr"][i]])
+            full = jnp.stack([e_new] + rows)
+            x = (dev["decay"][i] * x
+                 + jnp.einsum("p,p...->...", coeffs, full)
+                 + dev["noise"][i] * xi)
+            if modes[i] == "PECE":
+                e_new = MODEL(x, dev["ts"][i + 1]).astype(f32)
+        rows = [e_new] + rows[:-1]
+    return x
+
+
+@pytest.mark.parametrize("modes", [
+    ("PECE", "PECE", "PEC", "PEC", "P", "P"),
+    ("PEC", "P", "PEC", "P", "PEC", "P"),
+    ("P", "PEC", "PECE", "PEC", "P", "PEC"),
+])
+def test_mixed_mode_program_matches_reference(modes):
+    """Multi-segment executor == a direct per-step loop over the same
+    tables: the segment chaining (shared carry, global ring index) does
+    not change the math."""
+    prog = StepProgram(mode=modes, tau=0.6)
+    s = _sa(n_steps=len(modes), program=prog, denoise_final=False)
+    got = s.sample(MODEL, XT, KEY)
+    ref = _reference_solve(s.plan.host["tables"],
+                           list(modes), XT, KEY)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_mixed_mode_trajectory_covers_every_step():
+    prog = StepProgram(mode=("PECE", "PEC", "PEC", "P", "P"), tau=0.5)
+    s = _sa(n_steps=5, program=prog)
+    x, traj = s.sample(MODEL, XT, KEY, trajectory=True)
+    assert traj["x"].shape == (5,) + XT.shape
+    assert traj["x0"].shape == (5,) + XT.shape
+    assert bool(jnp.all(traj["x"][-1] != 0))
+
+
+def test_mixed_mode_ring_matches_concat():
+    """Both history layouts agree under a multi-segment program (the
+    ring head is derived from the global step index, which the segment
+    chaining threads through)."""
+    prog = StepProgram(mode=("PECE", "PEC", "PEC", "P", "P", "PEC"),
+                       tau=(1.0, 0.8, 0.5, 0.3, 0.1, 0.0))
+    kw = dict(n_steps=6, program=prog)
+    a = _sa(history="ring", **kw).sample(MODEL, XT, KEY)
+    b = _sa(history="concat", **kw).sample(MODEL, XT, KEY)
+    assert bool(jnp.all(a == b))
+
+
+# ------------------------------------------------- warm-up ramp / tables
+def test_variable_order_tables_apply_warmup_ramp():
+    """Orders requested beyond the available history clamp to the
+    1 -> 2 -> 3 ramp, exactly like the fixed-spec cold start."""
+    ts = timestep_grid(SCHED, 6, kind="logsnr")
+    tb = build_tables(SCHED, ts, program=StepProgram(tau=0.5),
+                      parameterization="data")
+    fixed = build_tables(SCHED, ts, tau=0.5, predictor_order=3,
+                         corrector_order=3)
+    assert list(tb.p_orders) == [1, 2, 3, 3, 3, 3]
+    assert list(tb.c_orders) == [1, 2, 3, 3, 3, 3]
+    np.testing.assert_array_equal(tb.pred, fixed.pred)
+    np.testing.assert_array_equal(tb.corr, fixed.corr)
+
+
+def test_per_interval_orders_zero_pad_rows():
+    ts = timestep_grid(SCHED, 5, kind="logsnr")
+    tb = build_tables(SCHED, ts, parameterization="data",
+                      program=StepProgram(predictor_order=(1, 1, 2, 3, 2),
+                                          corrector_order=(1, 2, 2, 2, 0),
+                                          tau=0.3))
+    assert tb.pred.shape == (5, 3)
+    assert list(tb.p_orders) == [1, 1, 2, 3, 2]
+    assert list(tb.c_orders) == [1, 2, 2, 2, 0]
+    # zero padding beyond the active order
+    assert np.all(tb.pred[0, 1:] == 0) and np.all(tb.pred[4, 2:] == 0)
+    assert np.all(tb.corr[4] == 0) and tb.corr_new[4] == 0
+
+
+def test_program_width_floors_table_rows():
+    ts = timestep_grid(SCHED, 4, kind="logsnr")
+    tb = build_tables(SCHED, ts, parameterization="data",
+                      program=StepProgram(predictor_order=1,
+                                          corrector_order=1, width=3))
+    assert tb.pred.shape == (4, 3)
+
+
+def test_tau_schedule_inside_program():
+    """TauSchedules are trivial programs: a BandedTau program builds the
+    same taus as the fixed BandedTau spec."""
+    ts = timestep_grid(SCHED, 8, kind="logsnr")
+    banded = BandedTau(tau=0.8)
+    a = build_tables(SCHED, ts, tau=banded, predictor_order=3,
+                     corrector_order=3)
+    b = build_tables(SCHED, ts, parameterization="data",
+                     program=StepProgram(tau=banded))
+    np.testing.assert_array_equal(a.taus, b.taus)
+    np.testing.assert_array_equal(a.noise, b.noise)
+
+
+# --------------------------------------------------- NFE accounting / spec
+def test_program_nfe_counts_pece_steps():
+    prog = StepProgram(mode=("PECE", "PECE", "PEC", "P"))
+    spec = SamplerSpec(name="sa", schedule=SCHED, n_steps=4, program=prog)
+    # 1 init + 4 steps + 2 PECE re-evals
+    assert spec.nfe == 7
+    assert spec.network_nfe == 7
+
+
+def test_from_nfe_with_explicit_program():
+    prog = StepProgram(mode=("PECE",) + ("PEC",) * 4)
+    spec = SamplerSpec.from_nfe("sa", 8, schedule=SCHED, program=prog)
+    assert spec.n_steps == 5 and spec.nfe == 7
+    with pytest.raises(ValueError, match="budget"):
+        SamplerSpec.from_nfe("sa", 5, schedule=SCHED, program=prog)
+
+
+def test_from_nfe_with_scalar_program():
+    spec = SamplerSpec.from_nfe("sa", 9, schedule=SCHED,
+                                program=StepProgram(mode="PECE"))
+    assert spec.n_steps == 4 and spec.nfe == 9
+
+
+def test_program_length_must_match_steps():
+    prog = StepProgram(tau=(0.5, 0.5, 0.5))
+    with pytest.raises(ValueError, match="intervals"):
+        build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=5,
+                               program=prog))
+
+
+def test_program_validation():
+    with pytest.raises(ValueError, match="mode"):
+        StepProgram(mode="PCE")
+    with pytest.raises(ValueError, match="predictor_order"):
+        StepProgram(predictor_order=0)
+    with pytest.raises(ValueError, match="corrector_order"):
+        StepProgram(corrector_order=-1)
+    with pytest.raises(ValueError, match="disagree"):
+        StepProgram(tau=(0.1, 0.2), mode=("PEC", "PEC", "PEC"))
+    with pytest.raises(TypeError, match="StepProgram"):
+        build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=4,
+                               program=("PEC", "PEC", "PEC", "PEC")))
+
+
+def test_mode_normalization_c0_is_predictor_only():
+    """corrector_order 0 and mode 'P' are the same step: segments and
+    NFE agree between the two spellings."""
+    a = StepProgram(mode="PEC", corrector_order=0)
+    b = StepProgram(mode="P")
+    assert a.segments(4) == b.segments(4) == ((False, False, 4),)
+    assert a.nfe(4) == b.nfe(4) == 5
+    # PECE with no corrector cannot re-evaluate either
+    c = StepProgram(mode="PECE", corrector_order=0)
+    assert c.segments(3) == ((False, False, 3),)
+
+
+# ----------------------------------------------------------- JSON / presets
+def test_json_round_trip():
+    progs = [
+        StepProgram(),
+        StepProgram(predictor_order=(1, 2, 3), corrector_order=(0, 1, 2),
+                    mode=("P", "PEC", "PECE"), tau=(0.0, 0.5, 1.0)),
+        StepProgram(tau=BandedTau(tau=0.7, band_lo=0.05, band_hi=50.0)),
+        StepProgram(tau=DDIMEtaTau(eta=0.6), width=3),
+        StepProgram(tau=ConstantTau(0.3)),
+    ]
+    for p in progs:
+        assert StepProgram.from_json(p.to_json()) == p
+
+
+def test_json_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown program fields"):
+        StepProgram.from_json('{"order": 3}')
+    with pytest.raises(ValueError, match="tau kind"):
+        StepProgram.from_json('{"tau": {"kind": "bogus"}}')
+
+
+def test_parse_program_forms(tmp_path):
+    assert parse_program("constant", 6) == program_preset("constant", 6)
+    inline = parse_program('{"tau": 0.25, "mode": "P"}', 6)
+    assert inline.tau == 0.25 and inline.mode == "P"
+    f = tmp_path / "prog.json"
+    f.write_text(StepProgram(tau=(0.1, 0.2)).to_json())
+    assert parse_program(f"@{f}", 2) == StepProgram(tau=(0.1, 0.2))
+    with pytest.raises(ValueError, match="preset"):
+        parse_program("nope", 6)
+
+
+def test_parse_program_json_inherits_tau_only_when_omitted():
+    """A JSON program that spells no "tau" track inherits the caller's
+    tau (the CLI's --tau) instead of silently resetting to the dataclass
+    default; an explicit "tau" always wins."""
+    inherited = parse_program('{"mode": ["PEC", "PEC", "P"]}', 3, tau=0.3)
+    assert inherited.tau == 0.3
+    explicit = parse_program('{"mode": "P", "tau": 0.9}', 3, tau=0.3)
+    assert explicit.tau == 0.9
+
+
+def test_parse_program_nfe_stamps_presets_to_budget():
+    """With nfe= given (the CLI path), presets route through
+    program_preset_for_nfe: pece-head fits nfe=8 at 6 steps instead of
+    overdrawing at the raw step count."""
+    prog = parse_program("pece-head", 7, nfe=8)
+    assert prog.length() == 6 and prog.nfe(6) == 8
+    # JSON programs ignore nfe — their tracks dictate the step count
+    assert parse_program('{"tau": 0.5}', 7, nfe=8) == StepProgram(tau=0.5)
+
+
+def test_preset_for_nfe_raises_when_nothing_fits():
+    """pece-head's 1-step stamp is a pure PECE step (3 evaluations):
+    nfe=2 cannot fit any stamp and must fail loudly."""
+    with pytest.raises(ValueError, match="cannot fit"):
+        program_preset_for_nfe("pece-head", 2)
+
+
+@pytest.mark.parametrize("name", sorted(set(list_presets())))
+def test_presets_build_and_solve(name):
+    prog = program_preset(name, 6, tau=0.8)
+    s = _sa(n_steps=6, program=prog)
+    x = s.sample(MODEL, XT, KEY)
+    assert bool(jnp.all(jnp.isfinite(x)))
+    assert StepProgram.from_json(prog.to_json()) == prog
+
+
+def test_modes_constant():
+    assert MODES == ("P", "PEC", "PECE")
+
+
+@pytest.mark.parametrize("name", sorted(set(list_presets())))
+@pytest.mark.parametrize("nfe", [3, 8, 20])
+def test_preset_for_nfe_fits_every_budget(name, nfe):
+    """Stamping a preset through its NFE budget always fits: PECE-bearing
+    presets shrink their step count instead of overdrawing (the naive
+    'steps = nfe - 1' stamping made pece-head unusable at ANY budget)."""
+    prog = program_preset_for_nfe(name, nfe)
+    spec = SamplerSpec.from_nfe("sa", nfe, schedule=SCHED, program=prog)
+    assert spec.nfe <= nfe
+    L = prog.length()
+    assert L is None or spec.n_steps == L
+
+
+def test_nfe8_preset_is_the_recorded_winner():
+    """program_preset('nfe8-gmm', 7) must reproduce the searched winner
+    recorded in BENCH_RESULTS.json: tau annealed 1 -> 0, corrector off
+    for the last 2 of 7 steps."""
+    from repro.core.programs import anneal_taus
+    w = program_preset("nfe8-gmm", 7)
+    assert w.mode == ("PEC",) * 5 + ("P",) * 2
+    assert w.tau == anneal_taus(1.0, 7)
+    assert SamplerSpec(name="sa", schedule=SCHED, n_steps=7,
+                       program=w).nfe == 8
+
+
+# --------------------------------------------- satellite: BandedTau band
+def test_banded_tau_half_open_band_edges():
+    """Half-open (lo, hi]: sigma exactly at band_hi is IN, sigma exactly
+    at band_lo is OUT — and membership snaps to the grid (decided at each
+    interval's source point t_i, never a midpoint)."""
+    ve = get_schedule("ve")  # sigma_EDM(t) = t: edges placable exactly
+    ts = np.array([50.0, 1.0, 0.5, 0.05, 0.01])
+    taus = BandedTau(tau=0.7, band_lo=0.05, band_hi=1.0).on_intervals(ve, ts)
+    # sources: 50 (out, > hi), 1.0 (in: closed at hi), 0.5 (in),
+    # 0.05 (out: open at lo)
+    np.testing.assert_array_equal(taus, [0.0, 0.7, 0.7, 0.0])
+
+
+def test_banded_tau_snaps_to_grid_not_midpoints():
+    """A band edge falling strictly inside an interval: the whole
+    interval follows its source point (the old midpoint rule could
+    disagree)."""
+    ve = get_schedule("ve")
+    # band (0.05, 1]; interval [1.2, 0.9] straddles the hi edge: source
+    # 1.2 is outside -> whole interval off, even though its geometric
+    # midpoint-in-lambda sqrt(1.2*0.9) ~ 1.039... is also out; interval
+    # [0.06, 0.04] straddles lo: source 0.06 in -> on.
+    ts = np.array([1.2, 0.9, 0.06, 0.04])
+    taus = BandedTau(tau=1.0).on_intervals(ve, ts)
+    np.testing.assert_array_equal(taus, [0.0, 1.0, 1.0])
+
+
+def test_banded_tau_imagenet_band():
+    ve = get_schedule("ve")
+    ts = np.array([80.0, 50.0, 10.0, 0.05, 0.02])
+    taus = BandedTau(tau=1.0, band_lo=0.05, band_hi=50.0).on_intervals(
+        ve, ts)
+    np.testing.assert_array_equal(taus, [0.0, 1.0, 1.0, 0.0])
+
+
+# ------------------------------------- satellite: DDIMEtaTau source index
+@pytest.mark.parametrize("eta", [0.0, 0.3, 0.7, 1.0])
+def test_ddim_eta_tau_one_step_predictor_is_ddim(eta):
+    """Eq. 94 index check, at the update level in float64: the 1-step
+    SA-Predictor under DDIMEtaTau(eta) IS the DDIM-eta update — decay,
+    x0 coefficient, and injected-noise std all match to f64 round-off.
+    The formula divides by the *source* sigma s_i; an off-by-one there
+    would show up at every interval."""
+    ts = timestep_grid(SCHED, 11, kind="logsnr")
+    tb = build_tables(SCHED, ts, tau=DDIMEtaTau(eta=eta), predictor_order=1)
+    a, s = SCHED.alpha(ts), SCHED.sigma(ts)
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(7, 2))
+    x0_hat = rng.normal(size=(7, 2))
+    xi = rng.normal(size=(7, 2))
+    for i in range(len(ts) - 1):
+        # direct DDIM-eta update (data form): sigma~ from the SOURCE
+        # sigma s_i, direction scale sqrt(s_{i+1}^2 - sigma~^2)
+        var = (eta**2) * (s[i + 1]**2 / s[i]**2) * (1 - a[i]**2 / a[i + 1]**2)
+        sig_hat = np.sqrt(max(var, 0.0))
+        dir_scale = np.sqrt(max(s[i + 1]**2 - var, 0.0))
+        eps_hat = (x - a[i] * x0_hat) / s[i]
+        ddim = a[i + 1] * x0_hat + dir_scale * eps_hat + sig_hat * xi
+        ours = tb.decay[i] * x + tb.pred[i, 0] * x0_hat + tb.noise[i] * xi
+        np.testing.assert_allclose(ours, ddim, rtol=1e-9, atol=1e-12,
+                                   err_msg=f"interval {i}")
