@@ -1,0 +1,169 @@
+"""Program-autotuner search: budgeted black-box search vs the
+hand-enumerated ``nfe8-gmm`` preset, with throughput accounting.
+
+    PYTHONPATH=src python benchmarks/bench_program_search.py [--smoke]
+
+``bench_step_programs`` sweeps a *hand-enumerated* candidate list;
+this benchmark runs the :mod:`repro.tune` subsystem over the same space:
+coordinate descent + evolutionary tau refinement per mode-pattern unit,
+candidates stacked into vmapped device dispatches, budget quoted in
+NFE-equivalents. The search optimizes a small noisy objective (its
+per-candidate cost), then the top finishers are re-ranked at validation
+scale — the standard tune/validate split.
+
+Contracts asserted (this benchmark is the autotuner's regression gate):
+
+- **compile economy**: the whole search performs at most 2 executor
+  compiles per warm-start mode pattern (in practice exactly one per
+  *distinct* pattern — candidates inside a unit are table data);
+- **quality**: the searched NFE<=8 program is no worse than the
+  hand-enumerated ``nfe8-gmm`` preset at validation scale, and (full
+  run) meets the absolute target sliced-W2 <= 0.024;
+- **throughput** is recorded: candidates/s, NFE-equivalents/s,
+  dispatches, compiles — into ``BENCH_RESULTS.json`` via
+  ``benchmarks.run``.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.metrics import sliced_w2
+from repro.core.programs import StepProgram, program_preset_for_nfe
+from repro.core.samplers import SamplerSpec, build_plan, get_family
+from repro.core.samplers import sample as plan_sample
+from repro.tune import SearchConfig, run_search
+
+try:  # python -m benchmarks.run
+    from .common import data_model, target_samples
+except ImportError:  # python benchmarks/bench_program_search.py
+    from common import data_model, target_samples
+
+NFE_BUDGET = 8
+SW2_TARGET = 0.024  # absolute quality bar at validation scale (full run)
+
+
+def _spec_of(prog: StepProgram, config: SearchConfig) -> SamplerSpec:
+    """The exact spec the evaluator scored ``prog`` under (width floor +
+    config spec_kw), so validation re-scores what the search ran."""
+    if prog.width < config.max_order:
+        prog = prog.replace(width=config.max_order)
+    return SamplerSpec.from_nfe(config.family, config.nfe, program=prog,
+                                **config.spec_kw)
+
+
+def validate(spec: SamplerSpec, n: int, seeds, proj_keys) -> float:
+    """Large-sample sliced-W2 vs GMM ground truth (the bench metric —
+    same protocol as bench_step_programs)."""
+    plan = build_plan(spec)
+    model = data_model("data")
+    vals = []
+    for s in seeds:
+        x_T = jax.random.normal(jax.random.PRNGKey(100 + s), (n, 2))
+        x = plan_sample(plan, model, x_T, jax.random.PRNGKey(s),
+                        model_key="tune-bench")
+        tgt = target_samples(jax.random.PRNGKey(200 + s), n)
+        vals.extend(float(sliced_w2(x, tgt, jax.random.PRNGKey(pk)))
+                    for pk in proj_keys)
+    return float(np.mean(vals))
+
+
+def run(smoke: bool = False) -> dict:
+    config = SearchConfig(
+        family="sa", nfe=NFE_BUDGET, seed=0,
+        budget=900 if smoke else 4000,
+        n_samples=256 if smoke else 512,
+        n_seeds=2 if smoke else 4,
+        evo_generations=1 if smoke else 3,
+        cd_passes=1 if smoke else 2)
+    val_n = 2048 if smoke else 8192
+    val_seeds = (0,) if smoke else (0, 1, 2)
+    proj_keys = (13,) if smoke else (13, 17)
+    rerank_k = 4 if smoke else 8
+
+    # -- search ----------------------------------------------------------
+    t0 = time.perf_counter()
+    result = run_search(config, log=print)
+    search_s = time.perf_counter() - t0
+    stats = result.stats
+    assert result.best_program is not None, "search evaluated nothing"
+    print(f"\nsearch: {stats['candidates']} candidates in {search_s:.1f}s "
+          f"({stats['candidates'] / search_s:.1f}/s, "
+          f"{stats['nfe_spent'] / search_s:.0f} NFE-eq/s, "
+          f"{stats['dispatches']} dispatches, "
+          f"{stats['compiles']} compiles) -> best "
+          f"{result.best_score:.5f} on the search objective")
+
+    # -- compile economy: <= 2 executors per warm-start mode pattern ----
+    family = get_family(config.family)
+    patterns = {
+        (family.statics(_spec_of(program_preset_for_nfe(
+            name, config.nfe, tau=config.tau), config)),)
+        for name in config.resolved_presets()}
+    assert stats["compiles"] <= 2 * len(patterns), (
+        f"search compiled {stats['compiles']} executors for "
+        f"{len(patterns)} mode patterns — candidates must be table data")
+
+    # -- validation re-rank: top-K search finishers + the preset --------
+    preset = program_preset_for_nfe("nfe8-gmm", config.nfe, tau=config.tau)
+    preset_sw2 = validate(_spec_of(preset, config), val_n, val_seeds,
+                          proj_keys)
+    ranked = sorted(result.state["history"], key=lambda h: h["score"])
+    top, seen = [], {preset.to_json()}
+    for h in ranked:
+        p = StepProgram.from_json(h["program"])
+        if p.to_json() not in seen:
+            seen.add(p.to_json())
+            top.append(p)
+        if len(top) >= rerank_k:
+            break
+    scored = [(preset, preset_sw2)]
+    scored += [(p, validate(_spec_of(p, config), val_n, val_seeds,
+                            proj_keys)) for p in top]
+    winner, winner_sw2 = min(scored, key=lambda r: r[1])
+
+    print(f"validation (n={val_n}): preset nfe8-gmm {preset_sw2:.4f}, "
+          f"searched winner {winner_sw2:.4f}")
+    assert winner_sw2 <= preset_sw2 + 1e-12, (
+        f"searched program must be no worse than the nfe8-gmm preset "
+        f"({winner_sw2:.4f} vs {preset_sw2:.4f})")
+    if not smoke:
+        assert winner_sw2 <= SW2_TARGET, (
+            f"searched program missed the absolute target "
+            f"({winner_sw2:.4f} > {SW2_TARGET})")
+
+    return {
+        "nfe_budget": NFE_BUDGET,
+        "metric": "sliced_w2_gmm",
+        "search_budget_nfe_eq": config.budget,
+        "search_best_objective": result.best_score,
+        "search_s": round(search_s, 3),
+        "candidates": stats["candidates"],
+        "candidates_per_s": round(stats["candidates"] / search_s, 2),
+        "nfe_eq_per_s": round(stats["nfe_spent"] / search_s, 1),
+        "dispatches": stats["dispatches"],
+        "compiles": stats["compiles"],
+        "mode_patterns": len(patterns),
+        "validation_n": val_n,
+        "preset_nfe8_gmm_sw2": preset_sw2,
+        "winner_sw2": winner_sw2,
+        "winner_program": json.loads(winner.to_json()),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small budget / sample counts (CI)")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    print(json.dumps(out, indent=2, sort_keys=True))
+    print("program-search bench OK: searched program matches/beats the "
+          "hand preset; compile economy held")
+
+
+if __name__ == "__main__":
+    main()

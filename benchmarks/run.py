@@ -30,6 +30,8 @@ SECTIONS = [
     ("hotpath", "hot path: ring vs concat history HBM bytes + latency"),
     ("step_programs", "step-program search: per-interval order/mode/tau "
      "vs the fixed default at NFE<=8"),
+    ("program_search", "autotuner: budgeted program search vs the hand "
+     "preset + search throughput"),
     ("serving", "serve engine: bucket throughput + compile-cache contract"),
     ("guidance", "denoiser adapter: CFG scale sweep + cache contract"),
 ]

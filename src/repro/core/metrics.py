@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["gaussian_w2", "sliced_w2", "energy_distance", "mean_var_error"]
+__all__ = ["gaussian_w2", "sliced_w2", "sliced_w2_stat", "energy_distance",
+           "mean_var_error"]
 
 
 def gaussian_w2(samples: jnp.ndarray, mean: np.ndarray, cov_diag: np.ndarray) -> float:
@@ -28,15 +29,23 @@ def gaussian_w2(samples: jnp.ndarray, mean: np.ndarray, cov_diag: np.ndarray) ->
     return float(w2)
 
 
-def sliced_w2(x: jnp.ndarray, y: jnp.ndarray, key: jax.Array, n_proj: int = 64) -> float:
-    """Sliced W2^2 between sample sets x [N,d], y [M,d] (N == M required)."""
+def sliced_w2_stat(x: jnp.ndarray, y: jnp.ndarray, key: jax.Array,
+                   n_proj: int = 64) -> jnp.ndarray:
+    """Sliced W2^2 as an in-graph scalar — jit/vmap-safe, so the program
+    autotuner can score a whole candidate batch in one device dispatch
+    (``sliced_w2`` below is the host-float convenience wrapper)."""
     assert x.shape == y.shape, "use equal sample counts"
     d = x.shape[-1]
     dirs = jax.random.normal(key, (n_proj, d))
     dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
     xp = jnp.sort(x @ dirs.T, axis=0)  # [N, n_proj]
     yp = jnp.sort(y @ dirs.T, axis=0)
-    return float(jnp.mean((xp - yp) ** 2))
+    return jnp.mean((xp - yp) ** 2)
+
+
+def sliced_w2(x: jnp.ndarray, y: jnp.ndarray, key: jax.Array, n_proj: int = 64) -> float:
+    """Sliced W2^2 between sample sets x [N,d], y [M,d] (N == M required)."""
+    return float(sliced_w2_stat(x, y, key, n_proj))
 
 
 def energy_distance(x: jnp.ndarray, y: jnp.ndarray, max_n: int = 2048) -> float:

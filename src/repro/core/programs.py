@@ -53,6 +53,7 @@ __all__ = [
     "ramp_orders",
     "program_preset",
     "program_preset_for_nfe",
+    "program_tau_track",
     "list_presets",
     "parse_program",
 ]
@@ -265,6 +266,36 @@ class StepProgram:
             tau=tau,
             width=int(obj.get("width", 0)),
         )
+
+
+def program_tau_track(program: "StepProgram", schedule: NoiseSchedule,
+                      ts: np.ndarray, family: str) -> np.ndarray:
+    """Per-interval tau values ``[M]`` for a non-Adams solver family.
+
+    The baselines have no order or P/PEC/PECE structure, but they DO have
+    a per-step stochasticity knob: for DDIM-like steps tau is exactly the
+    per-interval eta (0 = deterministic ODE step, 1 = ancestral), and the
+    EDM stochastic sampler scales its per-step churn by it. Only the tau
+    track carries over, so a program with per-interval order tracks or a
+    non-PEC mode anywhere is rejected loudly instead of silently
+    ignored — the same guard keeps the autotuner's search space honest
+    when it targets a baseline family."""
+    if not isinstance(program, StepProgram):
+        raise TypeError(
+            f"spec.program must be a StepProgram, got "
+            f"{type(program).__name__}")
+    for f in ("predictor_order", "corrector_order"):
+        if isinstance(getattr(program, f), tuple):
+            raise ValueError(
+                f"program {f} track has no meaning for the {family!r} "
+                f"family — only the tau track applies (per-step eta / "
+                f"churn scale)")
+    if program.mode != "PEC":
+        raise ValueError(
+            f"program mode {program.mode!r} has no meaning for the "
+            f"{family!r} family — only the tau track applies (per-step "
+            f"eta / churn scale)")
+    return program.resolve(schedule, np.asarray(ts, np.float64)).taus
 
 
 # ------------------------------------------------------------------ presets

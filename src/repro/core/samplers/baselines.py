@@ -15,6 +15,18 @@ sees it. Numeric hyperparameters (eta, tau, churn) are baked into the
 planned arrays, not the executors, so sweeping them at a fixed step count
 reuses one compilation.
 
+Step programs: the families with a per-step stochasticity knob accept
+``spec.program`` and read ONLY its tau track
+(:func:`repro.core.programs.program_tau_track`) — for ``ddim`` /
+``ddpm_ancestral`` per-interval tau is exactly per-interval eta (0 = ODE
+step, 1 = ancestral), for ``edm_stochastic`` it scales the per-step
+churn gamma, and for ``euler_maruyama`` it is the SDE's tau(t) made
+per-interval. The track lands in the already-per-interval planned
+arrays (``sig_hat``/``dir_scale``/``churn_amp``/``noise_amp``), so a
+program sweep reuses one compilation, same as the SA family. The
+deterministic families (``dpm_solver_pp_2m``, ``edm_heun``) reject a
+program loudly.
+
 The baselines honor the same ``spec.precision`` policy as SA-Solver: the
 scan state (and the model input) is carried in bf16 under
 ``precision="bf16"`` while the step arithmetic accumulates in f32; at
@@ -33,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..programs import StepProgram, program_tau_track
 from .base import (SamplerFamily, SamplerSpec, carry_dtype,
                    register_sampler)
 
@@ -51,12 +64,49 @@ def _base_consts(schedule, ts: np.ndarray) -> dict:
     )
 
 
+def _program_steps(nfe: int, kw: dict, per_step: int) -> int | None:
+    """Step count dictated by an explicit-length program, or None.
+
+    Mirrors the SA family's contract: explicit per-interval tracks fix
+    the step count, and overdrawing the budget errors loudly instead of
+    truncating the track."""
+    program = kw.get("program")
+    if isinstance(program, StepProgram):
+        L = program.length()
+        if L is not None:
+            if per_step * L > nfe:
+                raise ValueError(
+                    f"program covers {L} intervals ({per_step * L} "
+                    f"evaluations at {per_step}/step) but the budget is "
+                    f"nfe={nfe}")
+            return L
+    return None
+
+
 def _steps_identity(nfe: int, kw: dict) -> int:
-    return max(1, nfe)
+    L = _program_steps(nfe, kw, 1)
+    return max(1, nfe) if L is None else L
 
 
 def _steps_heun(nfe: int, kw: dict) -> int:
-    return max(1, nfe // 2)
+    L = _program_steps(nfe, kw, 2)
+    return max(1, nfe // 2) if L is None else L
+
+
+def _tau_track_or_none(spec: SamplerSpec, schedule, ts) -> np.ndarray | None:
+    """``spec.program``'s tau track on the grid, or None without one."""
+    if spec.program is None:
+        return None
+    return program_tau_track(spec.program, schedule, ts, spec.name)
+
+
+def _reject_program(spec: SamplerSpec) -> None:
+    if spec.program is not None:
+        raise ValueError(
+            f"{spec.name!r} has no per-step stochasticity knob, so a step "
+            f"program has nothing to control there; program-capable "
+            f"families are 'sa', 'ddim', 'ddpm_ancestral', "
+            f"'euler_maruyama', and 'edm_stochastic'")
 
 
 # --------------------------------------------------------------------- DDIM
@@ -66,10 +116,15 @@ def plan_ddim(spec: SamplerSpec):
     ts = spec.grid_ts()
     c = _base_consts(schedule, ts)
     a64, s64 = schedule.alpha(ts), schedule.sigma(ts)
-    eta = float(spec.eta)
+    # per-interval eta: a program's tau track IS the eta track (0 = ODE
+    # step, 1 = ancestral); without one the scalar spec.eta broadcasts.
+    # Either way eta is baked into sig_hat/dir_scale — pure plan data, so
+    # an eta-track sweep reuses one compiled executor.
+    track = _tau_track_or_none(spec, schedule, ts)
+    etas = np.full(len(ts) - 1, float(spec.eta)) if track is None else track
     # ancestral std: eta * sqrt(sig_next^2/sig_i^2 * (1 - a_i^2/a_next^2))
     with np.errstate(invalid="ignore"):
-        var = (eta**2) * (s64[1:] ** 2 / s64[:-1] ** 2) \
+        var = (etas**2) * (s64[1:] ** 2 / s64[:-1] ** 2) \
             * (1.0 - a64[:-1] ** 2 / a64[1:] ** 2)
     c["sig_hat"] = jnp.asarray(np.sqrt(np.clip(var, 0.0, None)), jnp.float32)
     # deterministic direction scale: sqrt(sig_next^2 - sig_hat^2)
@@ -109,6 +164,7 @@ def _plan_ancestral(spec: SamplerSpec):
 def plan_dpmpp2m(spec: SamplerSpec):
     """DPM-Solver++(2M), data prediction, deterministic (official multistep
     second-order update; first step is DDIM)."""
+    _reject_program(spec)
     schedule = spec.resolve_schedule()
     ts = spec.grid_ts()
     c = _base_consts(schedule, ts)
@@ -167,15 +223,19 @@ def plan_euler_maruyama(spec: SamplerSpec):
     schedule = spec.resolve_schedule()
     ts = spec.grid_ts()
     c = _base_consts(schedule, ts)
+    # tau(t) is the SDE's free stochasticity function (Eq. 9); a
+    # program's tau track makes it per-interval, baked into the planned
+    # drift/noise coefficients exactly like the scalar
+    track = _tau_track_or_none(spec, schedule, ts)
+    taus = np.full(len(ts) - 1, tau) if track is None else track
     lam64 = schedule.lam(ts)
     la64 = np.log(schedule.alpha(ts))
     dlam = lam64[1:] - lam64[:-1]
     slope = (la64[1:] - la64[:-1]) / dlam
     c["drift_x"] = jnp.asarray(slope * dlam, jnp.float32)
-    c["drift_gain"] = jnp.asarray(
-        np.full_like(dlam, 1.0 + tau * tau) * dlam, jnp.float32)
+    c["drift_gain"] = jnp.asarray((1.0 + taus * taus) * dlam, jnp.float32)
     c["noise_amp"] = jnp.asarray(
-        tau * schedule.sigma(ts)[:-1] * np.sqrt(2.0 * dlam), jnp.float32)
+        taus * schedule.sigma(ts)[:-1] * np.sqrt(2.0 * dlam), jnp.float32)
     return c, {"ts": ts}
 
 
@@ -220,6 +280,7 @@ def plan_edm_heun(spec: SamplerSpec):
 
     d x~/d sig~ = (x~ - x0_hat)/sig~ ;  x~ = x / alpha_t.
     """
+    _reject_program(spec)
     c, ts, _, _ = _edm_consts(spec)
     return c, {"ts": ts}
 
@@ -267,6 +328,12 @@ def plan_edm_stochastic(spec: SamplerSpec):
     gammas = np.where(
         (sig[:-1] >= spec.s_tmin) & (sig[:-1] <= spec.s_tmax),
         np.minimum(spec.s_churn / M, gamma_max), 0.0)
+    # a program's tau track scales the per-step churn: tau_i = 0 turns
+    # step i into the deterministic Heun step, 1 keeps the configured
+    # gamma. Baked into s_hat/churn_amp — plan data, zero recompile.
+    track = _tau_track_or_none(spec, spec.resolve_schedule(), ts)
+    if track is not None:
+        gammas = gammas * np.clip(track, 0.0, None)
     s_hat = sig[:-1] * (1.0 + gammas)
     c["s_hat"] = jnp.asarray(s_hat, jnp.float32)
     # churn amplitude: s_noise * sqrt(max(s_hat^2 - s_i^2, 0))

@@ -60,7 +60,12 @@ evaluates the model twice) and is baked into the statics as contiguous
 ``lax.scan`` over the shared carry. A single-segment (mode-uniform)
 program collapses to exactly the fixed-spec statics, so constant
 programs share the fixed path's compile-cache entry and are bitwise
-identical to it.
+identical to it. Patterns that fragment into more than
+:data:`MAX_SCAN_SEGMENTS` contiguous segments (alternating P/PEC/...)
+fall back to ONE scan with the mode folded into table data and a
+``lax.cond`` gating the PECE re-eval — the statics collapse to
+``("cond",)``, so every pathological pattern at a given step count
+shares a single executor.
 
 Statics (compile-cache key): parameterization, mode structure (corrector
 on/off + PECE — or the program's segment tuple), combine mode,
@@ -73,6 +78,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...kernels import ops
 from ...kernels.sa_update import sa_update
@@ -81,10 +87,26 @@ from ..programs import StepProgram
 from .base import (SamplerFamily, SamplerSpec, carry_dtype,
                    register_sampler)
 
-__all__ = ["plan_sa", "execute_sa", "tables_to_arrays", "sa_statics"]
+__all__ = ["MAX_SCAN_SEGMENTS", "plan_sa", "execute_sa",
+           "tables_to_arrays", "sa_statics"]
 
 _COMBINES = ("einsum", "kernel", "fused")
 _HISTORIES = ("ring", "concat")
+
+#: a program whose mode pattern fragments into more contiguous segments
+#: than this would unroll one ``lax.scan`` per segment — pathological
+#: alternating patterns (P/PEC/P/PEC/...) would trace M scans of length 1.
+#: Beyond the cap the executor switches to ONE scan with the mode folded
+#: into table data (predictor-only steps get ``corr := pred`` rows, so the
+#: unconditional corrector combine reproduces ``x_pred``) plus a
+#: ``lax.cond`` on a per-step flag for the PECE re-eval. Every such
+#: pattern at a given step count shares that single compiled executor.
+MAX_SCAN_SEGMENTS = 4
+
+
+def _use_cond_fallback(program: StepProgram | None, n_steps: int) -> bool:
+    return (program is not None
+            and len(program.segments(n_steps)) > MAX_SCAN_SEGMENTS)
 
 
 def tables_to_arrays(tables: SolverTables) -> dict:
@@ -124,15 +146,30 @@ def _check_program(spec: SamplerSpec) -> StepProgram | None:
 def plan_sa(spec: SamplerSpec):
     schedule = spec.resolve_schedule()
     ts = spec.grid_ts()
+    program = _check_program(spec)
     tables = build_tables(
         schedule, ts,
         tau=spec.tau,
         predictor_order=spec.predictor_order,
         corrector_order=spec.corrector_order,
         parameterization=spec.parameterization,
-        program=_check_program(spec),
+        program=program,
     )
-    return tables_to_arrays(tables), {"ts": ts, "tables": tables}
+    arrays = tables_to_arrays(tables)
+    if _use_cond_fallback(program, spec.n_steps):
+        # single-scan fallback: fold predictor-only steps into the
+        # corrector tables — corr_new is already 0 there, and with
+        # corr := pred the unconditional corrector combine reproduces
+        # x_pred exactly, so the executor runs every step "with
+        # corrector" and only the PECE re-eval needs a per-step cond.
+        # The host-side `tables` keep the true (unfolded) rows.
+        rp = program.resolve(schedule, ts)
+        corr = np.array(tables.corr)
+        p_only = tables.c_orders == 0
+        corr[p_only] = tables.pred[p_only]
+        arrays["corr"] = jnp.asarray(corr, jnp.float32)
+        arrays["pece"] = jnp.asarray(rp.pece, jnp.bool_)
+    return arrays, {"ts": ts, "tables": tables}
 
 
 def sa_statics(spec: SamplerSpec) -> tuple:
@@ -156,6 +193,11 @@ def sa_statics(spec: SamplerSpec) -> tuple:
             # shares the fixed path's compile-cache entry (the bitwise
             # regression lock — same executor, byte-equal tables)
             modes = (segs[0][0], segs[0][1])
+        elif len(segs) > MAX_SCAN_SEGMENTS:
+            # pathological fragmentation: the mode pattern moves into the
+            # plan data (folded corr tables + per-step pece flags), so ALL
+            # such patterns at this step count share one executor
+            modes = ("cond",)
         else:
             modes = ("segments", segs)
     else:
@@ -181,6 +223,11 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
     (parameterization, modes, combine, denoise, ring, precision) = statics
     if modes[0] == "segments":
         segments = modes[1]  # ((use_corrector, pece, length), ...)
+    elif modes[0] == "cond":
+        # single-scan fallback: every step runs the corrector combine
+        # (predictor-only steps were folded into the tables at plan time)
+        # and pece="cond" gates the re-eval on dev["pece"][i] per step
+        segments = ((True, "cond", None),)
     else:
         segments = ((modes[0], modes[1], None),)  # None = all M steps
     P = dev["pred"].shape[1]  # buffer rows = max(pred order, corr order)
@@ -204,6 +251,22 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
         acc = jnp.einsum("p,p...->...", coeffs, buf.astype(f32))
         return (decay_i * x_prev.astype(f32) + acc
                 + noise_i * xi.astype(f32)).astype(cdt)
+
+    def re_eval(pece, i, t_next, x_next, e_new, x_eval):
+        """The PECE second model evaluation. ``pece`` is a static bool in
+        the scan-segment executors; ``"cond"`` (the single-scan fallback)
+        dispatches per step on the planned ``dev["pece"]`` flag array.
+        The predicate is a scalar per scan step — un-batched under vmap —
+        so the cond stays a true branch and non-PECE steps skip the
+        second evaluation entirely."""
+        def hit(_):
+            return model_fn(x_next, t_next).astype(cdt), x_next
+        if pece == "cond":
+            return jax.lax.cond(dev["pece"][i], hit,
+                                lambda _: (e_new, x_eval), None)
+        if pece:
+            return hit(None)
+        return e_new, x_eval
 
     def x0_preview(x_eval, e_new, i):
         if parameterization == "data":
@@ -243,9 +306,8 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
                                           dev["corr"][i]])
                 rows = jnp.concatenate([e_new[None], buf], axis=0)
                 x_next = combine_rows(decay_i, x, coeffs, rows, noise_i, xi)
-                if pece:
-                    e_new = model_fn(x_next, t_next).astype(cdt)
-                    x_eval = x_next
+                e_new, x_eval = re_eval(pece, i, t_next, x_next,
+                                        e_new, x_eval)
             else:
                 x_next = x_pred
             buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
@@ -295,9 +357,8 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
                     # history was already folded into corr_base
                     x_next = (corr_base.astype(f32) + dev["corr_new"][i]
                               * e_new.astype(f32)).astype(cdt)
-                    if pece:
-                        e_new = model_fn(x_next, t_next).astype(cdt)
-                        x_eval = x_next
+                    e_new, x_eval = re_eval(pece, i, t_next, x_next,
+                                            e_new, x_eval)
                 else:
                     x_next = x_pred
             else:
@@ -312,9 +373,8 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
                     x_next = combine_rows(decay_i, x, coeffs,
                                           jnp.stack([e_new] + rows),
                                           noise_i, xi)
-                    if pece:
-                        e_new = model_fn(x_next, t_next).astype(cdt)
-                        x_eval = x_next
+                    e_new, x_eval = re_eval(pece, i, t_next, x_next,
+                                            e_new, x_eval)
                 else:
                     x_next = x_pred
             # the ONE history write: e_new becomes age 0 of step i+1, in

@@ -85,6 +85,14 @@ class NoiseSchedule:
     t_start: float = 1.0
     t_end: float = 1e-3
 
+    def validate_span(self, t_start: float, t_end: float) -> None:
+        """Reject a requested solve span the schedule cannot represent.
+
+        Default: every span is fine. Schedules with a hard usable
+        boundary (the cosine schedule's saturation clip) override this to
+        raise a targeted error instead of letting grid construction fail
+        later with a confusing strictly-decreasing violation."""
+
     def prior_scale(self, t) -> float:
         """Std of the terminal prior x_T ~ N(0, prior_scale^2 I).
 
@@ -144,6 +152,17 @@ class VPCosineSchedule(NoiseSchedule):
     s: float = 0.008
     t_start: float = 0.9946  # standard clip used by DPM-Solver for cosine
     t_end: float = 1e-3
+
+    def validate_span(self, t_start: float, t_end: float) -> None:
+        if t_start > self.t_start + 1e-12:
+            raise ValueError(
+                f"t_start={t_start:g} is beyond the cosine schedule's usable "
+                f"span: log(alpha) saturates above t={self.t_start:g} (the "
+                f"1e-12 clip), lambda is not invertible there, and a grid "
+                f"over that region would collapse to duplicate timesteps. "
+                f"Request t_start <= {self.t_start:g}, or construct "
+                f"VPCosineSchedule(t_start=...) with a larger clip "
+                f"boundary explicitly.")
 
     def _log_alpha_raw(self, t):
         t = np.asarray(t, dtype=np.float64)
@@ -252,6 +271,7 @@ def timestep_grid(
         raise ValueError(f"need t_start > t_end, got {t0} <= {t1}")
     if n_steps < 1:
         raise ValueError("n_steps must be >= 1")
+    schedule.validate_span(t0, t1)
     if kind == "time":
         ts = np.linspace(t0, t1, n_steps + 1, dtype=np.float64)
     elif kind == "logsnr":

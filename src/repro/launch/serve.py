@@ -14,6 +14,12 @@
     PYTHONPATH=src python -m repro.launch.serve --mode diffusion \
         --arch dit-s --prediction v --guidance-scale 3.0 --requests 8
 
+    # ... by quality tier — draft/standard/best resolve to step programs
+    # at submit time; --tuned-artifact loads an autotuner winner
+    # (python -m repro.launch.tune) as the "best" tier:
+    PYTHONPATH=src python -m repro.launch.serve --mode diffusion \
+        --quality-tier best --tuned-artifact artifacts/tune_nfe8.json
+
 ``--mode lm`` runs a real (reduced-config on CPU) decode loop: prefill
 the prompt batch, then greedy-decode tokens one step at a time against
 the cache — the same ``prefill``/``decode_step`` functions the dry-run
@@ -125,7 +131,8 @@ def serve_diffusion(args) -> None:
 
     from ..core import Denoiser, get_schedule
     from ..core.samplers import SamplerSpec
-    from ..serve import ServeEngine, auto_mesh
+    from ..serve import (QualityTiers, ServeEngine, auto_mesh,
+                         default_tiers)
 
     schedule = get_schedule("vp_linear")
     guidance = args.guidance_scale is not None
@@ -154,19 +161,39 @@ def serve_diffusion(args) -> None:
             print(f"  stream rid {res.rid}: x0-preview std per step "
                   f"{['%.2f' % s for s in stds]}...")
 
+    tiers = None
+    if args.quality_tier is not None:
+        tiers = QualityTiers.from_artifact(args.tuned_artifact) \
+            if args.tuned_artifact else default_tiers(schedule=schedule)
+        if adapted:  # tiers carry solver choices; serving adapter fields
+            tiers = QualityTiers({  # (prediction/guidance) come from flags
+                name: dataclasses.replace(
+                    s, prediction=args.prediction, guidance=guidance)
+                for name, s in tiers.specs.items()})
     engine = ServeEngine(
         model_fn, bucket_sizes=tuple(args.bucket_sizes), mesh=mesh,
         stream=args.stream, on_result=show if args.stream else None,
-        model_key=("denoiser", cfg.name, args.prediction, guidance))
-    spec = SamplerSpec.from_nfe(
-        args.sampler, args.nfe, schedule=schedule,
-        predictor_order=3, corrector_order=1, tau=args.tau,
-        prediction=args.prediction if adapted else None,
-        guidance=guidance)
+        model_key=("denoiser", cfg.name, args.prediction, guidance),
+        tiers=tiers)
+    if args.quality_tier is not None:
+        spec, submit_kw = None, {"quality_tier": args.quality_tier}
+    else:
+        spec = SamplerSpec.from_nfe(
+            args.sampler, args.nfe, schedule=schedule,
+            predictor_order=3, corrector_order=1, tau=args.tau,
+            prediction=args.prediction if adapted else None,
+            guidance=guidance)
+        submit_kw = {}
     shape = (args.seq, cfg.denoiser_latent)
     g_scale = 1.0 if args.guidance_scale is None else args.guidance_scale
     for _ in range(args.requests):
-        engine.submit(spec, shape, cond=cond, guidance_scale=g_scale)
+        engine.submit(spec, shape, cond=cond, guidance_scale=g_scale,
+                      **submit_kw)
+    if spec is None:
+        spec = engine.tiers.resolve(args.quality_tier)
+        print(f"quality tier {args.quality_tier!r} -> "
+              f"{spec.name} NFE {spec.nfe}, {spec.n_steps} steps"
+              + (" (tuned artifact)" if args.tuned_artifact else ""))
 
     results = engine.run()
     assert len(results) == args.requests
@@ -223,6 +250,12 @@ def main():
     ap.add_argument("--cond-file", default=None,
                     help=".npy per-request conditioning, broadcastable "
                     "to the latent")
+    ap.add_argument("--quality-tier", default=None,
+                    help="submit by tier name (draft|standard|best with "
+                    "the default ladder) instead of --sampler/--nfe/--tau")
+    ap.add_argument("--tuned-artifact", default=None,
+                    help="repro.launch.tune JSON artifact; its searched "
+                    "winner becomes the 'best' tier")
     args = ap.parse_args()
     if args.arch is None:
         args.arch = "starcoder2-3b" if args.mode == "lm" else "dit-s"

@@ -1,0 +1,94 @@
+"""Program-autotuner driver: search StepProgram space from the CLI.
+
+    # budgeted GMM-oracle search at NFE 8, checkpointed + resumable:
+    PYTHONPATH=src python -m repro.launch.tune \
+        --nfe 8 --budget 4000 --seed 0 --artifact artifacts/tune_nfe8.json
+
+    # interrupt-friendly: run two units now, the rest later
+    PYTHONPATH=src python -m repro.launch.tune \
+        --artifact artifacts/tune_nfe8.json --resume --max-units 2
+
+    # tune a baseline family's per-step eta (tau track) instead:
+    PYTHONPATH=src python -m repro.launch.tune --family ddim --nfe 10
+
+The JSON artifact records the echoed config, the serialized search RNG,
+the unit cursor, the full eval history, and the best program — resuming
+replays bit-identically, and serving loads the winner directly::
+
+    tiers = repro.serve.QualityTiers.from_artifact("artifacts/tune_nfe8.json")
+"""
+
+import argparse
+import json
+
+from ..tune import SearchConfig, run_search
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--family", default="sa",
+                    help="sampler family to tune (sa, ddim, "
+                    "ddpm_ancestral, euler_maruyama, edm_stochastic)")
+    ap.add_argument("--schedule", default="vp_linear")
+    ap.add_argument("--nfe", type=int, default=8,
+                    help="model-evaluation budget per solve")
+    ap.add_argument("--budget", type=int, default=4000,
+                    help="total search spend in NFE-equivalents "
+                    "(nfe x n_seeds per candidate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--presets", default=None,
+                    help="comma-separated warm-start presets (default: "
+                    "per-family)")
+    ap.add_argument("--tau", type=float, default=1.0)
+    ap.add_argument("--n-samples", type=int, default=512,
+                    help="GMM-oracle sample-set size per solve")
+    ap.add_argument("--n-seeds", type=int, default=4,
+                    help="independent solves averaged per candidate")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="candidates per device dispatch")
+    ap.add_argument("--cd-passes", type=int, default=2)
+    ap.add_argument("--evo-population", type=int, default=12)
+    ap.add_argument("--evo-generations", type=int, default=3)
+    ap.add_argument("--artifact", default=None,
+                    help="JSON checkpoint path (written at every unit "
+                    "boundary)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from --artifact if it exists (its "
+                    "echoed config wins over the flags above)")
+    ap.add_argument("--max-units", type=int, default=None,
+                    help="stop after this many mode-pattern units "
+                    "(state stays resumable)")
+    args = ap.parse_args()
+
+    config = SearchConfig(
+        family=args.family, nfe=args.nfe, budget=args.budget,
+        seed=args.seed,
+        presets=tuple(args.presets.split(",")) if args.presets else (),
+        tau=args.tau, n_samples=args.n_samples, n_seeds=args.n_seeds,
+        chunk=args.chunk, cd_passes=args.cd_passes,
+        evo_population=args.evo_population,
+        evo_generations=args.evo_generations,
+        spec_kw={"schedule": args.schedule})
+
+    result = run_search(config, artifact=args.artifact, resume=args.resume,
+                        max_units=args.max_units, log=print)
+
+    s = result.state
+    print(f"\nsearched {len(s['history'])} evaluations, "
+          f"{s['budget_spent']}/{SearchConfig.from_obj(s['config']).budget} "
+          f"NFE-equivalents spent "
+          f"({result.stats['dispatches']} dispatches, "
+          f"{result.stats['compiles']} executor compiles)")
+    if result.best_program is None:
+        print("no candidate evaluated (budget too small?)")
+        return
+    print(f"best score: {result.best_score:.5f}")
+    print("best program:",
+          json.dumps(json.loads(result.best_program.to_json()), indent=1))
+    if args.artifact:
+        print(f"artifact: {args.artifact} "
+              f"({'complete' if result.done else 'resumable'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,6 +52,17 @@ Quickstart::
     print(engine.stats())           # requests/s, model-evals/s (real
                                     # requests only), padded_slots, ...
 
+Or name a quality tier instead of a spec — tiers resolve to full specs
+at submit time (:mod:`repro.serve.tiers`), so they bucket, warm, and
+sample exactly like explicit specs; autotuned programs load straight
+from a search artifact::
+
+    from repro.serve import QualityTiers, ServeEngine
+
+    engine = ServeEngine(model_fn,
+                         tiers=QualityTiers.from_artifact("tune.json"))
+    engine.submit(None, shape=(32, 8), quality_tier="best")
+
 Drivers: ``python -m repro.launch.serve --mode diffusion`` (full CLI),
 ``examples/serve_diffusion.py`` (thin client),
 ``benchmarks/bench_serving.py`` (bucket/mesh throughput sweeps).
@@ -62,10 +73,12 @@ from .batching import (MicroBatch, PAD_RID, Request, bucket_key,
                        form_microbatches)
 from .engine import ServeEngine, ServeResult
 from .sharding import align_bucket_sizes, auto_mesh, data_axis_size
+from .tiers import QualityTiers, default_tiers
 
 __all__ = [
     "MicroBatch",
     "PAD_RID",
+    "QualityTiers",
     "Request",
     "ServeEngine",
     "ServeResult",
@@ -75,6 +88,7 @@ __all__ = [
     "choose_bucket",
     "cond_struct",
     "data_axis_size",
+    "default_tiers",
     "fold_keys",
     "form_microbatches",
 ]

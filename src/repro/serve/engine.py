@@ -56,6 +56,7 @@ from ..core.samplers import (SamplerSpec, build_plan, compile_cache_stats,
                              sample_batched, sample_sharded, warmup)
 from .batching import MicroBatch, Request, fold_keys, form_microbatches
 from .sharding import align_bucket_sizes, data_axis_size
+from .tiers import QualityTiers, default_tiers
 
 __all__ = ["ServeEngine", "ServeResult"]
 
@@ -93,6 +94,10 @@ class ServeEngine:
             re-built engine over the same weights reuse live executors).
         noise_seed / solve_seed: bases for the per-request ``fold_in``
             RNG streams (initial noise and solver path respectively).
+        tiers: the :class:`~repro.serve.tiers.QualityTiers` map behind
+            ``submit(..., quality_tier=...)``; defaults to
+            :func:`~repro.serve.tiers.default_tiers`. Load an autotuned
+            ladder with ``QualityTiers.from_artifact(path)``.
     """
 
     def __init__(self, model_fn: Callable, *,
@@ -102,7 +107,8 @@ class ServeEngine:
                  on_result: Callable[[ServeResult], None] | None = None,
                  model_key: Hashable | None = None,
                  noise_seed: int = 7, solve_seed: int = 8,
-                 donate: bool | None = None):
+                 donate: bool | None = None,
+                 tiers: QualityTiers | None = None):
         if not bucket_sizes:
             raise ValueError("need at least one bucket size")
         self.model_fn = model_fn
@@ -116,6 +122,7 @@ class ServeEngine:
         self.on_result = on_result
         self.model_key = model_key
         self.donate = donate
+        self.tiers = tiers if tiers is not None else default_tiers()
         self._noise_base = jax.random.PRNGKey(noise_seed)
         self._solve_base = jax.random.PRNGKey(solve_seed)
         self._queue: list[Request] = []
@@ -128,16 +135,28 @@ class ServeEngine:
         }
 
     # ------------------------------------------------------------- intake
-    def submit(self, spec: SamplerSpec, shape: Sequence[int],
+    def submit(self, spec: SamplerSpec | None, shape: Sequence[int],
                dtype="float32", rid: int | None = None, *,
-               cond=None, guidance_scale: float = 1.0) -> int:
+               cond=None, guidance_scale: float = 1.0,
+               quality_tier: str | None = None) -> int:
         """Enqueue one request; returns its rid (for RNG identity and
         result matching). An explicit ``rid`` makes a request replayable
         — the same rid always produces the same sample. ``cond`` is the
         request's conditioning pytree (engine model must be a Denoiser;
         only its shape/dtype structure affects bucketing) and
         ``guidance_scale`` its CFG scale (pure data: a scale sweep rides
-        one warmed executable)."""
+        one warmed executable). Pass ``quality_tier`` ("draft" |
+        "standard" | "best" with default tiers) with ``spec=None`` to let
+        the engine's tier map pick the spec — resolution happens here, so
+        tier requests bucket (and sample) exactly like explicit-spec
+        requests."""
+        if quality_tier is not None:
+            if spec is not None:
+                raise ValueError(
+                    "pass either spec or quality_tier, not both")
+            spec = self.tiers.resolve(quality_tier)
+        elif spec is None:
+            raise ValueError("need a spec (or a quality_tier)")
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)

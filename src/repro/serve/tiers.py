@@ -1,0 +1,97 @@
+"""Quality tiers: named program presets as the serving-side knob.
+
+A request shouldn't have to spell out a :class:`SamplerSpec` — the
+product-level contract is "draft / standard / best". A
+:class:`QualityTiers` map resolves each tier name to a full spec (family
++ NFE-derived step count + :class:`~repro.core.programs.StepProgram`),
+and :meth:`ServeEngine.submit` accepts ``quality_tier=`` in place of a
+spec. Resolution happens at submit time, so the tier joins the bucket
+key *via the resolved spec* — tier requests reuse all existing
+bucket/compile/warmup machinery, and a tier request is **bitwise
+identical** to submitting its resolved spec explicitly (same spec →
+same bucket → same ``fold_in(rid)`` RNG).
+
+Tiers are plain data: build them from presets (:func:`default_tiers`),
+from a finished autotuner artifact (:meth:`QualityTiers.from_artifact` —
+the searched winner becomes ``"best"``), or by hand from any specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from ..core.programs import program_preset_for_nfe
+from ..core.samplers import SamplerSpec
+
+__all__ = ["QualityTiers", "default_tiers"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityTiers:
+    """Immutable tier-name -> SamplerSpec map."""
+
+    specs: Mapping[str, SamplerSpec]
+
+    def __post_init__(self):
+        specs = dict(self.specs)
+        for name, spec in specs.items():
+            if not isinstance(spec, SamplerSpec):
+                raise TypeError(
+                    f"tier {name!r} must map to a SamplerSpec, got "
+                    f"{type(spec).__name__}")
+        object.__setattr__(self, "specs", specs)
+
+    def names(self) -> list[str]:
+        return sorted(self.specs)
+
+    def resolve(self, tier: str) -> SamplerSpec:
+        try:
+            return self.specs[tier]
+        except KeyError:
+            raise ValueError(
+                f"unknown quality tier {tier!r}; have {self.names()}")
+
+    def with_tier(self, name: str, spec: SamplerSpec) -> "QualityTiers":
+        return QualityTiers({**self.specs, name: spec})
+
+    @classmethod
+    def from_artifact(cls, path: str, *, tier: str = "best",
+                      base: "QualityTiers | None" = None,
+                      **overrides) -> "QualityTiers":
+        """Load a finished search artifact's winner as a tier.
+
+        The winner's spec is rebuilt exactly as the search evaluated it
+        (family, NFE, spec_kw from the artifact's echoed config), so
+        serving the tier reproduces the searched program bitwise;
+        ``overrides`` adjust serving-only fields (e.g. ``combine``,
+        ``precision``). The remaining tiers come from ``base`` (default:
+        :func:`default_tiers` built on the artifact's schedule)."""
+        from ..tune.search import load_state, spec_from_state
+        state = load_state(path)
+        spec = spec_from_state(state, **overrides)
+        if base is None:
+            base = default_tiers(schedule=spec.schedule)
+        return base.with_tier(tier, spec)
+
+
+def default_tiers(*, schedule="vp_linear", tau: float = 1.0,
+                  **spec_kw) -> QualityTiers:
+    """The out-of-the-box draft/standard/best ladder.
+
+    Hand-tuned presets over the SA family: ``draft`` spends 6 NFE on an
+    annealed-tau program, ``standard`` 8 NFE on the recorded ``nfe8-gmm``
+    winner shape, ``best`` 20 NFE on the same shape (corrector through
+    the coarse phase, predictor-only tail, tau annealed to 0). Override
+    ``best`` with a searched program via
+    :meth:`QualityTiers.from_artifact`."""
+    def spec(nfe, preset):
+        return SamplerSpec.from_nfe(
+            "sa", nfe, schedule=schedule,
+            program=program_preset_for_nfe(preset, nfe, tau=tau), **spec_kw)
+
+    return QualityTiers({
+        "draft": spec(6, "tau-anneal"),
+        "standard": spec(8, "nfe8-gmm"),
+        "best": spec(20, "nfe8-gmm"),
+    })

@@ -1,0 +1,66 @@
+"""repro.tune — solver-program autotuner.
+
+Searches :class:`~repro.core.programs.StepProgram` space (per-interval
+predictor/corrector order, P/PEC/PECE mode, tau) against a pluggable
+objective, exploiting the plan/execute invariant that order/tau tracks
+are table *data*: every candidate sharing a mode pattern reuses ONE
+compiled executor, and candidates are stacked so many evaluate per
+device dispatch.
+
+::
+
+    presets (warm starts)  ──▶  one unit per mode pattern   (outer loop;
+         │                      = one compile each)          the ONLY
+         ▼                                                   recompiles
+    coordinate descent  ──▶  all single-coordinate order/tau
+         │                   neighbours, batched per dispatch
+         ▼
+    evolutionary refinement ──▶ tau tracks ~ N(mean, sigma),
+         │                      elites update mean/sigma
+         ▼
+    JSON artifact: config echo, PCG64 RNG state, unit cursor,
+    eval history, best program  — checkpoint/resume at unit
+    boundaries; budget in NFE-equivalents (nfe x n_seeds per
+    candidate, cached duplicates free)
+
+Quickstart::
+
+    from repro.tune import SearchConfig, run_search
+
+    result = run_search(SearchConfig(nfe=8, budget=4000, seed=0),
+                        artifact="artifacts/tune_nfe8.json")
+    print(result.best_score, result.best_program)
+
+The winner closes the loop into serving as a quality tier::
+
+    from repro.serve import QualityTiers, ServeEngine
+
+    tiers = QualityTiers.from_artifact("artifacts/tune_nfe8.json")
+    engine = ServeEngine(model_fn, tiers=tiers)
+    engine.submit(None, shape=(256, 2), quality_tier="best")
+
+Drivers: ``python -m repro.launch.tune`` (CLI with ``--resume``),
+``benchmarks/bench_program_search.py`` (search throughput +
+best-found-score record).
+"""
+
+from .evaluate import ProgramEvaluator
+from .objective import CallableObjective, GMMObjective, Objective
+from .search import (SearchConfig, SearchResult, best_program,
+                     default_presets, load_state, run_search, save_state,
+                     spec_from_state)
+
+__all__ = [
+    "CallableObjective",
+    "GMMObjective",
+    "Objective",
+    "ProgramEvaluator",
+    "SearchConfig",
+    "SearchResult",
+    "best_program",
+    "default_presets",
+    "load_state",
+    "run_search",
+    "save_state",
+    "spec_from_state",
+]

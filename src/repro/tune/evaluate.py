@@ -1,0 +1,156 @@
+"""Batched candidate evaluation for the program autotuner.
+
+The whole point of searching :class:`~repro.core.programs.StepProgram`
+space is the PR-5 plan/execute invariant: per-interval orders and taus
+are zero-padded coefficient-table *data*, so every candidate sharing a
+mode pattern (= executor statics) runs through ONE compiled executor.
+This module turns that invariant into throughput twice over:
+
+1. **One compile per mode pattern.** Candidates are grouped by
+   ``(executor statics, step count)``; each group gets one jitted
+   function, compiled once (the evaluator counts compiles so tests can
+   assert the contract).
+2. **Many candidates per device dispatch.** Within a group, candidate
+   plans are *stacked* — the plan-arrays pytree gains a leading
+   candidate axis — and the jitted function is a ``vmap`` over that axis
+   wrapping a ``vmap`` over evaluation seeds, returning the whole
+   chunk's scores ``[chunk]`` in one dispatch. Ragged tails are padded
+   by repeating the chunk's first candidate (pad scores are dropped), so
+   a fixed chunk width means a fixed aval and zero retraces.
+
+Programs are width-floored before planning (``program.width``) so every
+candidate in a group shares the coefficient tables' row count — that is
+what makes the stack rectangular regardless of each candidate's max
+order.
+
+The evaluator accounts its spend in **NFE-equivalents**: one candidate
+costs ``spec.nfe * n_seeds`` (solver-level model evaluations per solve,
+times the seeds averaged into its score). Search budgets are quoted in
+the same unit.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.programs import StepProgram
+from ..core.samplers import SamplerSpec, build_plan, get_family
+from .objective import Objective
+
+__all__ = ["ProgramEvaluator"]
+
+
+class ProgramEvaluator:
+    """Scores StepProgram candidates against an objective, batched.
+
+    Args:
+        objective: the :class:`~repro.tune.objective.Objective` to score
+            against (model + init + in-graph metric).
+        family: registered sampler family to tune (``"sa"``, ``"ddim"``,
+            ``"edm_stochastic"``, ...).
+        nfe: model-evaluation budget per solve; each candidate's step
+            count comes from ``SamplerSpec.from_nfe`` under its own mode
+            pattern.
+        width: coefficient-table row floor applied to every candidate
+            (keeps plan-array shapes uniform across orders; set it to
+            the search's max order).
+        chunk: candidates per device dispatch.
+        spec_kw: extra ``SamplerSpec`` fields (schedule, grid,
+            parameterization, combine, precision, ...).
+    """
+
+    def __init__(self, objective: Objective, *, family: str = "sa",
+                 nfe: int = 8, width: int = 3, chunk: int = 16,
+                 spec_kw: dict | None = None):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.objective = objective
+        self.family_name = family
+        self.family = get_family(family)
+        self.nfe = int(nfe)
+        self.width = int(width)
+        self.chunk = int(chunk)
+        self.spec_kw = dict(spec_kw or {})
+        self.stats = {"candidates": 0, "pad_evals": 0, "dispatches": 0,
+                      "compiles": 0, "nfe_spent": 0}
+        self._fns: dict = {}      # (statics, n_steps) -> jitted chunk fn
+        self._ctx: dict = {}      # convention -> (model, x_T, solve_keys)
+
+    # ----------------------------------------------------------- plumbing
+    def spec_for(self, program: StepProgram) -> SamplerSpec:
+        """The full sampler spec a candidate runs as (width-floored, so
+        the search artifact's winner reproduces these exact tables)."""
+        if program.width < self.width:
+            program = program.replace(width=self.width)
+        return SamplerSpec.from_nfe(self.family_name, self.nfe,
+                                    program=program, **self.spec_kw)
+
+    def _context(self, spec: SamplerSpec):
+        conv = self.family.model_convention(spec)
+        ctx = self._ctx.get(conv)
+        if ctx is None:
+            model = self.objective.model_fn(conv, spec.resolve_schedule())
+            ctx = (model, self.objective.init(spec),
+                   self.objective.solve_keys())
+            self._ctx[conv] = ctx
+        return ctx
+
+    def _chunk_fn(self, statics, n_steps: int, spec: SamplerSpec):
+        key = (statics, n_steps)
+        fn = self._fns.get(key)
+        if fn is not None:
+            return fn
+        model, x_T, solve_keys = self._context(spec)
+        family, objective = self.family, self.objective
+
+        def eval_candidate(arrays):
+            def solve(x, k):
+                return family.execute(statics, arrays, model, x, k, False)
+            x0 = jax.vmap(solve)(x_T, solve_keys)  # [n_seeds, *shape]
+            return objective.batch_score(x0)
+
+        fn = jax.jit(jax.vmap(eval_candidate))
+        self._fns[key] = fn
+        self.stats["compiles"] += 1
+        return fn
+
+    # ----------------------------------------------------------- evaluate
+    def evaluate(self, programs: Sequence[StepProgram]) -> np.ndarray:
+        """Scores aligned with ``programs`` (lower is better; NaN scores
+        come back as +inf so unstable candidates lose, never win)."""
+        if not programs:
+            return np.zeros((0,), np.float64)
+        specs = [self.spec_for(p) for p in programs]
+        groups: dict = {}
+        for idx, spec in enumerate(specs):
+            gkey = (self.family.statics(spec), spec.n_steps)
+            groups.setdefault(gkey, []).append(idx)
+
+        scores = np.full(len(programs), np.inf, np.float64)
+        for (statics, n_steps), idxs in groups.items():
+            fn = self._chunk_fn(statics, n_steps, specs[idxs[0]])
+            for lo in range(0, len(idxs), self.chunk):
+                batch = idxs[lo:lo + self.chunk]
+                n_pad = self.chunk - len(batch)
+                padded = batch + [batch[0]] * n_pad
+                plans = [build_plan(specs[i]) for i in padded]
+                stacked = jax.tree.map(
+                    lambda *leaves: jnp.stack(leaves),
+                    *[p.arrays for p in plans])
+                out = np.asarray(fn(stacked), np.float64)
+                self.stats["dispatches"] += 1
+                self.stats["pad_evals"] += n_pad
+                for j, i in enumerate(batch):
+                    scores[i] = out[j] if np.isfinite(out[j]) else np.inf
+                    self.stats["candidates"] += 1
+                    self.stats["nfe_spent"] += (specs[i].nfe
+                                                * self.objective.n_seeds)
+        return scores
+
+    def cost_of(self, program: StepProgram) -> int:
+        """NFE-equivalents one evaluation of ``program`` will spend."""
+        return self.spec_for(program).nfe * self.objective.n_seeds

@@ -1,0 +1,170 @@
+"""Pluggable objectives for the solver-program autotuner.
+
+An objective owns three things the evaluator composes into one jitted
+candidate-scoring graph:
+
+- the **model** the solver drives (``model_fn(convention, schedule)`` —
+  built per prediction convention so every registered sampler family can
+  be tuned against it),
+- the **initial state** per evaluation seed (``init(key, dtype)`` — the
+  prior draw; shape fixed so every candidate shares one executor aval),
+- the **score** (``batch_score(x0)`` — an in-graph scalar over the
+  ``[n_seeds, *shape]`` stack of solved sample sets; LOWER IS BETTER).
+
+Everything is deterministic given the objective's ``seed``: the per-seed
+initial noise, the target sample sets, and the metric's projection keys
+are all derived by ``fold_in`` — two searches with the same seed score a
+candidate identically, which is what makes search runs reproducible and
+resumable.
+
+:class:`GMMObjective` is the out-of-the-box oracle objective (the exact
+Gaussian-mixture posterior model from :mod:`repro.core.oracle`, scored by
+sliced Wasserstein-2 against exact target draws — the benchmark suite's
+FID stand-in). :class:`CallableObjective` adapts arbitrary user
+callables (a real backbone plus any metric) to the same interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.metrics import sliced_w2_stat
+from ..core.oracle import GMM
+from ..core.samplers import SamplerSpec
+from ..core.schedules import NoiseSchedule
+
+__all__ = ["Objective", "GMMObjective", "CallableObjective"]
+
+
+class Objective:
+    """Interface the evaluator consumes; subclass or use the adapters.
+
+    Attributes:
+        shape: per-solve latent shape (e.g. ``(n_samples, dim)``); every
+            candidate/seed solves one latent of this shape.
+        n_seeds: independent solves averaged per candidate score.
+    """
+
+    shape: tuple[int, ...]
+    n_seeds: int
+
+    def model_fn(self, convention: str,
+                 schedule: NoiseSchedule) -> Callable:  # pragma: no cover
+        """The ``(x, t)`` model in the family's prediction convention."""
+        raise NotImplementedError
+
+    def init(self, spec: SamplerSpec) -> jnp.ndarray:  # pragma: no cover
+        """``[n_seeds, *shape]`` initial states (the prior draw)."""
+        raise NotImplementedError
+
+    def solve_keys(self) -> jax.Array:  # pragma: no cover
+        """``[n_seeds]`` PRNG keys threaded to the solver."""
+        raise NotImplementedError
+
+    def batch_score(self, x0: jnp.ndarray) -> jnp.ndarray:  # pragma: no cover
+        """In-graph scalar score of ``[n_seeds, *shape]`` solves; lower
+        is better. Must be pure (jit/vmap-safe)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class GMMObjective(Objective):
+    """GMM-oracle sliced-W2: the solver is the ONLY error source, so the
+    score isolates exactly what a step program can influence."""
+
+    gmm: GMM = dataclasses.field(default_factory=GMM.default_2d)
+    n_samples: int = 512
+    n_seeds: int = 4
+    n_proj: int = 64
+    seed: int = 0
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (self.n_samples, self.gmm.dim)
+
+    def _base(self, lane: int) -> jax.Array:
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), lane)
+
+    def model_fn(self, convention: str, schedule: NoiseSchedule) -> Callable:
+        return self.gmm.model_fn(schedule, convention)
+
+    def init(self, spec: SamplerSpec) -> jnp.ndarray:
+        schedule = spec.resolve_schedule()
+        scale = schedule.prior_scale(float(spec.grid_ts()[0]))
+        keys = jax.random.split(self._base(0), self.n_seeds)
+        return scale * jax.vmap(
+            lambda k: jax.random.normal(k, self.shape, jnp.float32))(keys)
+
+    def solve_keys(self) -> jax.Array:
+        return jax.random.split(self._base(1), self.n_seeds)
+
+    def targets(self) -> jnp.ndarray:
+        """``[n_seeds, n_samples, dim]`` exact target draws (one set per
+        seed, so the metric's sampling noise averages out too)."""
+        keys = jax.random.split(self._base(2), self.n_seeds)
+        return jax.vmap(lambda k: self.gmm.sample(k, self.n_samples))(keys)
+
+    def batch_score(self, x0: jnp.ndarray) -> jnp.ndarray:
+        proj = jax.random.split(self._base(3), self.n_seeds)
+        per_seed = jax.vmap(
+            lambda x, y, k: sliced_w2_stat(x, y, k, self.n_proj)
+        )(x0.astype(jnp.float32), self.targets(), proj)
+        return jnp.mean(per_seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class CallableObjective(Objective):
+    """Adapter for real backbones / custom metrics.
+
+    Args:
+        model: ``(convention, schedule) -> model_fn`` factory, or a plain
+            ``(x, t)`` callable already speaking every requested
+            convention (e.g. a data-prediction net tuned with
+            data-convention families only).
+        score: in-graph ``(x0 [n_seeds, *shape]) -> scalar``, lower is
+            better.
+        shape: per-solve latent shape.
+        init: optional ``(spec, n_seeds) -> [n_seeds, *shape]`` initial
+            states; defaults to the schedule-scaled unit-normal prior.
+        n_seeds / seed: evaluation replication and RNG base.
+    """
+
+    model: Any = None
+    score: Callable[[jnp.ndarray], jnp.ndarray] = None
+    shape: tuple[int, ...] = ()
+    init_fn: Callable | None = None
+    n_seeds: int = 2
+    seed: int = 0
+
+    def model_fn(self, convention: str, schedule: NoiseSchedule) -> Callable:
+        try:
+            fn = self.model(convention, schedule)
+            if callable(fn):
+                return fn
+        except TypeError:
+            pass
+        return self.model
+
+    def init(self, spec: SamplerSpec) -> jnp.ndarray:
+        if self.init_fn is not None:
+            return self.init_fn(spec, self.n_seeds)
+        schedule = spec.resolve_schedule()
+        scale = schedule.prior_scale(float(spec.grid_ts()[0]))
+        keys = jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), 0),
+            self.n_seeds)
+        return scale * jax.vmap(
+            lambda k: jax.random.normal(k, tuple(self.shape), jnp.float32)
+        )(keys)
+
+    def solve_keys(self) -> jax.Array:
+        return jax.random.split(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), 1),
+            self.n_seeds)
+
+    def batch_score(self, x0: jnp.ndarray) -> jnp.ndarray:
+        return self.score(x0)

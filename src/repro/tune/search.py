@@ -1,0 +1,409 @@
+"""Black-box search over StepProgram space, checkpointable and budgeted.
+
+Search structure (cheap-to-expensive, mirroring what recompiles):
+
+- **Outer loop — mode patterns.** Each warm-start preset (stamped at the
+  NFE budget) contributes one *unit*: its P/PEC/PECE pattern. The mode
+  pattern is the only trace-relevant part of a program, so the outer
+  loop is exactly the compile loop — everything inside a unit reuses one
+  executor (asserted via :class:`ProgramEvaluator` compile stats).
+- **Coordinate descent** inside a unit: all single-coordinate neighbours
+  of the incumbent (predictor/corrector order values, tau grid values)
+  are evaluated in batched dispatches; the best strict improver becomes
+  the new incumbent, for up to ``cd_passes`` rounds. Corrector-order
+  proposals never include 0 and predictor proposals respect the warm-up
+  clamp ``min(i+1, max_order)`` — proposals that would change the mode
+  pattern (a recompile) or the effective tables (a wasted eval) are
+  excluded at generation time.
+- **Evolutionary refinement** (CMA-ES-style, diagonal): a population of
+  tau tracks drawn from ``N(mean, diag(sigma^2))`` around the incumbent
+  (plus occasional order point-mutations), elites update mean/sigma each
+  generation. This explores off-grid tau values coordinate descent's
+  fixed grid cannot reach.
+
+Budget is quoted in **NFE-equivalents** (``spec.nfe * n_seeds`` per
+candidate); duplicate candidates are served from the eval cache and cost
+nothing. Search state — config echo, RNG state, unit cursor, full eval
+history, best-so-far — round-trips through a JSON artifact
+(:func:`save_state` / :func:`load_state`), checkpointed at every unit
+boundary; resuming an interrupted run replays bit-identically to the
+uninterrupted one (the RNG is a serialized numpy ``PCG64``). Serving
+loads the winner straight from the artifact
+(:func:`repro.serve.tiers.QualityTiers.from_artifact`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable
+
+import numpy as np
+
+from ..core.programs import StepProgram, program_preset_for_nfe
+from ..core.samplers import SamplerSpec
+from .evaluate import ProgramEvaluator
+from .objective import GMMObjective, Objective
+
+__all__ = ["SearchConfig", "SearchResult", "default_presets", "run_search",
+           "save_state", "load_state", "best_program", "spec_from_state"]
+
+_VERSION = 1
+
+
+def default_presets(family: str) -> tuple[str, ...]:
+    """Warm-start presets (= the mode patterns the outer loop visits).
+    Tau-only families keep uniform-mode presets: their executors have no
+    P/PEC/PECE structure to vary."""
+    if family == "sa":
+        return ("nfe8-gmm", "predictor-tail", "tau-anneal")
+    return ("tau-anneal", "constant")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Everything that determines a search run (and is echoed into the
+    artifact, so a resumed run cannot silently diverge)."""
+
+    family: str = "sa"
+    nfe: int = 8
+    #: total spend ceiling in NFE-equivalents (spec.nfe * n_seeds per
+    #: candidate; cached duplicates are free)
+    budget: int = 4000
+    seed: int = 0
+    #: warm-start preset names; () -> :func:`default_presets`
+    presets: tuple[str, ...] = ()
+    #: tau used to stamp the presets
+    tau: float = 1.0
+    max_order: int = 3
+    #: the coordinate-descent tau grid
+    tau_values: tuple[float, ...] = (0.0, 0.2, 0.4, 0.6, 0.8, 1.0, 1.4)
+    cd_passes: int = 2
+    evo_population: int = 12
+    evo_generations: int = 3
+    evo_elite: int = 4
+    #: initial evo sigma (per tau coordinate)
+    sigma0: float = 0.25
+    # objective knobs (used when no explicit objective is passed)
+    n_samples: int = 512
+    n_seeds: int = 4
+    n_proj: int = 64
+    #: candidates per device dispatch
+    chunk: int = 16
+    #: extra SamplerSpec fields (schedule, grid, parameterization, ...)
+    spec_kw: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "presets", tuple(self.presets))
+        object.__setattr__(self, "tau_values",
+                          tuple(float(v) for v in self.tau_values))
+        object.__setattr__(self, "spec_kw", dict(self.spec_kw))
+
+    def resolved_presets(self) -> tuple[str, ...]:
+        return self.presets or default_presets(self.family)
+
+    def to_obj(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_obj(cls, obj: dict) -> "SearchConfig":
+        kw = dict(obj)
+        for f in ("presets", "tau_values"):
+            if f in kw:
+                kw[f] = tuple(kw[f])
+        return cls(**kw)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_program: StepProgram | None
+    best_score: float
+    state: dict
+    #: evaluator counters: candidates, dispatches, compiles, pad_evals
+    stats: dict
+    #: every unit has been searched
+    done: bool
+    #: the NFE budget ran out
+    exhausted: bool
+
+
+# ----------------------------------------------------------------- artifact
+def save_state(path: str, state: dict) -> None:
+    """Atomic JSON checkpoint (tmp + replace, so an interrupt mid-write
+    never corrupts a resumable artifact)."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(state, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_state(path: str) -> dict:
+    with open(path) as f:
+        state = json.load(f)
+    if state.get("version") != _VERSION:
+        raise ValueError(
+            f"search artifact {path!r} has version "
+            f"{state.get('version')!r}; this build reads {_VERSION}")
+    return state
+
+
+def best_program(state: dict) -> tuple[StepProgram, float]:
+    """The winner recorded in a search state/artifact."""
+    best = state.get("best")
+    if not best:
+        raise ValueError("search artifact records no evaluated program")
+    return StepProgram.from_json(best["program"]), float(best["score"])
+
+
+def _fresh_state(config: SearchConfig) -> dict:
+    rng = np.random.default_rng(config.seed)
+    return {
+        "version": _VERSION,
+        "config": config.to_obj(),
+        "rng": rng.bit_generator.state,
+        "unit": 0,
+        "budget_spent": 0,
+        "history": [],
+        "best": None,
+    }
+
+
+# ------------------------------------------------------------------- search
+def _explicit(program: StepProgram, evaluator: ProgramEvaluator,
+              tau_only: bool) -> StepProgram:
+    """Normalize a warm start to explicit per-interval tuple tracks (the
+    search's coordinate space) at its own step count. Tau-only families
+    keep orders/mode scalar — their planners reject anything else."""
+    spec = evaluator.spec_for(program)
+    M = spec.n_steps
+    rp = program.resolve(spec.resolve_schedule(), spec.grid_ts())
+    taus = tuple(round(float(v), 4) for v in rp.taus)
+    width = max(program.width, evaluator.width)
+    if tau_only:
+        return StepProgram(tau=taus, width=width)
+    flags = program.mode_flags(M)
+    modes = tuple("PECE" if pe else ("PEC" if uc else "P")
+                  for uc, pe in flags)
+    return StepProgram(
+        predictor_order=tuple(int(v) for v in rp.p_orders),
+        corrector_order=tuple(int(v) for v in rp.c_orders),
+        mode=modes, tau=taus, width=width)
+
+
+def _neighbors(prog: StepProgram, config: SearchConfig,
+               tau_only: bool) -> list[StepProgram]:
+    """All single-coordinate variants that keep the mode pattern (and
+    therefore the compiled executor) fixed."""
+    out: list[StepProgram] = []
+    M = len(prog.tau)
+    for i in range(M):
+        if not tau_only:
+            # predictor order: warm-up clamp makes values > i+1 alias
+            # the same tables — don't waste evaluations on them
+            for v in range(1, min(i + 1, config.max_order) + 1):
+                if v != prog.predictor_order[i]:
+                    t = list(prog.predictor_order)
+                    t[i] = v
+                    out.append(prog.replace(predictor_order=tuple(t)))
+            # corrector order: NEVER 0 — that flips the step to
+            # predictor-only, changing the mode pattern (a recompile);
+            # mode changes are the outer loop's business
+            if prog.corrector_order[i] > 0:
+                for v in range(1, config.max_order + 1):
+                    if v != prog.corrector_order[i]:
+                        t = list(prog.corrector_order)
+                        t[i] = v
+                        out.append(prog.replace(corrector_order=tuple(t)))
+        for tv in config.tau_values:
+            if abs(tv - prog.tau[i]) > 1e-9:
+                t = list(prog.tau)
+                t[i] = round(float(tv), 4)
+                out.append(prog.replace(tau=tuple(t)))
+    return out
+
+
+class _Session:
+    """One run_search invocation: evaluator + eval cache + budget + log."""
+
+    def __init__(self, config, objective, state, log):
+        self.config = config
+        self.state = state
+        self.log = log or (lambda msg: None)
+        self.objective = objective
+        self.evaluator = ProgramEvaluator(
+            objective, family=config.family, nfe=config.nfe,
+            width=config.max_order, chunk=config.chunk,
+            spec_kw=config.spec_kw)
+        self.tau_only = config.family != "sa"
+        # dedup cache, rebuilt from history so resumes never re-spend
+        self.seen: dict[str, float] = {
+            StepProgram.from_json(h["program"]).to_json(): float(h["score"])
+            for h in state["history"]}
+        self.exhausted = False
+
+    def evaluate(self, cands: list[StepProgram]) -> list[tuple]:
+        """(program, score) for every candidate the budget allows; cached
+        duplicates are free. Sets ``exhausted`` when the budget gate
+        closes."""
+        fresh, out = [], []
+        for p in cands:
+            k = p.to_json()
+            if k in self.seen:
+                out.append((p, self.seen[k]))
+            else:
+                fresh.append(p)
+        kept = []
+        for p in fresh:
+            cost = self.evaluator.cost_of(p)
+            if self.state["budget_spent"] + cost > self.config.budget:
+                self.exhausted = True
+                break
+            self.state["budget_spent"] += cost
+            kept.append(p)
+        if kept:
+            scores = self.evaluator.evaluate(kept)
+            best = self.state["best"]
+            for p, s in zip(kept, scores):
+                s = float(s)
+                self.seen[p.to_json()] = s
+                self.state["history"].append({
+                    "program": json.loads(p.to_json()), "score": s,
+                    "nfe": self.evaluator.spec_for(p).nfe})
+                if np.isfinite(s) and (best is None or s < best["score"]):
+                    best = {"program": json.loads(p.to_json()), "score": s}
+            self.state["best"] = best
+            out.extend(zip(kept, [float(s) for s in scores]))
+        return out
+
+    # -------------------------------------------------------------- phases
+    def search_unit(self, warm: StepProgram, rng: np.random.Generator):
+        config = self.config
+        incumbent = _explicit(warm, self.evaluator, self.tau_only)
+        res = self.evaluate([incumbent])
+        if not res:
+            return
+        inc_score = dict((p.to_json(), s) for p, s in res)[incumbent.to_json()]
+
+        for _ in range(config.cd_passes):
+            res = self.evaluate(_neighbors(incumbent, config, self.tau_only))
+            if not res:
+                break
+            p, s = min(res, key=lambda r: r[1])
+            if s < inc_score - 1e-12:
+                incumbent, inc_score = p, s
+                self.log(f"  cd: {s:.5f}")
+            else:
+                break
+
+        M = len(incumbent.tau)
+        mean = np.asarray(incumbent.tau, np.float64)
+        sigma = np.full(M, config.sigma0)
+        tau_hi = max(config.tau_values)
+        for g in range(config.evo_generations):
+            pop = []
+            for _ in range(config.evo_population):
+                taus = np.clip(rng.normal(mean, sigma), 0.0, tau_hi)
+                cand = incumbent.replace(
+                    tau=tuple(round(float(t), 4) for t in taus))
+                if not self.tau_only and rng.random() < 0.3:
+                    i = int(rng.integers(M))
+                    track = list(cand.predictor_order)
+                    track[i] = int(rng.integers(1, config.max_order + 1))
+                    cand = cand.replace(predictor_order=tuple(track))
+                pop.append(cand)
+            res = self.evaluate(pop)
+            if not res:
+                break
+            res.append((incumbent, inc_score))
+            res.sort(key=lambda r: r[1])
+            p, s = res[0]
+            if s < inc_score:
+                incumbent, inc_score = p, s
+                self.log(f"  evo gen {g}: {s:.5f}")
+            elite = np.asarray([list(r[0].tau) for r
+                                in res[:config.evo_elite]], np.float64)
+            mean = elite.mean(axis=0)
+            sigma = np.maximum(elite.std(axis=0), 0.02) * 0.85
+
+
+def run_search(config: SearchConfig | None = None, *,
+               objective: Objective | None = None,
+               state: dict | None = None,
+               artifact: str | None = None, resume: bool = False,
+               max_units: int | None = None,
+               log: Callable[[str], None] | None = None) -> SearchResult:
+    """Run (or resume) a program search.
+
+    Args:
+        config: search configuration; ignored when resuming (the
+            artifact's echoed config wins, so a resume cannot diverge).
+        objective: scoring objective; defaults to :class:`GMMObjective`
+            built from the config's ``n_samples``/``n_seeds``/``n_proj``
+            and ``seed``. A custom objective must be re-passed on resume.
+        state: in-memory state to continue from (alternative to
+            ``artifact`` + ``resume``).
+        artifact: JSON checkpoint path — written at every unit boundary.
+        resume: load ``artifact`` as the starting state if it exists.
+        max_units: stop after this many units this call (the state stays
+            resumable; used to split long searches across invocations).
+        log: optional progress sink (e.g. ``print``).
+    """
+    if resume and artifact and os.path.exists(artifact):
+        state = load_state(artifact)
+    if state is not None:
+        config = SearchConfig.from_obj(state["config"])
+    elif config is None:
+        config = SearchConfig()
+    if state is None:
+        state = _fresh_state(config)
+    if objective is None:
+        objective = GMMObjective(n_samples=config.n_samples,
+                                 n_seeds=config.n_seeds,
+                                 n_proj=config.n_proj, seed=config.seed)
+
+    session = _Session(config, objective, state, log)
+    rng = np.random.default_rng(config.seed)
+    rng.bit_generator.state = state["rng"]
+
+    presets = config.resolved_presets()
+    units_run = 0
+    while state["unit"] < len(presets):
+        if max_units is not None and units_run >= max_units:
+            break
+        name = presets[state["unit"]]
+        warm = program_preset_for_nfe(name, config.nfe, tau=config.tau)
+        if log:
+            log(f"unit {state['unit']} [{name}] "
+                f"(budget {state['budget_spent']}/{config.budget})")
+        session.search_unit(warm, rng)
+        state["unit"] += 1
+        state["rng"] = rng.bit_generator.state
+        units_run += 1
+        if artifact:
+            save_state(artifact, state)
+        if session.exhausted:
+            break
+
+    best_p, best_s = (None, float("inf"))
+    if state["best"]:
+        best_p, best_s = best_program(state)
+    return SearchResult(
+        best_program=best_p, best_score=best_s, state=state,
+        stats=dict(session.evaluator.stats),
+        done=state["unit"] >= len(presets),
+        exhausted=session.exhausted)
+
+
+def spec_from_state(state: dict, **overrides) -> SamplerSpec:
+    """The full serving spec of a search artifact's winner — the exact
+    spec the evaluator scored it under (family, NFE-derived step count,
+    spec_kw), so serving it reproduces the searched samples bitwise."""
+    config = SearchConfig.from_obj(state["config"])
+    prog, _ = best_program(state)
+    kw = dict(config.spec_kw)
+    kw.update(overrides)
+    return SamplerSpec.from_nfe(config.family, config.nfe, program=prog,
+                                **kw)

@@ -106,6 +106,29 @@ def test_cosine_grids_below_default_t_end_still_work():
             assert np.all(np.abs(ts[1:-1] - s.t_end) > 1e-8)
 
 
+def test_cosine_t_start_beyond_span_raises_targeted_error():
+    """Satellite: a custom t_start above the cosine schedule's usable
+    boundary fails at span validation with an error naming the cause
+    (log-alpha saturation) and both fixes — not later as a confusing
+    strictly-decreasing grid violation."""
+    s = VPCosineSchedule()
+    with pytest.raises(ValueError, match="saturates") as ei:
+        timestep_grid(s, 10, kind="logsnr", t_start=0.999)
+    assert "VPCosineSchedule(t_start=...)" in str(ei.value)
+    for kind in ("time", "karras"):  # every grid kind hits the same gate
+        with pytest.raises(ValueError, match="usable"):
+            timestep_grid(s, 10, kind=kind, t_start=0.9999)
+    # at the boundary (and anywhere inside): fine
+    ts = timestep_grid(s, 10, kind="logsnr", t_start=s.t_start)
+    assert len(ts) == 11 and np.all(np.diff(ts) < 0)
+    # the explicit escape hatch works: a wider clip boundary
+    wide = VPCosineSchedule(t_start=0.999)
+    assert len(timestep_grid(wide, 10, kind="logsnr", t_start=0.999)) == 11
+    # unsaturated schedules keep the no-op default
+    assert len(timestep_grid(get_schedule("vp_linear"), 10,
+                             t_start=0.999)) == 11
+
+
 def test_prior_scale_base_is_unit_ve_overrides():
     """Satellite: the dead isinstance(self, VESchedule) branch is gone —
     the base prior is the unit Gaussian, VE's override returns sigma(t)."""

@@ -475,3 +475,181 @@ def test_ddim_eta_tau_one_step_predictor_is_ddim(eta):
         ours = tb.decay[i] * x + tb.pred[i, 0] * x0_hat + tb.noise[i] * xi
         np.testing.assert_allclose(ours, ddim, rtol=1e-9, atol=1e-12,
                                    err_msg=f"interval {i}")
+
+
+# --------------------------- cond fallback: fragmented mode patterns
+def test_fragmented_patterns_collapse_to_cond_statics():
+    """Satellite: above MAX_SCAN_SEGMENTS the mode pattern moves into
+    plan data — statics become ("cond",), so EVERY pathological pattern
+    at a step count shares one executor instead of unrolling one scan
+    per segment."""
+    alt = StepProgram(mode=("PEC", "P") * 3, tau=0.5)        # 6 segments
+    alt2 = StepProgram(mode=("P", "PEC") * 3, tau=0.5)       # 6 segments
+    a = build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=6,
+                               program=alt))
+    b = build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=6,
+                               program=alt2))
+    assert a.statics == b.statics
+    assert a.statics[1] == ("cond",)
+    # a 4-segment pattern stays on the segmented-scan path
+    seg = StepProgram(mode=("PECE",) * 2 + ("PEC",) * 2 + ("P",) * 1
+                      + ("PEC",) * 1, tau=0.5)
+    c = build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=6,
+                               program=seg))
+    assert c.statics[1][0] == "segments"
+
+
+def test_cond_fallback_shares_one_executor_across_patterns():
+    """Two different >MAX_SCAN_SEGMENTS patterns at the same step count:
+    ONE compile-cache miss total (the pattern is table data now)."""
+    samplers.clear_compile_cache()
+    for modes in (("PEC", "P") * 3, ("P", "PEC") * 3,
+                  ("PEC", "P", "PEC", "PECE", "P", "PEC")):
+        _sa(n_steps=6, program=StepProgram(mode=modes, tau=0.5)).sample(
+            MODEL, XT, KEY, model_key="prog-cond")
+    assert samplers.compile_cache_stats()["misses"] == 1
+
+
+def test_cond_fallback_plan_folds_p_steps_and_flags_pece():
+    """The fallback's plan data: P-steps get predictor rows folded into
+    the corrector table (corr_new is already 0 there), and the per-step
+    pece flag array marks exactly the PECE steps."""
+    modes = ("PECE", "P", "PEC", "P", "PEC", "P")
+    plan = build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=6,
+                                  program=StepProgram(mode=modes, tau=0.5)))
+    tables = plan.host["tables"]
+    pece = np.asarray(plan.arrays["pece"])
+    np.testing.assert_array_equal(pece, [m == "PECE" for m in modes])
+    corr = np.asarray(plan.arrays["corr"])
+    for i, m in enumerate(modes):  # plan arrays ship as f32
+        if m == "P":
+            np.testing.assert_array_equal(
+                corr[i], tables.pred[i].astype(np.float32))
+            assert tables.corr_new[i] == 0.0
+        else:
+            np.testing.assert_array_equal(
+                corr[i], tables.corr[i].astype(np.float32))
+    # segmented-path plans don't grow the extra key (pytree stability)
+    seg = build_plan(SamplerSpec(name="sa", schedule=SCHED, n_steps=6,
+                                 program=StepProgram(mode=("PEC",) * 4
+                                                     + ("P",) * 2, tau=0.5)))
+    assert "pece" not in seg.arrays
+
+
+@pytest.mark.parametrize("history", ["ring", "concat"])
+def test_cond_fallback_matches_reference(history):
+    """The single-scan cond executor computes the same solve as the
+    direct per-step reference loop (the correctness anchor for the
+    fallback's folded tables + flag gating)."""
+    modes = ("PECE", "P", "PEC", "P", "PEC", "PECE")
+    s = _sa(n_steps=6, program=StepProgram(mode=modes, tau=0.6),
+            history=history, denoise_final=False)
+    assert s.plan.statics[1] == ("cond",)
+    got = s.sample(MODEL, XT, KEY)
+    ref = _reference_solve(s.plan.host["tables"], list(modes), XT, KEY)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------- satellite: baseline families read tau tracks
+from repro.core.programs import program_tau_track  # noqa: E402
+
+
+def _baseline(name, **kw):
+    return make_sampler(name, schedule=SCHED, **kw)
+
+
+@pytest.mark.parametrize("name,knob", [("ddim", "eta"),
+                                       ("euler_maruyama", "tau")])
+def test_baseline_constant_program_bitwise_scalar_knob(name, knob):
+    """A constant-tau program on a baseline family is bitwise-identical
+    to the scalar knob it generalizes (ddim: eta; euler_maruyama: tau) —
+    the track lands in the same planned arrays."""
+    fixed = _baseline(name, n_steps=8, **{knob: 0.3})
+    prog = _baseline(name, n_steps=8, program=StepProgram(tau=0.3))
+    assert fixed.plan.statics == prog.plan.statics
+    a = fixed.sample(MODEL, XT, KEY)
+    b = prog.sample(MODEL, XT, KEY)
+    assert bool(jnp.all(a == b))
+
+
+def test_ddim_eta_track_interpolates_ancestral_to_ode():
+    """Per-step eta really varies per step: an annealed track differs
+    from both constant endpoints, while an all-zero track IS the ODE
+    (eta=0) sampler bitwise, and an all-one track the ancestral one."""
+    n = 8
+    anneal = _baseline("ddim", n_steps=n, program=program_preset(
+        "tau-anneal", n)).sample(MODEL, XT, KEY)
+    ode = _baseline("ddim", n_steps=n, eta=0.0).sample(MODEL, XT, KEY)
+    anc = _baseline("ddpm_ancestral", n_steps=n).sample(MODEL, XT, KEY)
+    zeros = _baseline("ddim", n_steps=n, program=StepProgram(
+        tau=(0.0,) * n)).sample(MODEL, XT, KEY)
+    ones = _baseline("ddpm_ancestral", n_steps=n, program=StepProgram(
+        tau=(1.0,) * n)).sample(MODEL, XT, KEY)
+    assert bool(jnp.all(zeros == ode))
+    assert bool(jnp.all(ones == anc))
+    assert not bool(jnp.all(anneal == ode))
+    assert not bool(jnp.all(anneal == anc))
+
+
+def test_edm_stochastic_zero_track_is_churnless():
+    """tau_i = 0 turns step i into the deterministic Heun step: the
+    all-zero track equals s_churn=0 bitwise."""
+    kw = dict(n_steps=6, s_churn=10.0)
+    zero_track = _baseline("edm_stochastic", program=StepProgram(
+        tau=(0.0,) * 6), **kw).sample(MODEL, XT, KEY)
+    churnless = _baseline("edm_stochastic", n_steps=6, s_churn=0.0) \
+        .sample(MODEL, XT, KEY)
+    assert bool(jnp.all(zero_track == churnless))
+    # and a nonzero track actually churns
+    churned = _baseline("edm_stochastic", program=StepProgram(
+        tau=(1.0,) * 6), **kw).sample(MODEL, XT, KEY)
+    assert not bool(jnp.all(churned == churnless))
+
+
+def test_baseline_program_sweep_reuses_one_executor():
+    """Tau-track sweeps on a baseline family are plan data: one
+    compile-cache miss across the sweep."""
+    samplers.clear_compile_cache()
+    for tau in (0.0, 0.3, 0.7, 1.0):
+        _baseline("ddim", n_steps=8, program=StepProgram(
+            tau=(tau,) * 8)).sample(MODEL, XT, KEY, model_key="ddim-track")
+    assert samplers.compile_cache_stats()["misses"] == 1
+
+
+def test_explicit_program_dictates_baseline_step_count():
+    """from_nfe honors an explicit-length program (ddim: 1 eval/step,
+    edm_stochastic: 2/step) and rejects overdraw loudly."""
+    spec = SamplerSpec.from_nfe("ddim", 10,
+                                program=StepProgram(tau=(0.5,) * 6))
+    assert spec.n_steps == 6
+    spec = SamplerSpec.from_nfe("edm_stochastic", 12,
+                                program=StepProgram(tau=(0.5,) * 5))
+    assert spec.n_steps == 5
+    with pytest.raises(ValueError, match="budget"):
+        SamplerSpec.from_nfe("edm_stochastic", 8,
+                             program=StepProgram(tau=(0.5,) * 5))
+
+
+@pytest.mark.parametrize("name", ["dpm_solver_pp_2m", "edm_heun"])
+def test_deterministic_families_reject_programs(name):
+    with pytest.raises(ValueError, match="program-capable"):
+        build_plan(SamplerSpec(name=name, schedule=SCHED, n_steps=6,
+                               program=StepProgram(tau=0.5)))
+
+
+def test_program_tau_track_validation():
+    """Baselines read ONLY the tau track: order tracks and non-PEC modes
+    have no meaning there and are rejected, not ignored."""
+    ts = timestep_grid(SCHED, 6, kind="logsnr")
+    with pytest.raises(TypeError):
+        program_tau_track("nope", SCHED, ts, "ddim")
+    with pytest.raises(ValueError, match="order"):
+        program_tau_track(StepProgram(predictor_order=(1, 2, 3, 3, 3, 3)),
+                          SCHED, ts, "ddim")
+    with pytest.raises(ValueError, match="mode"):
+        program_tau_track(StepProgram(mode="PECE"), SCHED, ts, "ddim")
+    track = program_tau_track(program_preset("tau-anneal", 6), SCHED, ts,
+                              "ddim")
+    assert track.shape == (6,)
+    assert track[0] == 1.0 and track[-1] == 0.0
