@@ -1,0 +1,167 @@
+"""Continuous batching vs solve-granular serving on a straggler mix.
+
+    PYTHONPATH=src python benchmarks/bench_continuous.py --smoke
+    PYTHONPATH=src python benchmarks/bench_continuous.py --requests 48
+
+The workload the step scheduler exists for: most requests are "easy"
+(a generous early-exit tolerance retires them a few steps in) while a
+straggler minority runs the full solve. The solve-granular engine pays
+full NFE for every lane and a straggler microbatch blocks the queue; the
+step scheduler recycles every freed lane at the next step boundary and
+keeps stragglers from convoying the easy traffic.
+
+Reports (and asserts under ``--smoke``):
+
+- **scheduler head-to-head** — requests/s and model-evals spent, same
+  request stream through both schedulers; the smoke gate is the PR's
+  acceptance bar (step >= 1.3x solve requests/s),
+- **lane utilization** — per-bucket occupancy and wasted padded-lane
+  steps from ``stats()["buckets"]`` (both schedulers report the same
+  shape of numbers),
+- **churn cache contract** — five drain-and-refill waves with re-planned
+  taus through recycled lanes must add ZERO stepwise-cache misses after
+  the first warmup: the step function is keyed by compiled identity, not
+  by batch membership.
+"""
+
+import argparse
+import time
+
+
+def _args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + assert speedup and cache "
+                    "contract (CI)")
+    ap.add_argument("--arch", default="dit-s")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total requests (5/6 easy, 1/6 stragglers)")
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--lanes", type=int, default=8)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = _args(argv)
+
+    from repro.core import get_schedule
+    from repro.core.samplers import (clear_stepwise_cache, SamplerSpec,
+                                     stepwise_cache_stats)
+    from repro.launch.serve import build_denoiser_model_fn
+    from repro.serve import ServeEngine
+
+    try:
+        from .common import print_table
+    except ImportError:
+        from common import print_table
+
+    # seq keeps the per-eval device work large enough that the measured
+    # ratio reflects model evals saved (early exit + recycling), not
+    # per-tick host dispatch overhead
+    n_req = args.requests or (24 if args.smoke else 48)
+    seq = args.seq or 96
+    n_straggle = max(1, n_req // 6)
+    cfg, model_fn = build_denoiser_model_fn(args.arch, 8, smoke=True)
+    schedule = get_schedule("vp_linear")
+    shape = (seq, cfg.denoiser_latent)
+    model_key = ("bench_continuous", cfg.name)
+    spec = SamplerSpec(name="sa", schedule=schedule, n_steps=10,
+                       mode="PECE", corrector_order=1, tau=0.6)
+
+    def submit_mix(engine):
+        """Interleave stragglers through the easy traffic — worst case
+        for solve-granular convoys, steady state for lane recycling."""
+        for i in range(n_req):
+            if i % (n_req // n_straggle) == 0 and n_straggle > 0:
+                engine.submit(spec, shape)               # full solve
+            else:
+                engine.submit(spec, shape,               # early-exits
+                              early_exit_tol=1e3, min_steps=2)
+        t0 = time.perf_counter()
+        res = engine.run()
+        dt = time.perf_counter() - t0
+        assert len(res) == n_req
+        return dt, res
+
+    # ------------------------------------------------- scheduler head-to-head
+    metrics = {"requests": n_req, "stragglers": n_straggle,
+               "n_steps": spec.n_steps}
+    engines = {
+        "solve": ServeEngine(model_fn, model_key=model_key,
+                             bucket_sizes=(args.lanes,)),
+        "step": ServeEngine(model_fn, model_key=model_key,
+                            scheduler="step", lanes=args.lanes),
+    }
+    best, last = {}, {}
+    for sched, engine in engines.items():
+        submit_mix(engine)                    # cold pass: compiles
+    for _ in range(4):
+        # interleaved warm passes, best-of per scheduler: these passes
+        # are tens of ms, so back-to-back sampling of one scheduler is
+        # hostage to noise bursts on a shared box — alternating spreads
+        # any burst across both sides of the ratio
+        for sched, engine in engines.items():
+            dt, res = submit_mix(engine)
+            best[sched] = min(best.get(sched, dt), dt)
+            last[sched] = res
+    rows = []
+    for sched, engine in engines.items():
+        warm_dt, res = best[sched], last[sched]
+        s = engine.stats()
+        label = f"{spec.name}/{spec.n_steps}step/" \
+                f"{'x'.join(str(d) for d in shape)}/float32"
+        b = s["buckets"][label]
+        steps = sorted({r.n_steps for r in res if r.n_steps is not None})
+        rows.append([sched, n_req / warm_dt, s["model_evals"],
+                     f"{b['occupancy']:.2f}", b["wasted_lane_steps"],
+                     steps or "-"])
+        metrics[f"requests_per_s_{sched}"] = n_req / warm_dt
+        metrics[f"occupancy_{sched}"] = b["occupancy"]
+        metrics[f"wasted_lane_steps_{sched}"] = b["wasted_lane_steps"]
+    print_table(
+        f"scheduler head-to-head ({n_req} requests, {n_straggle} "
+        f"stragglers at full {spec.n_steps} steps, easy lanes exit "
+        f"at ~2; lanes={args.lanes}, arch={cfg.name}, warm pass)",
+        ["scheduler", "req/s", "model-evals", "occupancy", "wasted",
+         "steps-taken"], rows)
+    speedup = metrics["requests_per_s_step"] / \
+        metrics["requests_per_s_solve"]
+    metrics["speedup"] = speedup
+    print(f"\nstep/solve speedup on the straggler mix: {speedup:.2f}x")
+
+    # ---------------------------------------------- churn cache contract
+    clear_stepwise_cache()
+    engine = ServeEngine(model_fn, model_key=model_key, scheduler="step",
+                         lanes=args.lanes)
+    submit_mix(engine)
+    warmed = stepwise_cache_stats()
+    for tau in (0.2, 0.5, 0.8, 1.1, 1.4):
+        for _ in range(args.lanes + 1):  # forces recycling each wave
+            engine.submit(spec.replace(tau=tau), shape,
+                          early_exit_tol=1e3, min_steps=2)
+        engine.run()
+    after = stepwise_cache_stats()
+    new_misses = after["misses"] - warmed["misses"]
+    metrics["churn_cache_misses"] = new_misses
+    print(f"\n### churn cache contract\nafter warmup: {warmed}\n"
+          f"after 5 drain/refill waves (tau re-planned each wave): "
+          f"{after}\nnew misses across churn: {new_misses}")
+
+    if args.smoke:
+        assert new_misses == 0, (
+            f"join/leave churn re-compiled ({new_misses} new stepwise "
+            "misses) — warmup is no longer keyed by the step function")
+        assert speedup >= 1.3, (
+            f"step scheduler {speedup:.2f}x vs solve on the straggler "
+            "mix; acceptance bar is 1.3x")
+        print(f"smoke OK: {speedup:.2f}x >= 1.3x, zero churn misses")
+    return metrics
+
+
+def run():
+    """benchmarks.run entry: smoke scale, speedup + cache asserted."""
+    return main(["--smoke"])
+
+
+if __name__ == "__main__":
+    main()

@@ -93,13 +93,20 @@ def main(argv=None):
         cold = engine.stats()["padded_slots"]
         warm_dt = serve_stream(engine)  # steady state
         s = engine.stats()
+        # per-bucket lane accounting: wasted = padded lanes x their full
+        # solves (stats()["buckets"] — same shape the step scheduler
+        # reports, so pad waste is comparable across schedulers)
+        occ = {lbl: b["occupancy"] for lbl, b in s["buckets"].items()}
+        wasted = sum(b["wasted_lane_steps"] for b in s["buckets"].values())
         rows.append([f"bucket={bucket}", n_req / warm_dt,
                      n_req * nfe / warm_dt, s["padded_slots"] - cold,
+                     f"{min(occ.values()):.2f}", wasted,
                      s["compile_cache"]["misses"]])
     print_table(
         f"bucket sweep ({n_req} requests, NFE={nfe}, arch={cfg.name}, "
         "warm pass)",
-        ["bucket", "req/s", "model-evals/s", "padded", "compiles"], rows)
+        ["bucket", "req/s", "model-evals/s", "padded", "occupancy",
+         "wasted-lane-steps", "compiles"], rows)
 
     # ------------------------------------------------------- mesh sweep
     n_dev = len(jax.devices())

@@ -33,6 +33,8 @@ SECTIONS = [
     ("program_search", "autotuner: budgeted program search vs the hand "
      "preset + search throughput"),
     ("serving", "serve engine: bucket throughput + compile-cache contract"),
+    ("continuous", "continuous batching: step vs solve scheduler on a "
+     "straggler mix + churn cache contract"),
     ("guidance", "denoiser adapter: CFG scale sweep + cache contract"),
 ]
 

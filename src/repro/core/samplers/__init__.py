@@ -37,6 +37,16 @@ from .base import (
 from . import sa as _sa_family  # noqa: F401
 from . import baselines as _baseline_families  # noqa: F401
 from .sa import tables_to_arrays
+from .stepwise import (
+    StepAdapter,
+    StepFns,
+    clear_stepwise_cache,
+    fresh_carry,
+    make_stepfns,
+    stepwise_adapter,
+    stepwise_cache_stats,
+    stepwise_supported,
+)
 
 __all__ = [
     "Denoiser",
@@ -60,4 +70,12 @@ __all__ = [
     "sample_sharded",
     "tables_to_arrays",
     "warmup",
+    "StepAdapter",
+    "StepFns",
+    "clear_stepwise_cache",
+    "fresh_carry",
+    "make_stepfns",
+    "stepwise_adapter",
+    "stepwise_cache_stats",
+    "stepwise_supported",
 ]

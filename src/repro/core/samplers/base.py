@@ -263,6 +263,9 @@ class SamplerFamily:
     #: ("data" -> x0-hat, "noise" -> eps-hat). The denoiser adapter
     #: converts any wrapped network to this convention in-graph.
     model_convention: Callable[[SamplerSpec], str] = _data_convention
+    #: spec -> repro.core.samplers.stepwise.StepAdapter, or None when the
+    #: family has no step-granular executor (whole-solve scan only)
+    stepwise: Callable | None = None
 
 
 _REGISTRY: dict[str, SamplerFamily] = {}

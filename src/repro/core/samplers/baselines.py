@@ -48,6 +48,7 @@ import numpy as np
 from ..programs import StepProgram, program_tau_track
 from .base import (SamplerFamily, SamplerSpec, carry_dtype,
                    register_sampler)
+from .stepwise import StepAdapter
 
 __all__ = ["plan_ddim", "execute_ddim", "plan_dpmpp2m", "execute_dpmpp2m",
            "plan_euler_maruyama", "execute_euler_maruyama",
@@ -396,23 +397,200 @@ def execute_edm_stochastic(statics, c, model_fn, x_T, key, trajectory: bool):
     return ((x.astype(cdt), traj) if trajectory else x.astype(cdt))
 
 
+# -------------------------------------------------- step-granular adapters
+# Same arithmetic as the scan executors above, refactored to one tick per
+# lane for the continuous-batching scheduler. The per-step `lax.cond`s
+# (DPM's first-step dispatch, EDM's final-sigma Euler guard) become
+# `jnp.where` selects: under vmap at per-lane step indices the cond would
+# lower to a select anyway, and the selected VALUE is bit-equal to the
+# taken branch (the discarded branch's NaNs never land). All baselines
+# report err=inf — no free residual, so early exit never fires.
+
+_NO_ERR = jnp.float32(jnp.inf)
+
+
+def _inner_x(cdt):
+    def init_inner(c, x_T):
+        return {"x": x_T.astype(cdt)}
+    return init_inner
+
+
+def _stepwise_ddim(spec: SamplerSpec) -> StepAdapter:
+    cdt = carry_dtype(spec.precision)
+    f32 = jnp.float32
+
+    def step(c, model_fn, inner, ic, init, key):
+        x = inner["x"]
+        a_i, s_i = c["alphas"][ic], c["sigmas"][ic]
+        a_n = c["alphas"][ic + 1]
+        x0 = model_fn(x, c["ts"][ic]).astype(f32)
+        eps = (x.astype(f32) - a_i * x0) / s_i
+        xi = jax.random.normal(key, x.shape, f32)
+        x_next = (a_n * x0 + c["dir_scale"][ic] * eps
+                  + c["sig_hat"][ic] * xi).astype(cdt)
+        return {"x": x_next}, x_next, x0.astype(cdt), _NO_ERR
+
+    return StepAdapter(
+        statics=(spec.precision,), i0=0, evals_per_tick=1,
+        n_steps_of=lambda c: int(c["sig_hat"].shape[0]),
+        init_inner=_inner_x(cdt), step=step,
+        arrays=lambda plan: dict(plan.arrays))
+
+
+def _stepwise_dpmpp2m(spec: SamplerSpec) -> StepAdapter:
+    cdt = carry_dtype(spec.precision)
+    f32 = jnp.float32
+
+    def init_inner(c, x_T):
+        x = x_T.astype(cdt)
+        return {"x": x, "x0": jnp.zeros_like(x)}
+
+    def step(c, model_fn, inner, ic, init, key):
+        x, x0_prev = inner["x"], inner["x0"]
+        x0 = model_fn(x, c["ts"][ic]).astype(f32)
+        a_n, s_n, s_i = (c["alphas"][ic + 1], c["sigmas"][ic + 1],
+                         c["sigmas"][ic])
+        phi = 1.0 - jnp.exp(-c["h"][ic])
+        # h_prev[0] is NaN by construction; the ic==0 select discards it
+        r = c["h_prev"][ic] / c["h"][ic]
+        D = x0 + (x0 - x0_prev.astype(f32)) / (2.0 * r)
+        upd = a_n * phi * jnp.where(ic == 0, x0, D)
+        x_next = ((s_n / s_i) * x.astype(f32) + upd).astype(cdt)
+        return ({"x": x_next, "x0": x0.astype(cdt)}, x_next,
+                x0.astype(cdt), _NO_ERR)
+
+    return StepAdapter(
+        statics=(spec.precision,), i0=0, evals_per_tick=1,
+        n_steps_of=lambda c: int(c["h"].shape[0]),
+        init_inner=init_inner, step=step,
+        arrays=lambda plan: dict(plan.arrays))
+
+
+def _stepwise_euler_maruyama(spec: SamplerSpec) -> StepAdapter:
+    cdt = carry_dtype(spec.precision)
+    f32 = jnp.float32
+
+    def step(c, model_fn, inner, ic, init, key):
+        x = inner["x"]
+        a_i = c["alphas"][ic]
+        x0 = model_fn(x, c["ts"][ic]).astype(f32)
+        xi = jax.random.normal(key, x.shape, f32)
+        xf = x.astype(f32)
+        x_next = (xf + c["drift_x"][ic] * xf
+                  - c["drift_gain"][ic] * (xf - a_i * x0)
+                  + c["noise_amp"][ic] * xi).astype(cdt)
+        return {"x": x_next}, x_next, x0.astype(cdt), _NO_ERR
+
+    return StepAdapter(
+        statics=(spec.precision,), i0=0, evals_per_tick=1,
+        n_steps_of=lambda c: int(c["drift_x"].shape[0]),
+        init_inner=_inner_x(cdt), step=step,
+        arrays=lambda plan: dict(plan.arrays))
+
+
+def _edm_inner(cdt):
+    def init_inner(c, x_T):
+        # the carry lives in the scaled space x~ = x / alpha_t
+        return {"x": (x_T.astype(jnp.float32) / c["alph"][0]).astype(cdt)}
+    return init_inner
+
+
+def _edm_final(c, x_out, ic, cdt):
+    # would-be final if the lane stops after this tick (i_new = ic + 1):
+    # back to data space through alpha at the step's endpoint
+    return (x_out.astype(jnp.float32) * c["alph"][ic + 1]).astype(cdt)
+
+
+def _stepwise_edm_heun(spec: SamplerSpec) -> StepAdapter:
+    cdt = carry_dtype(spec.precision)
+    f32 = jnp.float32
+
+    def step(c, model_fn, inner, ic, init, key):
+        sig, alph, tsj = c["sig"], c["alph"], c["ts"]
+
+        def d(x_t, i):
+            x0 = model_fn((x_t * alph[i]).astype(cdt), tsj[i]).astype(f32)
+            return (x_t - x0) / sig[i]
+
+        x_t = inner["x"].astype(f32)
+        di = d(x_t, ic)
+        dt = sig[ic + 1] - sig[ic]
+        x_e = x_t + dt * di
+        dn = d(x_e, ic + 1)
+        x_next = jnp.where(sig[ic + 1] > 1e-8,
+                           x_t + dt * 0.5 * (di + dn), x_e)
+        x_out = x_next.astype(cdt)
+        x0 = (x_t - sig[ic] * di).astype(cdt)
+        return {"x": x_out}, _edm_final(c, x_out, ic, cdt), x0, _NO_ERR
+
+    return StepAdapter(
+        statics=(spec.precision,), i0=0, evals_per_tick=2,
+        n_steps_of=lambda c: int(c["sig"].shape[0]) - 1,
+        init_inner=_edm_inner(cdt), step=step,
+        arrays=lambda plan: dict(plan.arrays))
+
+
+def _stepwise_edm_stochastic(spec: SamplerSpec) -> StepAdapter:
+    precision, ve = _edm_stochastic_statics(spec)
+    cdt = carry_dtype(precision)
+    f32 = jnp.float32
+
+    def step(c, model_fn, inner, ic, init, key):
+        sig, tsj = c["sig"], c["ts"]
+
+        def _alpha_of_sig(s_val):
+            return jnp.float32(1.0) if ve else 1.0 / jnp.sqrt(1.0 + s_val**2)
+
+        def d(x_t, s_val, t_val):
+            x0 = model_fn((x_t * _alpha_of_sig(s_val)).astype(cdt),
+                          t_val).astype(f32)
+            return (x_t - x0) / s_val
+
+        x_t = inner["x"].astype(f32)
+        s_hat = c["s_hat"][ic]
+        xi = jax.random.normal(key, x_t.shape, f32)
+        x_hat = x_t + c["churn_amp"][ic] * xi
+        di = d(x_hat, s_hat, tsj[ic])
+        dt = sig[ic + 1] - s_hat
+        x_e = x_hat + dt * di
+        dn = d(x_e, sig[ic + 1], tsj[ic + 1])
+        x_next = jnp.where(sig[ic + 1] > 1e-8,
+                           x_hat + dt * 0.5 * (di + dn), x_e)
+        x_out = x_next.astype(cdt)
+        x0 = (x_hat - s_hat * di).astype(cdt)
+        return {"x": x_out}, _edm_final(c, x_out, ic, cdt), x0, _NO_ERR
+
+    return StepAdapter(
+        statics=(precision, ve), i0=0, evals_per_tick=2,
+        n_steps_of=lambda c: int(c["sig"].shape[0]) - 1,
+        init_inner=_edm_inner(cdt), step=step,
+        arrays=lambda plan: dict(plan.arrays))
+
+
 # ------------------------------------------------------------- registration
 def _register_simple(name, plan, execute, steps_from_nfe=_steps_identity,
-                     nfe_per_step=1, statics=lambda spec: (spec.precision,)):
+                     nfe_per_step=1, statics=lambda spec: (spec.precision,),
+                     stepwise=None):
     register_sampler(SamplerFamily(
         name=name, plan=plan, execute=execute, statics=statics,
         nfe_of=lambda spec, _k=nfe_per_step: _k * spec.n_steps,
         steps_from_nfe=steps_from_nfe,
+        stepwise=stepwise,
     ))
 
 
-_register_simple("ddim", plan_ddim, execute_ddim)
-_register_simple("ddpm_ancestral", _plan_ancestral, execute_ddim)
-_register_simple("dpm_solver_pp_2m", plan_dpmpp2m, execute_dpmpp2m)
+_register_simple("ddim", plan_ddim, execute_ddim, stepwise=_stepwise_ddim)
+_register_simple("ddpm_ancestral", _plan_ancestral, execute_ddim,
+                 stepwise=_stepwise_ddim)
+_register_simple("dpm_solver_pp_2m", plan_dpmpp2m, execute_dpmpp2m,
+                 stepwise=_stepwise_dpmpp2m)
 _register_simple("euler_maruyama", plan_euler_maruyama,
-                 execute_euler_maruyama)
+                 execute_euler_maruyama,
+                 stepwise=_stepwise_euler_maruyama)
 _register_simple("edm_heun", plan_edm_heun, execute_edm_heun,
-                 steps_from_nfe=_steps_heun, nfe_per_step=2)
+                 steps_from_nfe=_steps_heun, nfe_per_step=2,
+                 stepwise=_stepwise_edm_heun)
 _register_simple("edm_stochastic", plan_edm_stochastic,
                  execute_edm_stochastic, steps_from_nfe=_steps_heun,
-                 nfe_per_step=2, statics=_edm_stochastic_statics)
+                 nfe_per_step=2, statics=_edm_stochastic_statics,
+                 stepwise=_stepwise_edm_stochastic)

@@ -86,9 +86,11 @@ from ..coefficients import SolverTables, build_tables
 from ..programs import StepProgram
 from .base import (SamplerFamily, SamplerSpec, carry_dtype,
                    register_sampler)
+from .stepwise import StepAdapter
 
 __all__ = ["MAX_SCAN_SEGMENTS", "plan_sa", "execute_sa",
-           "tables_to_arrays", "sa_statics"]
+           "tables_to_arrays", "sa_statics", "sa_stepwise",
+           "sa_stepwise_arrays"]
 
 _COMBINES = ("einsum", "kernel", "fused")
 _HISTORIES = ("ring", "concat")
@@ -213,6 +215,64 @@ def sa_statics(spec: SamplerSpec) -> tuple:
     )
 
 
+# ------------------------------------------------- shared step-body helpers
+# The whole-solve scan executor and the step-granular adapter
+# (``sa_stepwise``) run the SAME per-step arithmetic through these
+# module-level helpers, so their parity is structural: one op sequence,
+# two loop factorings.
+
+def _draw_noise(cdt, step_key, shape):
+    """Drawn in f32 then rounded to the policy dtype: the bf16 policy
+    narrows precision but keeps the SAME noise stream as f32, so
+    precision sweeps stay pointwise comparable (at f32 the cast is an
+    identity — bitwise the seed draw)."""
+    return jax.random.normal(step_key, shape, jnp.float32).astype(cdt)
+
+
+def _combine_rows(combine, cdt, decay_i, x_prev, coeffs, buf, noise_i, xi):
+    """The seed combine over an age-ordered (newest-first) row stack.
+    At f32 every astype below is a dtype identity, so this is
+    bitwise-identical to the seed executor's combine."""
+    f32 = jnp.float32
+    if combine == "kernel":
+        # packed-coefficient convention: [decay, noise, b_0..b_{P-1}]
+        cvec = jnp.concatenate([decay_i[None], noise_i[None], coeffs])
+        return sa_update(x_prev, buf, xi, cvec)
+    # sum_j coeffs[j] * buf[j]  — einsum keeps it a single contraction
+    acc = jnp.einsum("p,p...->...", coeffs, buf.astype(f32))
+    return (decay_i * x_prev.astype(f32) + acc
+            + noise_i * xi.astype(f32)).astype(cdt)
+
+
+def _age_rows(buf, i, P, k=None):
+    """Newest-first history rows: age j lives in slot (i - j) mod P at
+    step i (jnp %, so the index is non-negative)."""
+    return [jax.lax.dynamic_index_in_dim(buf, (i - j) % P, axis=0,
+                                         keepdims=False)
+            for j in range(P if k is None else k)]
+
+
+def _rotated(dev, i, P, *tables_i):
+    """[len(tables_i), P+2] packed-coefficient matrix with the
+    b-columns rotated to ring positions — the data never moves."""
+    pos = (i - jnp.arange(P)) % P
+    c = jnp.zeros((len(tables_i), P + 2), jnp.float32)
+    c = c.at[:, 0].set(dev["decay"][i]).at[:, 1].set(dev["noise"][i])
+    return c.at[:, 2 + pos].set(jnp.stack(tables_i))
+
+
+def _x0_preview(dev, parameterization, cdt, x_eval, e_new, i):
+    if parameterization == "data":
+        return e_new
+    # eps-hat -> x0-hat at t_{i+1}, reconstructed from the state the
+    # eval saw (under PEC+corrector x_next moved away from x_pred;
+    # pairing it with e_new(x_pred) made the streamed preview
+    # inconsistent — amplified by 1/alpha at early steps)
+    f32 = jnp.float32
+    return ((x_eval.astype(f32) - dev["sigmas"][i + 1]
+             * e_new.astype(f32)) / dev["alphas"][i + 1]).astype(cdt)
+
+
 def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
     """Algorithm 1 as one scan per mode segment; see repro.core.solver
     for the step math. Fixed specs and mode-uniform programs are a single
@@ -240,17 +300,8 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
     buffer = jnp.zeros((P,) + x.shape, dtype=cdt).at[0].set(e0)
 
     def combine_rows(decay_i, x_prev, coeffs, buf, noise_i, xi):
-        """The seed combine over an age-ordered (newest-first) row stack.
-        At f32 every astype below is a dtype identity, so this is
-        bitwise-identical to the seed executor's combine."""
-        if combine == "kernel":
-            # packed-coefficient convention: [decay, noise, b_0..b_{P-1}]
-            cvec = jnp.concatenate([decay_i[None], noise_i[None], coeffs])
-            return sa_update(x_prev, buf, xi, cvec)
-        # sum_j coeffs[j] * buf[j]  — einsum keeps it a single contraction
-        acc = jnp.einsum("p,p...->...", coeffs, buf.astype(f32))
-        return (decay_i * x_prev.astype(f32) + acc
-                + noise_i * xi.astype(f32)).astype(cdt)
+        return _combine_rows(combine, cdt, decay_i, x_prev, coeffs, buf,
+                             noise_i, xi)
 
     def re_eval(pece, i, t_next, x_next, e_new, x_eval):
         """The PECE second model evaluation. ``pece`` is a static bool in
@@ -269,21 +320,10 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
         return e_new, x_eval
 
     def x0_preview(x_eval, e_new, i):
-        if parameterization == "data":
-            return e_new
-        # eps-hat -> x0-hat at t_{i+1}, reconstructed from the state the
-        # eval saw (under PEC+corrector x_next moved away from x_pred;
-        # pairing it with e_new(x_pred) made the streamed preview
-        # inconsistent — amplified by 1/alpha at early steps)
-        return ((x_eval.astype(f32) - dev["sigmas"][i + 1]
-                 * e_new.astype(f32)) / dev["alphas"][i + 1]).astype(cdt)
+        return _x0_preview(dev, parameterization, cdt, x_eval, e_new, i)
 
     def draw_noise(step_key, shape):
-        # drawn in f32 then rounded to the policy dtype: the bf16 policy
-        # narrows precision but keeps the SAME noise stream as f32, so
-        # precision sweeps stay pointwise comparable (at f32 the cast is
-        # an identity — bitwise the seed draw)
-        return jax.random.normal(step_key, shape, f32).astype(cdt)
+        return _draw_noise(cdt, step_key, shape)
 
     # ------------------------------------------------------- concat layout
     def make_step_concat(use_corrector, pece):
@@ -319,19 +359,10 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
 
     # --------------------------------------------------------- ring layout
     def age_rows(buf, i, k):
-        """Newest-first history rows: age j lives in slot (i - j) mod P at
-        step i (jnp %, so the index is non-negative)."""
-        return [jax.lax.dynamic_index_in_dim(buf, (i - j) % P, axis=0,
-                                             keepdims=False)
-                for j in range(k)]
+        return _age_rows(buf, i, P, k)
 
     def rotated(i, *tables_i):
-        """[len(tables_i), P+2] packed-coefficient matrix with the
-        b-columns rotated to ring positions — the data never moves."""
-        pos = (i - jnp.arange(P)) % P
-        c = jnp.zeros((len(tables_i), P + 2), f32)
-        c = c.at[:, 0].set(dev["decay"][i]).at[:, 1].set(dev["noise"][i])
-        return c.at[:, 2 + pos].set(jnp.stack(tables_i))
+        return _rotated(dev, i, P, *tables_i)
 
     def make_step_ring(use_corrector, pece):
         def step_ring(carry, per_step):
@@ -444,6 +475,155 @@ def _sa_steps_from_nfe(nfe: int, kw: dict) -> int:
     return max(1, (nfe - 1) // (2 if pece else 1))
 
 
+# --------------------------------------------------- step-granular adapter
+
+def _sa_stepwise_modes(spec: SamplerSpec) -> tuple:
+    """Mode statics for the per-lane step function. Under vmap the step
+    index is per-lane traced data, so ANY multi-segment program collapses
+    to the cond path (the segment boundaries can't be statics when each
+    lane sits at a different step)."""
+    program = _check_program(spec)
+    if program is not None:
+        segs = program.segments(spec.n_steps)
+        if len(segs) > 1:
+            return ("cond",)
+        return (segs[0][0], segs[0][1])
+    use_corrector = spec.corrector_order > 0
+    return (use_corrector, spec.mode == "PECE" and use_corrector)
+
+
+def sa_stepwise_arrays(plan) -> dict:
+    spec = plan.spec
+    modes = _sa_stepwise_modes(spec)
+    dev = dict(plan.arrays)
+    if modes[0] != "cond":
+        return dev
+    tables = plan.host["tables"]
+    p_only = tables.c_orders == 0
+    if "pece" not in dev:
+        # <=MAX_SCAN_SEGMENTS program: plan_sa kept the segment-scan
+        # tables, so apply the same P-step fold the cond fallback uses
+        # (corr := pred where the corrector order is 0; corr_new is
+        # already 0 there, so the corrector combine reproduces x_pred)
+        corr = np.array(tables.corr)
+        corr[p_only] = tables.pred[p_only]
+        dev["corr"] = jnp.asarray(corr, jnp.float32)
+        dev["pece"] = jnp.asarray(
+            [p for (_, p) in spec.program.mode_flags(spec.n_steps)],
+            jnp.bool_)
+    # folded P-only steps report a spuriously-zero PECE residual (the
+    # corrector combine IS the predictor there) — mask them out of the
+    # early-exit signal
+    dev["ee_ok"] = jnp.asarray(~p_only, jnp.bool_)
+    return dev
+
+
+def sa_stepwise(spec: SamplerSpec) -> StepAdapter:
+    """Per-lane single-step SA: the executor above refactored from "scan
+    over steps, one solve" to "one tick, vmapped over lanes at per-lane
+    step indices". The init model eval (seed row e0) is folded in-band:
+    a lane at i=-1 runs an init tick that evaluates the model at
+    (x_T, ts[0]) via selects that are bit-transparent on real steps, so
+    the compiled shape never changes when lanes join mid-flight."""
+    base = sa_statics(spec)
+    (parameterization, _, combine, denoise, ring, precision) = base
+    if not ring:
+        raise ValueError(
+            "step-granular SA needs history='ring' (the concat layout "
+            "re-materializes the buffer per step and exists only as the "
+            "seed regression baseline)")
+    modes = _sa_stepwise_modes(spec)
+    use_corrector = True if modes[0] == "cond" else modes[0]
+    pece = "cond" if modes[0] == "cond" else modes[1]
+    cdt = carry_dtype(precision)
+    f32 = jnp.float32
+
+    def init_inner(dev, x_T):
+        P = dev["pred"].shape[1]
+        x = x_T.astype(cdt)
+        return {"x": x, "buf": jnp.zeros((P,) + x.shape, cdt)}
+
+    def step(dev, model_fn, inner, ic, init, key):
+        x, buf = inner["x"], inner["buf"]
+        P = buf.shape[0]
+        xi = _draw_noise(cdt, key, x.shape)
+        decay_i = dev["decay"][ic]
+        noise_i = dev["noise"][ic]
+        t_next = dev["ts"][ic + 1]
+        rows = None
+        if combine == "fused":
+            if use_corrector:
+                x_pred, corr_base = ops.sa_fused_update(
+                    x, buf, xi,
+                    _rotated(dev, ic, P, dev["pred"][ic], dev["corr"][ic]))
+            else:
+                x_pred = ops.sa_update(
+                    x, buf, xi, _rotated(dev, ic, P, dev["pred"][ic])[0])
+        else:
+            rows = _age_rows(buf, ic, P)
+            x_pred = _combine_rows(combine, cdt, decay_i, x,
+                                   dev["pred"][ic], jnp.stack(rows),
+                                   noise_i, xi)
+        # init tick: evaluate at (x_T, ts[0]) instead — on real steps
+        # both selects pick the step-i operand bit-for-bit
+        x_in = jnp.where(init, x, x_pred)
+        t_in = jnp.where(init, dev["ts"][0], t_next)
+        e_new = model_fn(x_in, t_in).astype(cdt)
+        x_eval = x_in
+        if use_corrector:
+            if combine == "fused":
+                x_next = (corr_base.astype(f32) + dev["corr_new"][ic]
+                          * e_new.astype(f32)).astype(cdt)
+            else:
+                coeffs = jnp.concatenate([dev["corr_new"][ic][None],
+                                          dev["corr"][ic]])
+                x_next = _combine_rows(combine, cdt, decay_i, x, coeffs,
+                                       jnp.stack([e_new] + rows),
+                                       noise_i, xi)
+            # predictor-vs-corrector residual — free under PEC+corrector,
+            # computed BEFORE any PECE re-eval (relative RMS)
+            diff = x_next.astype(f32) - x_pred.astype(f32)
+            err = jnp.sqrt(jnp.mean(diff * diff)) / (
+                jnp.sqrt(jnp.mean(x_next.astype(f32) ** 2)) + 1e-8)
+            if pece == "cond":
+                # per-lane step index -> per-lane predicate: under vmap a
+                # lax.cond lowers to select anyway, so write the select
+                # directly (2 evals/tick, reflected in evals_per_tick)
+                e2 = model_fn(x_next, t_next).astype(cdt)
+                hit = dev["pece"][ic] & ~init
+                e_new = jnp.where(hit, e2, e_new)
+                x_eval = jnp.where(hit, x_next, x_eval)
+                err = jnp.where(dev["ee_ok"][ic], err, jnp.inf)
+            elif pece:
+                e2 = model_fn(x_next, t_next).astype(cdt)
+                e_new = jnp.where(init, e_new, e2)
+                x_eval = jnp.where(init, x_eval, x_next)
+        else:
+            x_next = x_pred
+            err = jnp.float32(jnp.inf)
+        # the ONE history write; the init eval is the seed row in slot 0
+        slot = jnp.where(init, 0, (ic + 1) % P)
+        buf = jax.lax.dynamic_update_index_in_dim(buf, e_new, slot, axis=0)
+        x_out = jnp.where(init, x, x_next)
+        # denoise-final: the newest eval is this tick's e_new, so an
+        # early-exiting lane's result is already in hand
+        final = e_new if denoise else x_out
+        x0 = _x0_preview(dev, parameterization, cdt, x_eval, e_new, ic)
+        return {"x": x_out, "buf": buf}, final, x0, err
+
+    return StepAdapter(
+        statics=(parameterization, modes, combine, denoise, precision),
+        i0=-1,
+        evals_per_tick=2 if pece else 1,
+        n_steps_of=lambda dev: int(dev["decay"].shape[0]),
+        init_inner=init_inner,
+        step=step,
+        arrays=sa_stepwise_arrays,
+        shape_key=lambda plan: (int(plan.arrays["pred"].shape[1]),
+                                "alphas" in plan.arrays),
+    )
+
+
 register_sampler(SamplerFamily(
     name="sa",
     plan=plan_sa,
@@ -454,4 +634,5 @@ register_sampler(SamplerFamily(
     # the executor consumes whatever spec.parameterization names — the
     # denoiser adapter converts any wrapped network to it in-graph
     model_convention=lambda spec: spec.parameterization,
+    stepwise=sa_stepwise,
 ))

@@ -14,6 +14,12 @@
     PYTHONPATH=src python -m repro.launch.serve --mode diffusion \
         --arch dit-s --prediction v --guidance-scale 3.0 --requests 8
 
+    # ... with step-granular continuous batching — requests join and
+    # leave running lane groups at step boundaries, and a masked early
+    # exit retires converged lanes under the fixed compiled shape:
+    PYTHONPATH=src python -m repro.launch.serve --mode diffusion \
+        --scheduler step --lanes 8 --early-exit-tol 0.02 --requests 12
+
     # ... by quality tier — draft/standard/best resolve to step programs
     # at submit time; --tuned-artifact loads an autotuner winner
     # (python -m repro.launch.tune) as the "best" tier:
@@ -174,7 +180,7 @@ def serve_diffusion(args) -> None:
         model_fn, bucket_sizes=tuple(args.bucket_sizes), mesh=mesh,
         stream=args.stream, on_result=show if args.stream else None,
         model_key=("denoiser", cfg.name, args.prediction, guidance),
-        tiers=tiers)
+        tiers=tiers, scheduler=args.scheduler, lanes=args.lanes)
     if args.quality_tier is not None:
         spec, submit_kw = None, {"quality_tier": args.quality_tier}
     else:
@@ -188,7 +194,7 @@ def serve_diffusion(args) -> None:
     g_scale = 1.0 if args.guidance_scale is None else args.guidance_scale
     for _ in range(args.requests):
         engine.submit(spec, shape, cond=cond, guidance_scale=g_scale,
-                      **submit_kw)
+                      early_exit_tol=args.early_exit_tol, **submit_kw)
     if spec is None:
         spec = engine.tiers.resolve(args.quality_tier)
         print(f"quality tier {args.quality_tier!r} -> "
@@ -198,20 +204,39 @@ def serve_diffusion(args) -> None:
     results = engine.run()
     assert len(results) == args.requests
     for res in results:
-        assert bool(jnp.all(jnp.isfinite(res.x0)))
+        if getattr(res, "status", "ok") == "ok":
+            assert bool(jnp.all(jnp.isfinite(res.x0)))
     s = engine.stats()
     mesh_desc = "none" if mesh is None else dict(mesh.shape)
-    print(f"\nserved {s['requests']} requests in {s['serve_s']:.2f}s over "
-          f"{s['microbatches']} microbatches ({s['padded_slots']} padded "
-          f"lanes, {s['warmups']} bucket compiles, mesh={mesh_desc})")
-    print(f"{s['requests_per_s']:.2f} requests/s, "
-          f"{s['model_evals_per_s']:.1f} model-evals/s, "
-          f"{s['network_evals_per_s']:.1f} network-evals/s "
-          f"(NFE={spec.nfe}, network NFE={spec.network_nfe} x real "
-          f"requests only; sampler={args.sampler}, arch={cfg.name}, "
-          f"prediction={args.prediction}, "
-          f"guidance={args.guidance_scale if guidance else 'off'})")
-    print("compile cache:", s["compile_cache"])
+    if args.scheduler == "step":
+        print(f"\nserved {s['completed']} requests in {s['serve_s']:.2f}s "
+              f"({s['joins']} lane joins, {s['migrations']} migrations, "
+              f"{s['shed']} shed, {s['ticks']} ticks, "
+              f"{s['warmups']} step-fn compiles)")
+        print(f"{s['requests_per_s']:.2f} requests/s, "
+              f"{s['model_evals_per_s']:.1f} model-evals/s "
+              f"(sampler={args.sampler}, arch={cfg.name}, "
+              f"prediction={args.prediction}, "
+              f"guidance={args.guidance_scale if guidance else 'off'}, "
+              f"early_exit_tol={args.early_exit_tol})")
+        for label, b in s["buckets"].items():
+            print(f"  bucket {label}: occupancy {b['occupancy']:.2f} "
+                  f"({b['wasted_lane_steps']} wasted lane-steps over "
+                  f"{b['ticks']} ticks)")
+        print("stepwise cache:", s["stepwise_cache"])
+    else:
+        print(f"\nserved {s['requests']} requests in {s['serve_s']:.2f}s "
+              f"over {s['microbatches']} microbatches ({s['padded_slots']} "
+              f"padded lanes, {s['warmups']} bucket compiles, "
+              f"mesh={mesh_desc})")
+        print(f"{s['requests_per_s']:.2f} requests/s, "
+              f"{s['model_evals_per_s']:.1f} model-evals/s, "
+              f"{s['network_evals_per_s']:.1f} network-evals/s "
+              f"(NFE={spec.nfe}, network NFE={spec.network_nfe} x real "
+              f"requests only; sampler={args.sampler}, arch={cfg.name}, "
+              f"prediction={args.prediction}, "
+              f"guidance={args.guidance_scale if guidance else 'off'})")
+        print("compile cache:", s["compile_cache"])
 
 
 def main():
@@ -237,6 +262,17 @@ def main():
                     help="comma-separated microbatch lane counts")
     ap.add_argument("--stream", action="store_true",
                     help="stream per-step denoised previews")
+    ap.add_argument("--scheduler", default="solve",
+                    choices=["solve", "step"],
+                    help="'solve' batches whole solves per microbatch; "
+                    "'step' is the continuous batcher — requests join and "
+                    "leave running batches at step boundaries")
+    ap.add_argument("--lanes", type=int, default=8,
+                    help="lane count per running batch (step scheduler)")
+    ap.add_argument("--early-exit-tol", type=float, default=0.0,
+                    help="masked early exit on the predictor-vs-corrector "
+                    "residual (step scheduler; <=0 disables, keeping the "
+                    "exact whole-solve trajectory)")
     ap.add_argument("--sharded", action="store_true",
                     help="place the request axis on a mesh data axis")
     ap.add_argument("--prediction", default="data",

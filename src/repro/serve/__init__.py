@@ -71,17 +71,21 @@ Drivers: ``python -m repro.launch.serve --mode diffusion`` (full CLI),
 from .batching import (MicroBatch, PAD_RID, Request, bucket_key,
                        choose_bucket, cond_struct, fold_keys,
                        form_microbatches)
+from .continuous import ContinuousBatcher, RunningBatch, bucket_label
 from .engine import ServeEngine, ServeResult
 from .sharding import align_bucket_sizes, auto_mesh, data_axis_size
 from .tiers import QualityTiers, default_tiers
 
 __all__ = [
+    "ContinuousBatcher",
     "MicroBatch",
     "PAD_RID",
     "QualityTiers",
     "Request",
+    "RunningBatch",
     "ServeEngine",
     "ServeResult",
+    "bucket_label",
     "align_bucket_sizes",
     "auto_mesh",
     "bucket_key",

@@ -74,6 +74,22 @@ class Request:
     dtype: str = "float32"
     cond: Any = None
     guidance_scale: float = 1.0
+    # -- scheduling metadata (step-granular scheduler; NOT in the bucket
+    # key — none of it is trace-relevant, so it can never split a bucket
+    # or recompile) --
+    #: higher runs first (ties broken by deadline, then arrival)
+    priority: int = 0
+    #: absolute ``time.monotonic()`` deadline; pending requests past it
+    #: are shed with ``status="shed"`` instead of joining a batch
+    deadline: float | None = None
+    #: masked early-exit tolerance on the per-step predictor-vs-corrector
+    #: residual; <= 0 disables (the disabled path is the solver's exact
+    #: whole-solve trajectory)
+    early_exit_tol: float = 0.0
+    #: steps a lane must complete before early exit may fire; None
+    #: defaults to the spec's solver order (the multistep warm-up, where
+    #: the residual is not yet meaningful)
+    min_steps: int | None = None
 
 
 def bucket_key(req: Request) -> tuple:

@@ -55,6 +55,7 @@ from ..core.denoiser import Denoiser
 from ..core.samplers import (SamplerSpec, build_plan, compile_cache_stats,
                              sample_batched, sample_sharded, warmup)
 from .batching import MicroBatch, Request, fold_keys, form_microbatches
+from .continuous import ContinuousBatcher, bucket_label
 from .sharding import align_bucket_sizes, data_axis_size
 from .tiers import QualityTiers, default_tiers
 
@@ -66,9 +67,17 @@ class ServeResult:
     """One served request: final latent plus optional streamed previews."""
 
     rid: int
-    x0: jnp.ndarray
-    #: ``[n_steps, *shape]`` per-step denoised previews (stream=True only)
+    x0: jnp.ndarray | None
+    #: ``[n_steps, *shape]`` per-step denoised previews (stream=True
+    #: only), in per-request step order — under the step scheduler an
+    #: early-exited lane carries fewer rows than the full solve
     previews: jnp.ndarray | None = None
+    #: "ok" | "shed" (deadline expired before the request got a lane;
+    #: step scheduler only — x0 is None then)
+    status: str = "ok"
+    #: solver steps actually run (step scheduler; None under "solve",
+    #: where every request runs its spec's full step count)
+    n_steps: int | None = None
 
 
 class ServeEngine:
@@ -108,9 +117,20 @@ class ServeEngine:
                  model_key: Hashable | None = None,
                  noise_seed: int = 7, solve_seed: int = 8,
                  donate: bool | None = None,
-                 tiers: QualityTiers | None = None):
+                 tiers: QualityTiers | None = None,
+                 scheduler: str = "solve", lanes: int = 8,
+                 max_pending: int | None = None):
         if not bucket_sizes:
             raise ValueError("need at least one bucket size")
+        if scheduler not in ("solve", "step"):
+            raise ValueError(
+                f"scheduler={scheduler!r}; expected 'solve' "
+                "(whole-solve microbatches) or 'step' (continuous "
+                "batching at solver-step granularity)")
+        if scheduler == "step" and mesh is not None:
+            raise ValueError(
+                "the step scheduler is single-device (one vmapped carry "
+                "per running batch); use scheduler='solve' with a mesh")
         self.model_fn = model_fn
         self.mesh = mesh
         self.data_axis = data_axis
@@ -123,6 +143,8 @@ class ServeEngine:
         self.model_key = model_key
         self.donate = donate
         self.tiers = tiers if tiers is not None else default_tiers()
+        self.scheduler = scheduler
+        self.max_pending = max_pending
         self._noise_base = jax.random.PRNGKey(noise_seed)
         self._solve_base = jax.random.PRNGKey(solve_seed)
         self._queue: list[Request] = []
@@ -133,12 +155,24 @@ class ServeEngine:
             "model_evals": 0, "network_evals": 0, "warmups": 0,
             "serve_s": 0.0,
         }
+        self._buckets: dict[str, dict] = {}
+        self._batcher = None
+        if scheduler == "step":
+            self._batcher = ContinuousBatcher(
+                model_fn, lanes=lanes, stream=stream,
+                on_result=on_result, model_key=model_key,
+                noise_seed=noise_seed, solve_seed=solve_seed,
+                max_pending=max_pending,
+                result_factory=ServeResult)
 
     # ------------------------------------------------------------- intake
     def submit(self, spec: SamplerSpec | None, shape: Sequence[int],
                dtype="float32", rid: int | None = None, *,
                cond=None, guidance_scale: float = 1.0,
-               quality_tier: str | None = None) -> int:
+               quality_tier: str | None = None,
+               priority: int = 0, deadline: float | None = None,
+               early_exit_tol: float = 0.0,
+               min_steps: int | None = None) -> int:
         """Enqueue one request; returns its rid (for RNG identity and
         result matching). An explicit ``rid`` makes a request replayable
         — the same rid always produces the same sample. ``cond`` is the
@@ -149,7 +183,17 @@ class ServeEngine:
         "standard" | "best" with default tiers) with ``spec=None`` to let
         the engine's tier map pick the spec — resolution happens here, so
         tier requests bucket (and sample) exactly like explicit-spec
-        requests."""
+        requests.
+
+        Scheduling knobs (honored by ``scheduler="step"``; the solve
+        scheduler serves FIFO at full NFE and ignores them):
+        ``priority`` (higher first), ``deadline`` (absolute
+        ``time.monotonic()``; expired pending work is shed with
+        ``status="shed"``), ``early_exit_tol`` (masked per-lane early
+        exit on the predictor-vs-corrector residual; <= 0 disables —
+        the disabled path is bitwise the solo solve), ``min_steps``
+        (completed steps before an exit may fire; defaults to the spec's
+        solver order)."""
         if quality_tier is not None:
             if spec is not None:
                 raise ValueError(
@@ -171,13 +215,27 @@ class ServeEngine:
                 "Denoiser engine model — it would be silently dropped")
         if cond is not None:
             cond = jax.tree.map(jnp.asarray, cond)
-        self._queue.append(Request(
+        req = Request(
             rid=rid, spec=spec, shape=tuple(int(s) for s in shape),
             dtype=jnp.dtype(dtype).name, cond=cond,
-            guidance_scale=float(guidance_scale)))
+            guidance_scale=float(guidance_scale),
+            priority=int(priority), deadline=deadline,
+            early_exit_tol=float(early_exit_tol), min_steps=min_steps)
+        if self._batcher is not None:
+            self._batcher.enqueue(req)  # admission control lives there
+            return rid
+        if self.max_pending is not None and \
+                len(self._queue) >= self.max_pending:
+            raise RuntimeError(
+                f"admission control: {len(self._queue)} requests pending "
+                f">= max_pending={self.max_pending}; drain with "
+                "step()/run() or shed load upstream")
+        self._queue.append(req)
         return rid
 
     def pending(self) -> int:
+        if self._batcher is not None:
+            return self._batcher.pending()
         return len(self._queue)
 
     # ------------------------------------------------------------ serving
@@ -201,7 +259,14 @@ class ServeEngine:
         self._stats["warmups"] += 1
 
     def step(self) -> list[ServeResult]:
-        """Serve one microbatch (oldest bucket first); [] when idle."""
+        """Serve one scheduling unit; [] when idle (or mid-solve).
+
+        Under ``scheduler="solve"`` that is one whole microbatch (oldest
+        bucket first); under ``"step"`` it is ONE solver step of one
+        running batch — joins, leaves, and merges happen between calls.
+        """
+        if self._batcher is not None:
+            return self._batcher.tick()
         if not self._queue:
             return []
         mb = form_microbatches(self._queue, self.bucket_sizes)[0]
@@ -210,13 +275,16 @@ class ServeEngine:
         return self._serve(mb)
 
     def run(self) -> list[ServeResult]:
-        """Drain the queue; results in service order.
+        """Drain the queue; results in service order (completion order
+        under the step scheduler).
 
-        Microbatches are formed once per drain pass (linear in queue
-        length, unlike repeated ``step()`` which regroups the remaining
-        queue each call); requests submitted from ``on_result`` callbacks
-        are picked up by the next pass.
+        Under the solve scheduler, microbatches are formed once per drain
+        pass (linear in queue length, unlike repeated ``step()`` which
+        regroups the remaining queue each call); requests submitted from
+        ``on_result`` callbacks are picked up by the next pass.
         """
+        if self._batcher is not None:
+            return self._batcher.run()
         out: list[ServeResult] = []
         while self._queue:
             batches = form_microbatches(self._queue, self.bucket_sizes)
@@ -267,6 +335,17 @@ class ServeEngine:
         self._stats["padded_slots"] += mb.n_padded
         self._stats["model_evals"] += spec.nfe * n_real
         self._stats["network_evals"] += spec.network_nfe * n_real
+        # per-bucket lane-step accounting, same shape of numbers as the
+        # step scheduler: here every lane rides the full solve, so a
+        # padded lane wastes n_steps lane-steps in one indivisible chunk
+        label = bucket_label(mb.key)
+        bs = self._buckets.setdefault(label, {
+            "ticks": 0, "lane_steps": 0, "active_lane_steps": 0,
+            "wasted_lane_steps": 0})
+        bs["ticks"] += spec.n_steps
+        bs["lane_steps"] += mb.size * spec.n_steps
+        bs["active_lane_steps"] += n_real * spec.n_steps
+        bs["wasted_lane_steps"] += mb.n_padded * spec.n_steps
 
         results = []
         for lane, req in enumerate(mb.requests):  # pad lanes dropped here
@@ -286,12 +365,31 @@ class ServeEngine:
         ``network_evals`` raw network forwards — 2x under classifier-free
         guidance — for real requests only (``spec.nfe`` /
         ``spec.network_nfe`` each); padded lanes show up in
-        ``padded_slots``, never in throughput.
+        ``padded_slots``, never in throughput. ``buckets`` breaks lane
+        occupancy down per bucket: ``lane_steps`` (compute spent),
+        ``active_lane_steps`` (compute that served a request),
+        ``wasted_lane_steps`` (padded / free lanes that computed anyway),
+        and their ratio ``occupancy`` — the same accounting the step
+        scheduler reports, so the two schedulers compare directly.
+        Under ``scheduler="step"`` the counters come from the
+        continuous batcher (``completed``, ``shed``, ``joins``,
+        ``migrations``, ``ticks``, per-tick-exact ``model_evals``).
         """
+        if self._batcher is not None:
+            s = self._batcher.stats()
+            s["compile_cache"] = compile_cache_stats()
+            return s
         s = dict(self._stats)
         dt = s["serve_s"]
         s["requests_per_s"] = s["requests"] / dt if dt > 0 else 0.0
         s["model_evals_per_s"] = s["model_evals"] / dt if dt > 0 else 0.0
         s["network_evals_per_s"] = s["network_evals"] / dt if dt > 0 else 0.0
+        buckets = {}
+        for label, b in self._buckets.items():
+            b = dict(b)
+            b["occupancy"] = (b["active_lane_steps"] / b["lane_steps"]
+                              if b["lane_steps"] else 0.0)
+            buckets[label] = b
+        s["buckets"] = buckets
         s["compile_cache"] = compile_cache_stats()
         return s

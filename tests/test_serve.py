@@ -262,3 +262,186 @@ assert e2.stats()["padded_slots"] == 3
 print("OK")
 """)
     assert "OK" in out
+
+
+# ----------------------------------------- step-granular continuous batching
+# A fusion-stable model isolates the scheduler's numerics: the bitwise
+# contract below is about join/leave/recycling/migration adding NOTHING,
+# not about XLA fusing an arbitrary model identically across programs
+# (tests/test_stepwise.py pins that caveat).
+def STABLE(x, t):
+    return 0.3 * x * jnp.cos(t)
+
+
+SPEC_A = SamplerSpec(name="sa", schedule=SCHED, n_steps=8, mode="PECE",
+                     tau=0.7)
+SPEC_B = SamplerSpec(name="sa", schedule=SCHED, n_steps=6, tau=0.4)
+
+
+def step_engine(**kw):
+    kw.setdefault("scheduler", "step")
+    kw.setdefault("lanes", 4)
+    return ServeEngine(STABLE, **kw)
+
+
+def test_step_scheduler_bitwise_vs_solve_through_churn():
+    """Acceptance: a request served through join/leave/lane-recycling
+    continuous batching (early exit disabled) returns exactly the bytes
+    the solve-granular engine returns for the same rid — across two
+    interleaved buckets, with lane recycling (5 same-key requests over 4
+    lanes)."""
+    solve = ServeEngine(STABLE, bucket_sizes=(1, 2, 4))
+    rids, specs = [], {}
+    for i in range(5):
+        r = solve.submit(SPEC_A, (16, 2)); rids.append(r); specs[r] = SPEC_A
+    for i in range(3):
+        r = solve.submit(SPEC_B, (16, 2)); rids.append(r); specs[r] = SPEC_B
+    ref = {res.rid: np.asarray(res.x0) for res in solve.run()}
+
+    eng = step_engine()
+    for r in rids:
+        eng.submit(specs[r], (16, 2), rid=r)
+    out = {res.rid: res for res in eng.run()}
+    assert set(out) == set(ref)
+    for r in rids:
+        assert out[r].status == "ok"
+        assert out[r].n_steps == specs[r].n_steps  # no early exit
+        assert (np.asarray(out[r].x0) == ref[r]).all(), f"rid {r}"
+    s = eng.stats()
+    assert s["completed"] == 8 and s["joins"] == 8
+
+
+def test_step_scheduler_migration_is_bitwise_invisible():
+    """Force a merge: rid 0 early-exits out of the full first batch, so
+    the lone-request second batch folds into the freed lane — and the
+    migrated request's bytes must not move."""
+    solve = ServeEngine(STABLE, bucket_sizes=(1, 2, 4))
+    for r in range(4):
+        solve.submit(SPEC_A, (16, 2), rid=r)
+    ref = {res.rid: np.asarray(res.x0) for res in solve.run()}
+
+    eng = step_engine(lanes=3)  # rids 0-2 fill batch 1, rid 3 opens 2
+    eng.submit(SPEC_A, (16, 2), rid=0, early_exit_tol=1e3, min_steps=2)
+    for r in (1, 2, 3):
+        eng.submit(SPEC_A, (16, 2), rid=r)
+    out = {res.rid: res for res in eng.run()}
+    assert eng.stats()["migrations"] >= 1
+    assert out[0].n_steps == 2  # the exit that freed the lane
+    for r in (1, 2, 3):  # rid 3 is the migrated one
+        assert out[r].n_steps == SPEC_A.n_steps
+        assert (np.asarray(out[r].x0) == ref[r]).all(), f"rid {r}"
+
+
+def test_step_scheduler_early_exit_and_solo_replay():
+    """Early exit shortens a lane without touching its neighbours: the
+    tol=0 lanes in the same churning batch still match their solo
+    solves bitwise."""
+    eng = step_engine(lanes=4)
+    eng.submit(SPEC_A, (16, 2), rid=0)
+    eng.submit(SPEC_A, (16, 2), rid=1, early_exit_tol=1e3, min_steps=2)
+    eng.submit(SPEC_A, (16, 2), rid=2)
+    out = {res.rid: res for res in eng.run()}
+    assert out[1].n_steps == 2 < SPEC_A.n_steps
+    assert out[0].n_steps == out[2].n_steps == SPEC_A.n_steps
+    solo = {r: ServeEngine(STABLE, bucket_sizes=(1,)) for r in (0, 2)}
+    for r, e in solo.items():
+        e.submit(SPEC_A, (16, 2), rid=r)
+        ref = np.asarray(e.run()[0].x0)
+        assert (np.asarray(out[r].x0) == ref).all(), f"rid {r}"
+
+
+def test_step_scheduler_stream_preview_order():
+    """Regression: per-step x0 previews arrive in per-request step order
+    even when two buckets interleave tick-by-tick, and completion
+    callbacks fire in completion order."""
+    seen = []
+    eng = step_engine(stream=True, lanes=2,
+                      on_result=lambda res: seen.append(res.rid))
+    for r in (0, 1):
+        eng.submit(SPEC_A, (16, 2), rid=r)
+    for r in (2, 3):
+        eng.submit(SPEC_B, (16, 2), rid=r)
+    out = {res.rid: res for res in eng.run()}
+    # B finishes first (6 steps vs 8) despite arriving second
+    assert seen == [2, 3, 0, 1]
+    for r, spec in ((0, SPEC_A), (1, SPEC_A), (2, SPEC_B), (3, SPEC_B)):
+        pv = out[r].previews
+        assert pv.shape == (spec.n_steps, 16, 2)
+        assert bool(jnp.all(jnp.isfinite(pv)))
+        # previews are the per-step denoised trajectory of THIS request:
+        # its solo-served stream must match byte for byte and in order
+        solo = ServeEngine(STABLE, bucket_sizes=(1,), stream=True)
+        solo.submit(spec, (16, 2), rid=r)
+        assert (np.asarray(solo.run()[0].previews) == np.asarray(pv)).all()
+
+
+def test_step_scheduler_zero_misses_across_churn():
+    """Acceptance: AOT warmup is keyed by the compiled step function, so
+    a join/leave churn sweep — staggered submits draining into recycled
+    lanes, tau resweeps, batch retire + re-open — compiles nothing after
+    the first warmup per step key."""
+    from repro.core.samplers import (clear_stepwise_cache,
+                                     stepwise_cache_stats)
+    clear_stepwise_cache()
+    eng = step_engine(lanes=2)
+    for r in range(3):
+        eng.submit(SPEC_A, (16, 2), rid=r)
+    eng.run()
+    base = stepwise_cache_stats()
+    assert base["misses"] == 1 and eng.stats()["warmups"] == 1
+    # churn: drain-and-refill five waves, tau changed per wave (table
+    # data), including a wave after the engine went fully idle
+    rid = 10
+    for wave, tau in enumerate((0.7, 0.2, 0.9, 0.5, 1.1)):
+        for _ in range(3):
+            eng.submit(SPEC_A.replace(tau=tau), (16, 2), rid=rid)
+            rid += 1
+        eng.run()
+    after = stepwise_cache_stats()
+    assert after["misses"] == base["misses"], "churn sweep recompiled"
+    assert eng.stats()["warmups"] == 1
+
+
+def test_step_scheduler_priority_deadline_and_admission():
+    eng = step_engine(lanes=2, max_pending=3)
+    eng.submit(SPEC_A, (16, 2), rid=0, priority=0)
+    eng.submit(SPEC_A, (16, 2), rid=1, priority=5)
+    eng.submit(SPEC_A, (16, 2), rid=2, priority=0,
+               deadline=0.0)  # monotonic 0.0 is always in the past
+    with pytest.raises(RuntimeError, match="admission control"):
+        eng.submit(SPEC_A, (16, 2), rid=3)
+    results = {res.rid: res for res in eng.run()}
+    assert results[2].status == "shed" and results[2].x0 is None
+    assert results[0].status == results[1].status == "ok"
+    # the high-priority request took a lane in the first admission wave
+    assert eng.stats()["shed"] == 1
+
+
+def test_step_scheduler_occupancy_stats_both_schedulers():
+    """Satellite: both schedulers report per-bucket lane accounting in
+    the same shape, so wasted padded-lane work is directly comparable."""
+    solve = ServeEngine(STABLE, bucket_sizes=(4,))
+    for r in range(3):           # 3 real + 1 pad lane over 8 steps
+        solve.submit(SPEC_A, (16, 2), rid=r)
+    solve.run()
+    b = solve.stats()["buckets"]["sa/8step/16x2/float32"]
+    assert b["lane_steps"] == 32 and b["wasted_lane_steps"] == 8
+    assert b["occupancy"] == pytest.approx(0.75)
+
+    eng = step_engine(lanes=4)
+    for r in range(3):
+        eng.submit(SPEC_A, (16, 2), rid=r)
+    eng.run()
+    sb = eng.stats()["buckets"]["sa/8step/16x2/float32"]
+    assert sb["lane_steps"] == sb["active_lane_steps"] \
+        + sb["wasted_lane_steps"]
+    # 3 of 4 lanes active for the whole solve (incl. the init tick)
+    assert sb["occupancy"] == pytest.approx(0.75)
+
+
+def test_step_scheduler_rejects_mesh_and_unknown():
+    with pytest.raises(ValueError, match="single-device"):
+        ServeEngine(STABLE, scheduler="step",
+                    mesh=make_test_mesh((1, 1), ("data", "model")))
+    with pytest.raises(ValueError, match="scheduler"):
+        ServeEngine(STABLE, scheduler="nope")
