@@ -36,6 +36,8 @@ SECTIONS = [
     ("continuous", "continuous batching: step vs solve scheduler on a "
      "straggler mix + churn cache contract"),
     ("guidance", "denoiser adapter: CFG scale sweep + cache contract"),
+    ("e2e_dit", "end-to-end DiT sampling: bf16 fused ring HBM, sharded "
+     "CFG, feature caching"),
 ]
 
 DEFAULT_JSON = os.path.join(

@@ -48,6 +48,7 @@ from .schedules import NoiseSchedule
 
 __all__ = [
     "PREDICTION_TYPES",
+    "CachedNetwork",
     "Denoiser",
     "canonical_prediction",
     "convert_prediction",
@@ -103,6 +104,27 @@ def convert_prediction(pred: jnp.ndarray, x: jnp.ndarray, t,
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class CachedNetwork:
+    """Feature-cached companion of a :class:`Denoiser`'s network
+    (DeepCache-style step-to-step activation reuse).
+
+    Args:
+        call: ``(x, t, cond, feats, refresh) -> (prediction, new_feats)``.
+            On ``refresh`` the deep feature segment is recomputed and
+            returned; otherwise the cached ``feats`` stand in and pass
+            through unchanged. Predictions follow the owning Denoiser's
+            ``prediction`` convention. ``refresh`` may be a Python bool
+            (graph-specializing) or a traced scalar bool.
+        init: ``(x) -> feats`` — a zero feature pytree for one *network*
+            input ``x`` (pre-CFG-doubling; the Denoiser stacks a leading
+            [2] axis under guidance).
+    """
+
+    call: Callable
+    init: Callable
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class Denoiser:
     """A raw network wrapped into the solver-facing model contract.
 
@@ -133,6 +155,9 @@ class Denoiser:
     prediction: str = "eps"
     guidance: bool = False
     null_cond: Any = None
+    #: optional feature-cached companion network; required when a sampler
+    #: spec sets ``feature_cache`` (see CachedNetwork)
+    cached: CachedNetwork | None = None
 
     def __post_init__(self):
         object.__setattr__(
@@ -147,34 +172,97 @@ class Denoiser:
                 canonical_prediction(target), self.schedule)
 
     # ------------------------------------------------------------ binding
-    def evaluate(self, x: jnp.ndarray, t, cond, scale) -> jnp.ndarray:
-        """One guided (or plain) network evaluation, in ``self.prediction``
-        convention. Under guidance the cond/uncond branches run as ONE
-        network call over a stacked leading axis of 2."""
-        if not self.guidance:
-            return self.network(x, t, cond)
+    def _cfg_pair(self, x, cond, cfg_sharding):
+        """Stack the cond/uncond lanes ([2] leading axis). When
+        ``cfg_sharding`` names a mesh axis, constrain that axis onto it —
+        XLA then places the two branches on disjoint device halves
+        (sharded CFG) instead of doubling the per-device batch."""
         null = self.null_cond
         if null is None and cond is not None:
             null = jax.tree.map(jnp.zeros_like, cond)
         pair = jax.tree.map(lambda c, n: jnp.stack([c, n]), cond, null)
-        out = jax.vmap(self.network, in_axes=(0, None, 0))(
-            jnp.stack([x, x]), t, pair)
-        c_out, u_out = out[0], out[1]
+        xx = jnp.stack([x, x])
+        if cfg_sharding is not None:
+            constrain = lambda a: jax.lax.with_sharding_constraint(
+                a, cfg_sharding)
+            xx = constrain(xx)
+            pair = jax.tree.map(constrain, pair)
+        return xx, pair
+
+    @staticmethod
+    def _combine(c_out, u_out, scale):
         s = jnp.asarray(scale, c_out.dtype)
         # (1-s)*u + s*c: at s == 1.0 this is bitwise the cond branch
         # (0*u + c), unlike u + s*(c-u) whose re-association rounds
         return (1.0 - s) * u_out + s * c_out
 
-    def as_model_fn(self, target: str, cond, scale) -> Callable:
+    def evaluate(self, x: jnp.ndarray, t, cond, scale,
+                 cfg_sharding=None) -> jnp.ndarray:
+        """One guided (or plain) network evaluation, in ``self.prediction``
+        convention. Under guidance the cond/uncond branches run as ONE
+        network call over a stacked leading axis of 2.
+
+        The network runs under ``jax.named_scope("backbone")`` so its ops
+        carry a ``backbone`` op-name path in the lowered HLO —
+        ``repro.launch.hlo_cost`` reads that metadata to attribute HBM
+        bytes to the backbone region vs the solver-update region."""
+        if not self.guidance:
+            with jax.named_scope("backbone"):
+                return self.network(x, t, cond)
+        xx, pair = self._cfg_pair(x, cond, cfg_sharding)
+        with jax.named_scope("backbone"):
+            out = jax.vmap(self.network, in_axes=(0, None, 0))(xx, t, pair)
+        return self._combine(out[0], out[1], scale)
+
+    def init_feats(self, x):
+        """Zero feature cache for one solver state ``x`` (the guided pair
+        gets a stacked leading [2] axis, matching ``evaluate``'s lanes)."""
+        assert self.cached is not None, "Denoiser built without cached="
+        f = self.cached.init(x)
+        if self.guidance:
+            f = jax.tree.map(lambda a: jnp.stack([a, a]), f)
+        return f
+
+    def evaluate_cached(self, x, t, cond, scale, feats, refresh,
+                        cfg_sharding=None):
+        """``evaluate`` through the feature-cached network. Returns
+        ``(prediction, new_feats)``."""
+        assert self.cached is not None, "Denoiser built without cached="
+        if not self.guidance:
+            with jax.named_scope("backbone"):
+                return self.cached.call(x, t, cond, feats, refresh)
+        xx, pair = self._cfg_pair(x, cond, cfg_sharding)
+        fn = lambda xi, ci, fi: self.cached.call(xi, t, ci, fi, refresh)
+        with jax.named_scope("backbone"):
+            out, new_feats = jax.vmap(fn)(xx, pair, feats)
+        return self._combine(out[0], out[1], scale), new_feats
+
+    def as_model_fn(self, target: str, cond, scale,
+                    cfg_sharding=None) -> Callable:
         """Bind this denoiser to a plan's parameterization and one call's
         (traced) conditioning + guidance scale, yielding the
         ``model_fn(x, t)`` closure the executors consume."""
         target = canonical_prediction(target)
 
         def model_fn(x, t):
-            raw = self.evaluate(x, t, cond, scale)
+            raw = self.evaluate(x, t, cond, scale, cfg_sharding)
             return convert_prediction(raw, x, t, self.prediction, target,
                                       self.schedule)
+
+        return model_fn
+
+    def as_cached_model_fn(self, target: str, cond, scale,
+                           cfg_sharding=None) -> Callable:
+        """Feature-cached twin of :meth:`as_model_fn`:
+        ``model_fn(x, t, feats, refresh) -> (prediction, new_feats)``."""
+        target = canonical_prediction(target)
+
+        def model_fn(x, t, feats, refresh):
+            raw, new_feats = self.evaluate_cached(
+                x, t, cond, scale, feats, refresh, cfg_sharding)
+            pred = convert_prediction(raw, x, t, self.prediction, target,
+                                      self.schedule)
+            return pred, new_feats
 
         return model_fn
 

@@ -175,6 +175,14 @@ class SamplerSpec:
     #: classifier-free guidance: the executor fuses cond/uncond into one
     #: doubled-lane network eval per model call (requires a Denoiser).
     guidance: bool = False
+    #: DeepCache-style step-to-step feature caching (requires a Denoiser
+    #: built with ``cached=``; SA family, ring history). ``None`` = off;
+    #: an int ``k`` refreshes the deep feature segment every k-th solver
+    #: step (interval policy); ``("residual", thresh)`` refreshes when the
+    #: previous step's free PECE predictor-vs-corrector residual meets
+    #: ``thresh`` (residual policy; PECE mode only). Policy *parameters*
+    #: (k, thresh) are plan data — only on/off is trace-relevant.
+    feature_cache: Any = None
 
     def resolve_schedule(self) -> NoiseSchedule:
         if isinstance(self.schedule, NoiseSchedule):
@@ -456,13 +464,23 @@ def _adapter_statics(plan: SamplerPlan, model_fn) -> tuple | None:
     return None
 
 
-def _bind_model(m, adapter, cond, scale):
+def _bind_model(m, adapter, cond, scale, cfg_shard=None):
     """Build the executor-facing ``model_fn(x, t)`` closure at trace time,
-    folding in the traced ``cond``/``scale`` arguments."""
+    folding in the traced ``cond``/``scale`` arguments. When the model is
+    a Denoiser with a feature-cached companion, the closure additionally
+    carries ``cached_call(x, t, feats, refresh) -> (pred, feats)`` and
+    ``init_feats(x)`` attributes for feature-caching executors.
+    ``cfg_shard`` (a NamedSharding over the CFG axis) requests sharded
+    classifier-free guidance inside the Denoiser."""
     if adapter is None:
         return m
     if adapter[0] == "denoiser":
-        return m.as_model_fn(adapter[3], cond, scale)
+        fn = m.as_model_fn(adapter[3], cond, scale, cfg_shard)
+        if m.cached is not None:
+            fn.cached_call = m.as_cached_model_fn(
+                adapter[3], cond, scale, cfg_shard)
+            fn.init_feats = m.init_feats
+        return fn
     _, src, dst, schedule = adapter  # plain model_fn, converted output
     return lambda x, t: convert_prediction(m(x, t), x, t, src, dst, schedule)
 
@@ -517,6 +535,18 @@ def _check_model(plan: SamplerPlan, model_fn, cond, guidance_scale):
             raise ValueError(
                 "conditioning requires a Denoiser model; a plain "
                 "model_fn(x, t) has no cond input")
+    if spec.feature_cache is not None:
+        if spec.name != "sa":
+            raise ValueError(
+                "feature_cache is only supported by the 'sa' family "
+                "(other executors never dispatch the cached eval, so the "
+                "knob would be silently inert)")
+        if not (isinstance(model_fn, Denoiser)
+                and model_fn.cached is not None):
+            raise ValueError(
+                "spec.feature_cache requires a Denoiser built with "
+                "cached= (a CachedNetwork exposing the split-segment "
+                "eval)")
     if cond is not None:
         cond = jax.tree.map(jnp.asarray, cond)
     guided = isinstance(model_fn, Denoiser) and model_fn.guidance
@@ -536,21 +566,25 @@ def _check_model(plan: SamplerPlan, model_fn, cond, guidance_scale):
     return cond, scale
 
 
-def _mesh_ident(mesh: Mesh | None, data_axis: str):
+def _mesh_ident(mesh: Mesh | None, data_axis: str,
+                cfg_axis: str | None = None):
     """Hashable identity of a mesh placement — part of the compile-cache
     key so sharded and unsharded executables never collide, and two
-    meshes over different devices/axis layouts don't either."""
+    meshes over different devices/axis layouts don't either. The CFG
+    axis (sharded classifier-free guidance) changes the traced graph, so
+    it joins the identity."""
     if mesh is None:
         return None
     return (tuple(mesh.shape.items()),
             tuple(int(d.id) for d in mesh.devices.flat),
-            data_axis)
+            data_axis, cfg_axis)
 
 
 def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
               trajectory: bool, batch: int | None, *,
               model_key: Hashable | None = None,
               mesh: Mesh | None = None, data_axis: str = "data",
+              cfg_axis: str | None = None,
               donate: bool = False, cond=None) -> _CacheEntry:
     """LRU-cached jitted executor.
 
@@ -589,9 +623,23 @@ def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
             token = ("strong", id(model_fn))
             cell_ref = None
     adapter = _adapter_statics(plan, model_fn)
+    cfg_shard = None
+    if cfg_axis is not None:
+        if mesh is None or cfg_axis not in mesh.shape:
+            raise ValueError(
+                f"cfg_axis={cfg_axis!r} needs a mesh with that axis "
+                "(see repro.serve.sharding.auto_cfg_mesh)")
+        if mesh.shape[cfg_axis] != 2:
+            raise ValueError(
+                f"cfg_axis {cfg_axis!r} has size {mesh.shape[cfg_axis]}; "
+                "sharded CFG splits exactly the cond/uncond pair (size 2)")
+        if not (isinstance(model_fn, Denoiser) and model_fn.guidance):
+            raise ValueError(
+                "cfg_axis only applies to a guidance-enabled Denoiser")
+        cfg_shard = NamedSharding(mesh, P(cfg_axis))
     key = (plan.spec.name, plan.statics, tuple(shape),
            jnp.dtype(dtype).name, token, trajectory, batch,
-           _mesh_ident(mesh, data_axis), bool(donate), adapter,
+           _mesh_ident(mesh, data_axis, cfg_axis), bool(donate), adapter,
            cond_struct(cond))
     entry = _COMPILE_CACHE.get(key)
     if entry is not None:
@@ -620,14 +668,16 @@ def _compiled(plan: SamplerPlan, model_fn: ModelFn, shape, dtype,
             m = _deref_model(cell)
             return jax.vmap(
                 lambda x, k, c, s: family.execute(
-                    statics, arrays, _bind_model(m, adapter, c, s), x, k,
+                    statics, arrays,
+                    _bind_model(m, adapter, c, s, cfg_shard), x, k,
                     trajectory)
             )(xs, keys, cond, scale)
     else:
         def run(arrays, x, k, cond, scale):
             m = _deref_model(cell)
             return family.execute(
-                statics, arrays, _bind_model(m, adapter, cond, scale),
+                statics, arrays,
+                _bind_model(m, adapter, cond, scale, cfg_shard),
                 x, k, trajectory)
 
     jit_kw: dict = {}
@@ -721,6 +771,7 @@ def sample_batched(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
 
 def sample_sharded(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
                    keys: jax.Array, *, mesh: Mesh, data_axis: str = "data",
+                   cfg_axis: str | None = None,
                    cond=None, guidance_scale=1.0,
                    trajectory: bool = False,
                    model_key: Hashable | None = None,
@@ -735,6 +786,15 @@ def sample_sharded(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
     donated (``donate_argnums``) on backends that implement donation.
     The compile-cache key carries the mesh/sharding identity, so sharded
     and unsharded executables for the same bucket never collide.
+
+    ``cfg_axis`` names a size-2 mesh axis to carry the classifier-free
+    cond/uncond pair (sharded CFG): the doubled-lane network eval inside
+    the Denoiser is constrained onto that axis, so each device evaluates
+    ONE branch at the local batch instead of both at a doubled local
+    batch — numerically the combine is unchanged. Requires a
+    guidance-enabled Denoiser and a cfg-factored mesh
+    (``repro.serve.sharding.auto_cfg_mesh``); on a single device leave it
+    ``None`` (the fused doubled-lane eval is the fallback).
     """
     if x_T.shape[0] != keys.shape[0]:
         raise ValueError(
@@ -754,13 +814,15 @@ def sample_sharded(plan: SamplerPlan, model_fn: ModelFn, x_T: jnp.ndarray,
     scale = jnp.broadcast_to(scale, (int(x_T.shape[0]),))
     entry = _compiled(plan, model_fn, x_T.shape[1:], x_T.dtype, trajectory,
                       int(x_T.shape[0]), model_key=model_key, mesh=mesh,
-                      data_axis=data_axis, donate=donate, cond=cond)
+                      data_axis=data_axis, cfg_axis=cfg_axis,
+                      donate=donate, cond=cond)
     return _call(entry, plan.arrays, x_T, keys, cond, scale)
 
 
 def warmup(plan: SamplerPlan, model_fn: ModelFn, shape, dtype=jnp.float32,
            *, batch: int | None = None, mesh: Mesh | None = None,
-           data_axis: str = "data", cond=None, trajectory: bool = False,
+           data_axis: str = "data", cfg_axis: str | None = None,
+           cond=None, trajectory: bool = False,
            model_key: Hashable | None = None,
            donate: bool | None = None):
     """AOT-compile one bucket: ``jit(run).lower(...).compile()``.
@@ -789,7 +851,8 @@ def warmup(plan: SamplerPlan, model_fn: ModelFn, shape, dtype=jnp.float32,
     cond_s = None if cond is None else jax.tree.map(_cond_aval, cond)
     entry = _compiled(plan, model_fn, tuple(shape), dtype, trajectory,
                       batch, model_key=model_key, mesh=mesh,
-                      data_axis=data_axis, donate=bool(donate), cond=cond_s)
+                      data_axis=data_axis, cfg_axis=cfg_axis,
+                      donate=bool(donate), cond=cond_s)
     if entry.aot is None:
         arrays_s = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), plan.arrays)
@@ -844,13 +907,14 @@ class Sampler:
 
     def sample_sharded(self, model_fn: ModelFn, x_T: jnp.ndarray,
                        keys: jax.Array, *, mesh: Mesh,
-                       data_axis: str = "data", cond=None,
+                       data_axis: str = "data",
+                       cfg_axis: str | None = None, cond=None,
                        guidance_scale=1.0, trajectory: bool = False,
                        model_key: Hashable | None = None,
                        donate: bool | None = None):
         return sample_sharded(self.plan, model_fn, x_T, keys, mesh=mesh,
-                              data_axis=data_axis, cond=cond,
-                              guidance_scale=guidance_scale,
+                              data_axis=data_axis, cfg_axis=cfg_axis,
+                              cond=cond, guidance_scale=guidance_scale,
                               trajectory=trajectory,
                               model_key=model_key, donate=donate)
 

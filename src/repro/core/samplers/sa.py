@@ -88,7 +88,7 @@ from .base import (SamplerFamily, SamplerSpec, carry_dtype,
                    register_sampler)
 from .stepwise import StepAdapter
 
-__all__ = ["MAX_SCAN_SEGMENTS", "plan_sa", "execute_sa",
+__all__ = ["MAX_SCAN_SEGMENTS", "fc_policy", "plan_sa", "execute_sa",
            "tables_to_arrays", "sa_statics", "sa_stepwise",
            "sa_stepwise_arrays"]
 
@@ -109,6 +109,24 @@ MAX_SCAN_SEGMENTS = 4
 def _use_cond_fallback(program: StepProgram | None, n_steps: int) -> bool:
     return (program is not None
             and len(program.segments(n_steps)) > MAX_SCAN_SEGMENTS)
+
+
+def fc_policy(spec: SamplerSpec):
+    """Normalize ``spec.feature_cache`` to ``None``, ``("interval", k)``
+    or ``("residual", thresh)``; raises on anything else. Policy
+    parameters are plan *data* — only on/off reaches the statics."""
+    fc = spec.feature_cache
+    if fc is None:
+        return None
+    if isinstance(fc, int) and not isinstance(fc, bool):
+        if fc < 1:
+            raise ValueError(f"feature_cache interval must be >= 1, got {fc}")
+        return ("interval", int(fc))
+    if (isinstance(fc, tuple) and len(fc) == 2 and fc[0] == "residual"):
+        return ("residual", float(fc[1]))
+    raise ValueError(
+        f"feature_cache={fc!r}; expected None, an int refresh interval, "
+        "or ('residual', threshold)")
 
 
 def tables_to_arrays(tables: SolverTables) -> dict:
@@ -171,6 +189,20 @@ def plan_sa(spec: SamplerSpec):
         corr[p_only] = tables.pred[p_only]
         arrays["corr"] = jnp.asarray(corr, jnp.float32)
         arrays["pece"] = jnp.asarray(rp.pece, jnp.bool_)
+    fc = fc_policy(spec)
+    if fc is not None:
+        M = spec.n_steps
+        if fc[0] == "interval":
+            # refresh every k-th step; the init eval (pre-scan) always
+            # refreshes, so step 0 may already reuse fresh features
+            refresh = (np.arange(M) + 1) % fc[1] == 0
+            thresh = np.inf  # the residual trigger never fires
+        else:
+            refresh = np.zeros(M, np.bool_)
+            refresh[0] = True
+            thresh = fc[1]
+        arrays["fc_refresh"] = jnp.asarray(refresh)
+        arrays["fc_thresh"] = jnp.asarray(thresh, jnp.float32)
     return arrays, {"ts": ts, "tables": tables}
 
 
@@ -205,6 +237,20 @@ def sa_statics(spec: SamplerSpec) -> tuple:
     else:
         use_corrector = spec.corrector_order > 0
         modes = (use_corrector, spec.mode == "PECE" and use_corrector)
+    fc = fc_policy(spec)
+    if fc is not None:
+        if program is not None:
+            raise ValueError(
+                "feature_cache does not compose with step programs (the "
+                "per-step cond fallback and the cached-eval dispatch "
+                "would nest); drop one of the two")
+        if spec.history != "ring":
+            raise ValueError("feature_cache requires history='ring'")
+        if fc[0] == "residual" and spec.corrector_order <= 0:
+            raise ValueError(
+                "the 'residual' feature-cache policy rides the free "
+                "predictor-vs-corrector residual — it needs "
+                "corrector_order > 0 (use an int interval otherwise)")
     return (
         spec.parameterization,
         modes,
@@ -212,6 +258,7 @@ def sa_statics(spec: SamplerSpec) -> tuple:
         spec.denoise_final and spec.parameterization == "data",
         spec.history == "ring",
         spec.precision,
+        fc is not None,
     )
 
 
@@ -261,6 +308,16 @@ def _rotated(dev, i, P, *tables_i):
     return c.at[:, 2 + pos].set(jnp.stack(tables_i))
 
 
+def _pc_residual(x_next, x_pred):
+    """Relative-RMS predictor-vs-corrector gap — the free step-change
+    signal PEC-with-corrector already computes both states for. Drives
+    the stepwise early exit AND the 'residual' feature-cache refresh."""
+    f32 = jnp.float32
+    diff = x_next.astype(f32) - x_pred.astype(f32)
+    return jnp.sqrt(jnp.mean(diff * diff)) / (
+        jnp.sqrt(jnp.mean(x_next.astype(f32) ** 2)) + 1e-8)
+
+
 def _x0_preview(dev, parameterization, cdt, x_eval, e_new, i):
     if parameterization == "data":
         return e_new
@@ -279,8 +336,19 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
     segment — one scan over ``arange(M)``, exactly the seed executor;
     multi-segment programs chain scans over the shared (x, history)
     carry, with the global step index threaded through so the ring head
-    stays consistent across segment boundaries."""
-    (parameterization, modes, combine, denoise, ring, precision) = statics
+    stays consistent across segment boundaries.
+
+    Feature caching (``statics[-1]``): every model evaluation goes
+    through the Denoiser's cached companion (``model_fn.cached_call``,
+    attached by ``_bind_model``), the feature pytree and the previous
+    step's predictor-vs-corrector residual join the scan carry, and the
+    per-step refresh predicate is ``fc_refresh[i] | (prev_err >=
+    fc_thresh)`` — the planned schedule OR'd with the residual trigger
+    (inert at +inf threshold for the interval policy). PECE re-evals
+    always reuse the step's own features. With caching off the carry and
+    the traced graph are unchanged from the seed executor."""
+    (parameterization, modes, combine, denoise, ring, precision,
+     fc) = statics
     if modes[0] == "segments":
         segments = modes[1]  # ((use_corrector, pece, length), ...)
     elif modes[0] == "cond":
@@ -296,22 +364,35 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
     f32 = jnp.float32
 
     x = x_T.astype(cdt)
-    e0 = model_fn(x, dev["ts"][0]).astype(cdt)
+    if fc:
+        def eval_model(x_in, t_in, feats, refresh):
+            e, feats = model_fn.cached_call(x_in, t_in, feats, refresh)
+            return e.astype(cdt), feats
+        feats0 = model_fn.init_feats(x)
+        e0, feats0 = eval_model(x, dev["ts"][0], feats0, True)
+    else:
+        def eval_model(x_in, t_in, feats, refresh):
+            return model_fn(x_in, t_in).astype(cdt), feats
+        feats0 = ()
+        e0, _ = eval_model(x, dev["ts"][0], (), True)
     buffer = jnp.zeros((P,) + x.shape, dtype=cdt).at[0].set(e0)
 
     def combine_rows(decay_i, x_prev, coeffs, buf, noise_i, xi):
         return _combine_rows(combine, cdt, decay_i, x_prev, coeffs, buf,
                              noise_i, xi)
 
-    def re_eval(pece, i, t_next, x_next, e_new, x_eval):
+    def re_eval(pece, i, t_next, x_next, e_new, x_eval, feats):
         """The PECE second model evaluation. ``pece`` is a static bool in
         the scan-segment executors; ``"cond"`` (the single-scan fallback)
         dispatches per step on the planned ``dev["pece"]`` flag array.
         The predicate is a scalar per scan step — un-batched under vmap —
         so the cond stays a true branch and non-PECE steps skip the
-        second evaluation entirely."""
+        second evaluation entirely. Under feature caching the re-eval
+        reuses this step's features (refresh=False passes them through
+        unchanged, so the returned pytree is dropped)."""
         def hit(_):
-            return model_fn(x_next, t_next).astype(cdt), x_next
+            e2, _ = eval_model(x_next, t_next, feats, False)
+            return e2, x_next
         if pece == "cond":
             return jax.lax.cond(dev["pece"][i], hit,
                                 lambda _: (e_new, x_eval), None)
@@ -347,7 +428,7 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
                 rows = jnp.concatenate([e_new[None], buf], axis=0)
                 x_next = combine_rows(decay_i, x, coeffs, rows, noise_i, xi)
                 e_new, x_eval = re_eval(pece, i, t_next, x_next,
-                                        e_new, x_eval)
+                                        e_new, x_eval, ())
             else:
                 x_next = x_pred
             buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
@@ -366,12 +447,20 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
 
     def make_step_ring(use_corrector, pece):
         def step_ring(carry, per_step):
-            x, buf = carry
+            if fc:
+                x, buf, feats, prev_err = carry
+            else:
+                x, buf = carry
+                feats, prev_err = (), None
             (i, step_key) = per_step
             xi = draw_noise(step_key, x.shape)
             decay_i = dev["decay"][i]
             noise_i = dev["noise"][i]
             t_next = dev["ts"][i + 1]
+            # refresh when the plan says so OR the last step moved enough
+            refresh = (dev["fc_refresh"][i]
+                       | (prev_err >= dev["fc_thresh"])) if fc else True
+            new_err = prev_err
 
             if combine == "fused":
                 if use_corrector:
@@ -381,22 +470,24 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
                 else:
                     x_pred = ops.sa_update(
                         x, buf, xi, rotated(i, dev["pred"][i])[0])
-                e_new = model_fn(x_pred, t_next).astype(cdt)
+                e_new, feats = eval_model(x_pred, t_next, feats, refresh)
                 x_eval = x_pred
                 if use_corrector:
                     # post-eval corrector: only e_new is touched — the
                     # history was already folded into corr_base
                     x_next = (corr_base.astype(f32) + dev["corr_new"][i]
                               * e_new.astype(f32)).astype(cdt)
+                    if fc:
+                        new_err = _pc_residual(x_next, x_pred)
                     e_new, x_eval = re_eval(pece, i, t_next, x_next,
-                                            e_new, x_eval)
+                                            e_new, x_eval, feats)
                 else:
                     x_next = x_pred
             else:
                 rows = age_rows(buf, i, P)
                 x_pred = combine_rows(decay_i, x, dev["pred"][i],
                                       jnp.stack(rows), noise_i, xi)
-                e_new = model_fn(x_pred, t_next).astype(cdt)
+                e_new, feats = eval_model(x_pred, t_next, feats, refresh)
                 x_eval = x_pred
                 if use_corrector:
                     coeffs = jnp.concatenate([dev["corr_new"][i][None],
@@ -404,8 +495,10 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
                     x_next = combine_rows(decay_i, x, coeffs,
                                           jnp.stack([e_new] + rows),
                                           noise_i, xi)
+                    if fc:
+                        new_err = _pc_residual(x_next, x_pred)
                     e_new, x_eval = re_eval(pece, i, t_next, x_next,
-                                            e_new, x_eval)
+                                            e_new, x_eval, feats)
                 else:
                     x_next = x_pred
             # the ONE history write: e_new becomes age 0 of step i+1, in
@@ -413,16 +506,17 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
             # needs again
             buf = jax.lax.dynamic_update_index_in_dim(buf, e_new,
                                                       (i + 1) % P, axis=0)
+            out = (x_next, buf, feats, new_err) if fc else (x_next, buf)
             if trajectory:
-                return (x_next, buf), {"x": x_next,
-                                       "x0": x0_preview(x_eval, e_new, i)}
-            return (x_next, buf), None
+                return out, {"x": x_next,
+                             "x0": x0_preview(x_eval, e_new, i)}
+            return out, None
         return step_ring
 
     make_step = make_step_ring if ring else make_step_concat
     keys = jax.random.split(key, M)
     idx = jnp.arange(M)
-    carry = (x, buffer)
+    carry = (x, buffer, feats0, jnp.float32(0.0)) if fc else (x, buffer)
     traj_parts = []
     start = 0
     for (use_corrector, pece, length) in segments:
@@ -435,7 +529,7 @@ def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
     if start != M:
         raise ValueError(
             f"mode segments cover {start} steps but the tables have {M}")
-    (x, buffer) = carry
+    x, buffer = carry[0], carry[1]
     traj = (traj_parts[0] if len(traj_parts) == 1 else jax.tree.map(
         lambda *xs: jnp.concatenate(xs, axis=0), *traj_parts))
 
@@ -526,7 +620,7 @@ def sa_stepwise(spec: SamplerSpec) -> StepAdapter:
     (x_T, ts[0]) via selects that are bit-transparent on real steps, so
     the compiled shape never changes when lanes join mid-flight."""
     base = sa_statics(spec)
-    (parameterization, _, combine, denoise, ring, precision) = base
+    (parameterization, _, combine, denoise, ring, precision, fc) = base
     if not ring:
         raise ValueError(
             "step-granular SA needs history='ring' (the concat layout "
@@ -582,9 +676,7 @@ def sa_stepwise(spec: SamplerSpec) -> StepAdapter:
                                        noise_i, xi)
             # predictor-vs-corrector residual — free under PEC+corrector,
             # computed BEFORE any PECE re-eval (relative RMS)
-            diff = x_next.astype(f32) - x_pred.astype(f32)
-            err = jnp.sqrt(jnp.mean(diff * diff)) / (
-                jnp.sqrt(jnp.mean(x_next.astype(f32) ** 2)) + 1e-8)
+            err = _pc_residual(x_next, x_pred)
             if pece == "cond":
                 # per-lane step index -> per-lane predicate: under vmap a
                 # lax.cond lowers to select anyway, so write the select
@@ -612,7 +704,7 @@ def sa_stepwise(spec: SamplerSpec) -> StepAdapter:
         return {"x": x_out, "buf": buf}, final, x0, err
 
     return StepAdapter(
-        statics=(parameterization, modes, combine, denoise, precision),
+        statics=(parameterization, modes, combine, denoise, precision, fc),
         i0=-1,
         evals_per_tick=2 if pece else 1,
         n_steps_of=lambda dev: int(dev["decay"].shape[0]),

@@ -148,12 +148,14 @@ def stepwise_adapter(spec) -> StepAdapter:
 
 # -------------------------------------------------------------- build carry
 def fresh_carry(plan: SamplerPlan, batch: int, shape, dtype,
-                *, cond=None) -> dict:
+                *, cond=None, model_fn=None) -> dict:
     """An all-lanes-free carry for one running batch.
 
     ``cond`` is a per-request conditioning prototype (arrays or
     ShapeDtypeStructs — only shapes/dtypes matter); lanes are zeroed and
-    inactive until ``join`` writes them.
+    inactive until ``join`` writes them. When the spec enables feature
+    caching the carry grows a per-lane ``feats`` pytree whose avals come
+    from the model's ``init_feats`` (pass the Denoiser as ``model_fn``).
     """
     adapter = stepwise_adapter(plan.spec)
     arrays = adapter.arrays(plan)
@@ -180,6 +182,18 @@ def fresh_carry(plan: SamplerPlan, batch: int, shape, dtype,
         carry["cond"] = jax.tree.map(
             lambda c: jnp.zeros((batch,) + tuple(c.shape),
                                 jnp.dtype(c.dtype)), cond)
+    if plan.spec.feature_cache is not None:
+        if model_fn is None or not hasattr(model_fn, "init_feats"):
+            raise ValueError(
+                "spec.feature_cache needs the feats avals: pass the "
+                "Denoiser (built with cached=) as fresh_carry(..., "
+                "model_fn=)")
+        feats_s = jax.eval_shape(
+            model_fn.init_feats,
+            jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype)))
+        carry["feats"] = jax.tree.map(
+            lambda s: jnp.zeros((batch,) + tuple(s.shape), s.dtype),
+            feats_s)
     return carry
 
 
@@ -295,18 +309,41 @@ class StepFns:
                                           i_s).compile()
 
 
-def _make_run_step(adapter, dadapter, cell, has_cond: bool, stream: bool):
+def _make_run_step(adapter, dadapter, cell, has_cond: bool, stream: bool,
+                   has_fc: bool = False):
     def run_step(arrays, carry):
         m = _deref_model(cell)
         M = adapter.n_steps_of(arrays)
 
         def lane(inner, i, keys, active, x_final, err_prev, tol, min_i,
-                 scale, cond):
+                 scale, cond, feats):
             model = _bind_model(m, dadapter, cond, scale)
             init = i < 0
             ic = jnp.clip(i, 0, M - 1)
-            inner2, final, x0, err = adapter.step(arrays, model, inner,
-                                                  ic, init, keys[ic])
+            if has_fc:
+                # wrap the bound model at trace time: the tick's FIRST
+                # model call carries the refresh predicate (plan schedule
+                # OR residual trigger; init ticks always refresh), any
+                # later call this tick (the PECE re-eval) reuses the
+                # fresh features. The box threads feats through the
+                # adapter's unchanged (x, t) model contract.
+                refresh0 = (init | arrays["fc_refresh"][ic]
+                            | (jnp.isfinite(err_prev)
+                               & (err_prev >= arrays["fc_thresh"])))
+                box = {"feats": feats, "first": True}
+                cached_call = model.cached_call
+
+                def step_model(x_in, t_in):
+                    r = refresh0 if box["first"] else False
+                    box["first"] = False
+                    e, box["feats"] = cached_call(x_in, t_in,
+                                                  box["feats"], r)
+                    return e
+            else:
+                box = {"feats": feats}
+                step_model = model
+            inner2, final, x0, err = adapter.step(arrays, step_model,
+                                                  inner, ic, init, keys[ic])
             i_new = jnp.where(init, 0, ic + 1)
             err = jnp.where(init, jnp.inf, err)
             # masked early exit: the residual must fall strictly below
@@ -329,6 +366,8 @@ def _make_run_step(adapter, dadapter, cell, has_cond: bool, stream: bool):
             }
             if has_cond:
                 new["cond"] = cond
+            if has_fc:
+                new["feats"] = jax.tree.map(keep, box["feats"], feats)
             aux = {"finished": fin, "stepped": active & ~init,
                    "i": new["i"], "err": new["err"]}
             if stream:
@@ -336,15 +375,16 @@ def _make_run_step(adapter, dadapter, cell, has_cond: bool, stream: bool):
             return new, aux
 
         cond = carry["cond"] if has_cond else None
+        feats = carry["feats"] if has_fc else None
         return jax.vmap(lane)(
             carry["inner"], carry["i"], carry["keys"], carry["active"],
             carry["x_final"], carry["err"], carry["tol"], carry["min_i"],
-            carry["scale"], cond)
+            carry["scale"], cond, feats)
 
     return run_step
 
 
-def _make_run_join(adapter, has_cond: bool):
+def _make_run_join(adapter, has_cond: bool, has_fc: bool = False):
     def run_join(arrays, carry, lane, x_T, keys, tol, min_i, scale,
                  cond=None):
         payload = {
@@ -360,6 +400,11 @@ def _make_run_join(adapter, has_cond: bool):
         }
         if has_cond:
             payload["cond"] = cond
+        if has_fc:
+            # fresh lanes start with zero features; the init tick's
+            # forced refresh overwrites them before any reuse
+            payload["feats"] = jax.tree.map(lambda f: jnp.zeros_like(f[0]),
+                                            carry["feats"])
         return jax.tree.map(lambda c, p: c.at[lane].set(p), carry, payload)
 
     return run_join
@@ -411,10 +456,12 @@ def make_stepfns(plan: SamplerPlan, model_fn, shape, dtype, batch: int, *,
         key = key[:_STEP_TOKEN_IDX] + (token,) + key[_STEP_TOKEN_IDX + 1:]
     cell = [cell_ref if cell_ref is not None else model_fn]
     has_cond = cond is not None
+    has_fc = plan.spec.feature_cache is not None
     entry = StepFns(
         adapter, cell, key, shape, dtype, has_cond,
-        jax.jit(_make_run_step(adapter, dadapter, cell, has_cond, stream)),
-        jax.jit(_make_run_join(adapter, has_cond)),
+        jax.jit(_make_run_step(adapter, dadapter, cell, has_cond, stream,
+                               has_fc)),
+        jax.jit(_make_run_join(adapter, has_cond, has_fc)),
         jax.jit(_run_copy))
     _STEP_CACHE[key] = entry
     while len(_STEP_CACHE) > _STEP_CACHE_MAX:

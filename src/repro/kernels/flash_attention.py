@@ -38,7 +38,8 @@ NEG_INF = -2.0**30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-            *, bq: int, bk: int, causal: bool, scale: float):
+            *, bq: int, bk: int, causal: bool, scale: float,
+            kv_len: int | None):
     i = pl.program_id(2)   # q block
     j = pl.program_id(3)   # kv block
     nk = pl.num_programs(3)
@@ -58,6 +59,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
         qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         s = jnp.where(kpos <= qpos, s, NEG_INF)
+    if kv_len is not None:
+        # ragged T: key positions past the true length are host-side
+        # padding — knock them out of the softmax (static gate: the
+        # divisible path traces the exact pre-ragged graph)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
 
     m_prev = m_scr[...]                            # [BQ, 1]
     m_cur = jnp.max(s, axis=1, keepdims=True)
@@ -80,19 +87,32 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
                    static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
                     bk: int = 512, interpret: bool = True):
-    """q [B,H,S,hd]; k,v [B,K,T,hd], K | H. Returns [B,H,S,hd] in q.dtype."""
+    """q [B,H,S,hd]; k,v [B,K,T,hd], K | H. Returns [B,H,S,hd] in q.dtype.
+
+    Ragged (non-block-multiple) S/T are handled by zero-padding up to the
+    block grid and masking: padded key positions get ``NEG_INF`` scores
+    inside the kernel (so they never touch the softmax) and padded query
+    rows are sliced off the output. Block-multiple shapes skip the
+    padding entirely and trace the exact unpadded graph.
+    """
     B, H, S, hd = q.shape
     K, T = k.shape[1], k.shape[2]
     G = H // K
     bq = min(bq, S)
     bk = min(bk, T)
-    if S % bq or T % bk:
-        raise ValueError(f"S={S} % bq={bq} or T={T} % bk={bk} != 0")
-    grid = (B, H, S // bq, T // bk)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        pad = ((0, 0), (0, 0), (0, Tp - T), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    grid = (B, H, Sp // bq, Tp // bk)
     scale = 1.0 / math.sqrt(hd)
     kernel = functools.partial(_kernel, bq=bq, bk=bk, causal=causal,
-                               scale=scale)
-    return pl.pallas_call(
+                               scale=scale,
+                               kv_len=T if Tp != T else None)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -101,7 +121,7 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
             pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
         scratch_shapes=[
             # (m, l, acc) persist across the innermost (nK) grid axis
             pltpu.VMEM((bq, 1), jnp.float32),
@@ -110,3 +130,4 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :S] if Sp != S else out

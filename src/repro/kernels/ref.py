@@ -19,11 +19,25 @@ def sa_update_ref(x, buf, xi, coeffs):
     """x [*shape]; buf [P, *shape]; xi [*shape]; coeffs [P+2] packed as
     (decay, noise, b_0..b_{P-1}) — the same packed-coefficient convention
     the Pallas kernel takes.
-    x' = decay*x + sum_j b_j*buf[j] + noise*xi."""
+    x' = decay*x + sum_j b_j*buf[j] + noise*xi.
+
+    Dtype-gated combine: at f32 the einsum contraction is kept verbatim
+    (the bitwise-locked seed reduction). For narrow history dtypes (bf16)
+    the einsum is replaced by an unrolled multiply-add chain in the
+    Pallas kernel's accumulation order — XLA loop-fuses the per-row
+    upcasts into one pass over the narrow rows, where the einsum forced a
+    materialized full-size f32 convert of the whole [P, N] buffer before
+    the dot (the bf16 byte-bloat the hot-path benchmark measured)."""
     coeffs = coeffs.astype(jnp.float32)
-    acc = jnp.einsum("p,p...->...", coeffs[2:], buf.astype(jnp.float32))
-    return (coeffs[0] * x.astype(jnp.float32) + acc
-            + coeffs[1] * xi.astype(jnp.float32)).astype(x.dtype)
+    if buf.dtype == jnp.float32:
+        acc = jnp.einsum("p,p...->...", coeffs[2:], buf)
+        return (coeffs[0] * x.astype(jnp.float32) + acc
+                + coeffs[1] * xi.astype(jnp.float32)).astype(x.dtype)
+    acc = coeffs[0] * x.astype(jnp.float32) \
+        + coeffs[1] * xi.astype(jnp.float32)
+    for j in range(buf.shape[0]):  # unrolled: P is static and small
+        acc = acc + coeffs[2 + j] * buf[j].astype(jnp.float32)
+    return acc.astype(x.dtype)
 
 
 def sa_fused_update_ref(x, buf, xi, coeffs):
@@ -31,17 +45,30 @@ def sa_fused_update_ref(x, buf, xi, coeffs):
     ``sa_update_ref`` (row 0 predictor, row 1 corrector). Returns
     ``(x_pred, corr_base)`` with x.dtype.
 
-    The two partial sums come out of ONE ``[2,P] @ [P,N]`` contraction so
-    XLA reads the buffer once — the jnp mirror of the Pallas kernel's
-    one-pass/two-accumulator structure, and the f32-accumulating CPU path
-    the hot-path benchmark measures."""
+    At f32 the two partial sums come out of ONE ``[2,P] @ [P,N]``
+    contraction so XLA reads the buffer once — the jnp mirror of the
+    Pallas kernel's one-pass/two-accumulator structure, and the
+    f32-accumulating CPU path the hot-path benchmark measures. For
+    narrow (bf16) histories the contraction becomes two unrolled f32
+    accumulators fed by ONE loop-fused pass over the bf16 rows — exactly
+    the Pallas kernel's register structure — because the einsum's
+    materialized f32 convert of the buffer cost more bytes than the
+    narrow dtype saved."""
     c = coeffs.astype(jnp.float32)
-    sums = jnp.einsum("qp,p...->q...", c[:, 2:], buf.astype(jnp.float32))
     xf = x.astype(jnp.float32)
     xif = xi.astype(jnp.float32)
-    x_pred = c[0, 0] * xf + c[0, 1] * xif + sums[0]
-    corr_base = c[1, 0] * xf + c[1, 1] * xif + sums[1]
-    return x_pred.astype(x.dtype), corr_base.astype(x.dtype)
+    if buf.dtype == jnp.float32:
+        sums = jnp.einsum("qp,p...->q...", c[:, 2:], buf)
+        x_pred = c[0, 0] * xf + c[0, 1] * xif + sums[0]
+        corr_base = c[1, 0] * xf + c[1, 1] * xif + sums[1]
+        return x_pred.astype(x.dtype), corr_base.astype(x.dtype)
+    acc_p = c[0, 0] * xf + c[0, 1] * xif
+    acc_c = c[1, 0] * xf + c[1, 1] * xif
+    for j in range(buf.shape[0]):  # unrolled: P is static and small
+        bj = buf[j].astype(jnp.float32)
+        acc_p = acc_p + c[0, 2 + j] * bj
+        acc_c = acc_c + c[1, 2 + j] * bj
+    return acc_p.astype(x.dtype), acc_c.astype(x.dtype)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True):

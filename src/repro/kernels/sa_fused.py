@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .sa_update import DEFAULT_TILE, choose_tile
+from .sa_update import DEFAULT_TILE, choose_tile, lane_align
 
 __all__ = ["sa_fused_update"]
 
@@ -71,7 +71,7 @@ def sa_fused_update(x, buf, xi, coeffs, *, tile: int = DEFAULT_TILE,
     xf = x.reshape(n)
     xif = xi.reshape(n)
     buff = buf.reshape(P, n)
-    t = choose_tile(n, tile)
+    t = choose_tile(n, tile, lane_align(x.dtype))
     grid = (pl.cdiv(n, t),)
     out_tile = pl.BlockSpec((t,), lambda i: (i,))
     pred, corr = pl.pallas_call(

@@ -34,36 +34,54 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sa_update", "choose_tile", "DEFAULT_TILE", "LANE_ALIGN"]
+__all__ = ["sa_update", "choose_tile", "lane_align", "DEFAULT_TILE",
+           "LANE_ALIGN"]
 
 DEFAULT_TILE = 512 * 128
-#: lane-alignment unit for 1-D tiles: 16 sublanes x 128 lanes covers the
-#: minimum TPU tile for both f32 (8, 128) and bf16 (16, 128)
+#: conservative lane-alignment unit for 1-D tiles: 16 sublanes x 128
+#: lanes covers the minimum TPU tile for both f32 (8, 128) and bf16
+#: (16, 128). Callers that know their dtype should prefer
+#: ``lane_align(dtype)`` — at f32 it halves the alignment grain, so
+#: twice as many latent sizes get an exactly-dividing (mask-free) tile.
 LANE_ALIGN = 16 * 128
 
 
-def choose_tile(n: int, tile: int) -> int:
-    """Largest lane-aligned tile <= ``tile`` that divides ``n``.
+def lane_align(dtype) -> int:
+    """Minimum lane-aligned 1-D tile unit for ``dtype``.
 
-    Falls back to ``min(tile, n)`` when no aligned divisor exists — the
-    grid then carries one ragged final block whose loads/stores Pallas
-    masks automatically. Either way no operand is ever padded (copied)
-    at the jnp level, so calling this inside a ``lax.scan`` step is
-    copy-free in steady state. Divisors below ``tile // 8`` are not
-    worth it (a tiny tile explodes the grid count and per-block overhead
-    dominates — e.g. n = 2048 * large_prime would otherwise run
-    thousands of 2048-element blocks); the ragged masked path wins
-    there.
+    TPU native tiles are (sublanes, 128) with the sublane count scaling
+    inversely with element width — f32 (8, 128), bf16 (16, 128), int8
+    (32, 128) — so the flattened-latent alignment unit is 1024 elements
+    at f32 and 2048 at bf16: narrow history rows bank twice the elements
+    per native tile.
+    """
+    bits = jnp.dtype(dtype).itemsize * 8
+    return max(32 // bits, 1) * 8 * 128
+
+
+def choose_tile(n: int, tile: int, align: int = LANE_ALIGN) -> int:
+    """Largest ``align``-aligned tile <= ``tile`` that divides ``n``.
+
+    ``align`` defaults to the dtype-agnostic ``LANE_ALIGN``; pass
+    ``lane_align(dtype)`` for the exact per-dtype grain. Falls back to
+    ``min(tile, n)`` when no aligned divisor exists — the grid then
+    carries one ragged final block whose loads/stores Pallas masks
+    automatically. Either way no operand is ever padded (copied) at the
+    jnp level, so calling this inside a ``lax.scan`` step is copy-free
+    in steady state. Divisors below ``tile // 8`` are not worth it (a
+    tiny tile explodes the grid count and per-block overhead dominates —
+    e.g. n = 2048 * large_prime would otherwise run thousands of
+    2048-element blocks); the ragged masked path wins there.
     """
     t_max = min(tile, n)
     if n % t_max == 0:
         return t_max
-    floor = max(LANE_ALIGN, (t_max // 8 // LANE_ALIGN) * LANE_ALIGN)
-    t = (t_max // LANE_ALIGN) * LANE_ALIGN
+    floor = max(align, (t_max // 8 // align) * align)
+    t = (t_max // align) * align
     while t >= floor:
         if n % t == 0:
             return t
-        t -= LANE_ALIGN
+        t -= align
     return t_max  # ragged final block, masked by Pallas
 
 
@@ -95,7 +113,7 @@ def sa_update(x, buf, xi, coeffs, *, tile: int = DEFAULT_TILE,
     xf = x.reshape(n)
     xif = xi.reshape(n)
     buff = buf.reshape(P, n)
-    t = choose_tile(n, tile)
+    t = choose_tile(n, tile, lane_align(x.dtype))
     grid = (pl.cdiv(n, t),)
     out = pl.pallas_call(
         functools.partial(_kernel, P=P),

@@ -36,6 +36,19 @@ Costs per instruction:
 
 Everything is computed per SPMD partition = per device, matching the
 denominators in the roofline formulas.
+
+``HloCost.region_bytes`` splits the byte total into two regions:
+``backbone`` — charges whose ops were traced under
+``jax.named_scope("backbone")`` (the Denoiser adapter wraps every
+network invocation in that scope, and XLA preserves the op-name path in
+instruction metadata through fusion), or, lacking metadata, charges that
+ride a fusion/call/conditional whose computation (transitively) contains
+a matmul-sized dot (contracting dim >= ``backbone_contract``, default
+16) — and ``solver`` — everything else. The metadata marker is what
+catches the backbone's *elementwise* fusions (softmax, gelu, rms_norm —
+no dot inside) that the contraction heuristic alone would misattribute
+to the solver region. This is how the e2e bench separates network-eval
+HBM traffic from solver-update HBM traffic inside ONE compiled executor.
 """
 
 from __future__ import annotations
@@ -60,6 +73,7 @@ _INSTR = re.compile(
     r"((?:\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
     r"([\w\-]+)\(")
 _TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_OP_NAME = re.compile(r'op_name="([^"]*)"')
 _CALLED_BRACED = re.compile(
     r"(branch_computations|calls)=\{([^}]*)\}")
 _CALLED_SINGLE = re.compile(
@@ -67,6 +81,11 @@ _CALLED_SINGLE = re.compile(
 
 _TRANSCEND = {"exponential", "log", "tanh", "rsqrt", "power", "logistic",
               "sqrt", "cosine", "sine", "exponential-minus-one", "log-plus-one"}
+#: data-movement opcodes that do NOT inherit backbone taint from their
+#: operands: shuffling a backbone output into solver state (ring-buffer
+#: row writes, history shifts) is solver bookkeeping, not network compute
+_DATA_MOVE = {"copy", "concatenate", "dynamic-update-slice", "dynamic-slice",
+              "slice", "pad", "reverse"}
 _FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
          "after-all", "reshape", "iota", "partition-id", "replica-id",
          "custom-call"}
@@ -106,6 +125,17 @@ class _Comp:
     #: (callee, fusion result bytes, has result-sized operand) per fusion
     #: edge, for that correction
     fusion_edges: list = dataclasses.field(default_factory=list)
+    #: largest dot contracting-dim product seen in this computation —
+    #: classifies it backbone (matmul-heavy) vs solver-update
+    max_contract: float = 0.0
+    #: any instruction in this computation carries the
+    #: ``named_scope("backbone")`` op-name marker — the high-confidence
+    #: backbone signal (survives fusion; catches elementwise fusions)
+    has_backbone_scope: bool = False
+    #: byte charges keyed by region tag: a tuple of callee names (charge
+    #: rides a fusion/call/conditional — classified by the callees) or a
+    #: bool (raw instruction: True = matmul-sized dot)
+    bytes_by_tag: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -115,18 +145,22 @@ class HloCost:
     bytes: float
     coll_bytes: dict
     per_comp: dict
+    #: {"backbone": ..., "solver": ...} split of ``bytes`` (see module
+    #: docstring); the two sum to ``bytes``
+    region_bytes: dict = dataclasses.field(default_factory=dict)
 
     @property
     def collective_total(self) -> float:
         return float(sum(self.coll_bytes.values()))
 
 
-def analyze_compiled(compiled) -> "HloCost":
+def analyze_compiled(compiled, *, backbone_contract: int = 16) -> "HloCost":
     """Analyze a jax AOT executable (anything exposing ``as_text()``) —
     the trip-count-aware alternative to ``compiled.cost_analysis()``,
     which counts a while-loop body once and charges in-place
     dynamic-update-slice at the full operand size."""
-    return analyze_hlo(compiled.as_text())
+    return analyze_hlo(compiled.as_text(),
+                       backbone_contract=backbone_contract)
 
 
 def _parse_operand_shapes(line: str, shapes: dict) -> list[str]:
@@ -141,12 +175,18 @@ def _parse_operand_shapes(line: str, shapes: dict) -> list[str]:
     return out
 
 
-def analyze_hlo(hlo: str) -> HloCost:
+def analyze_hlo(hlo: str, *, backbone_contract: int = 16) -> HloCost:
     comps: dict[str, _Comp] = {}
     cur: _Comp | None = None
     entry: str | None = None
     shapes: dict[str, str] = {}
+    tainted: set[str] = set()
     fused_names: set[str] = set()
+    scoped_callees: set[str] = set()
+
+    def charge(c: _Comp, b: float, tag) -> None:
+        c.bytes += b
+        c.bytes_by_tag[tag] = c.bytes_by_tag.get(tag, 0.0) + b
 
     for raw in hlo.splitlines():
         line = raw.rstrip()
@@ -157,6 +197,7 @@ def analyze_hlo(hlo: str) -> HloCost:
             if hdr.group(1):
                 entry = cur.name
             shapes = {}
+            tainted = set()
             continue
         if line.startswith("}"):
             cur = None
@@ -169,6 +210,20 @@ def analyze_hlo(hlo: str) -> HloCost:
         name, shape_str, opcode = m.group(1), m.group(2), m.group(3)
         shapes[name] = shape_str
         elems, rbytes = _shape_elems_bytes(shape_str)
+        op_name = _OP_NAME.search(line)
+        in_backbone = bool(op_name) and "backbone" in op_name.group(1)
+        # XLA-synthesized rewrites (reduce-window softmax, layout ops)
+        # drop op_name metadata — inherit backbone-ness from operands,
+        # except through data movement (a ring-buffer write of a network
+        # output is solver bookkeeping, not network compute)
+        if not in_backbone and opcode not in _DATA_MOVE:
+            ops_here = [o.group(1)
+                        for o in re.finditer(r"%([\w.\-]+)",
+                                             line.split("(", 1)[1])]
+            in_backbone = any(o in tainted for o in ops_here)
+        if in_backbone:
+            tainted.add(name)
+        cur.has_backbone_scope |= in_backbone
 
         # call graph edges
         if opcode == "while":
@@ -193,7 +248,12 @@ def analyze_hlo(hlo: str) -> HloCost:
             elif opcode in ("call", "conditional", "map", "custom-call"):
                 cur.calls.append((callee, 1))
             # reduce/scatter/sort to_apply lambdas: negligible, skip
+        if in_backbone and opcode in ("fusion", "call", "conditional"):
+            # a scoped call site marks its callees backbone even when the
+            # fused instructions themselves lost their metadata
+            scoped_callees.update(callee for _, callee in edges)
 
+        big_dot = False
         if opcode == "dot":
             lhs_ops = _parse_operand_shapes(line, shapes)
             contract = 1
@@ -206,6 +266,8 @@ def analyze_hlo(hlo: str) -> HloCost:
                         if i < len(ldims):
                             contract *= ldims[i]
             cur.flops += 2.0 * elems * contract
+            cur.max_contract = max(cur.max_contract, contract)
+            big_dot = contract >= backbone_contract
         elif opcode in _TRANSCEND:
             cur.transcendentals += elems
 
@@ -215,11 +277,17 @@ def analyze_hlo(hlo: str) -> HloCost:
                 cur.root_dus_update = _shape_elems_bytes(ops_root[1])[1]
         if opcode in _FREE:
             continue
+        # region tag for this instruction's byte charge: calls are
+        # classified by their callees once the whole module is parsed
+        if opcode in ("fusion", "call", "conditional") and edges:
+            tag = tuple(callee for _, callee in edges)
+        else:
+            tag = big_dot or in_backbone
         op_shapes = _parse_operand_shapes(line, shapes)
         if opcode == "dynamic-slice":
             # slice read + result write + scalar start indices
             idx = sum(_shape_elems_bytes(s)[1] for s in op_shapes[1:])
-            cur.bytes += 2 * rbytes + idx
+            charge(cur, 2 * rbytes + idx, tag)
             continue
         if opcode == "dynamic-update-slice":
             # in-place row write: update read + updated region write +
@@ -227,10 +295,10 @@ def analyze_hlo(hlo: str) -> HloCost:
             upd = _shape_elems_bytes(op_shapes[1])[1] if len(op_shapes) > 1 \
                 else rbytes
             idx = sum(_shape_elems_bytes(s)[1] for s in op_shapes[2:])
-            cur.bytes += 2 * upd + idx
+            charge(cur, 2 * upd + idx, tag)
             continue
         obytes = sum(_shape_elems_bytes(s)[1] for s in op_shapes)
-        cur.bytes += rbytes + obytes
+        charge(cur, rbytes + obytes, tag)
 
         for kind in _COLLECTIVES:
             if opcode == kind or opcode == kind + "-start":
@@ -249,7 +317,16 @@ def analyze_hlo(hlo: str) -> HloCost:
         for callee, res_bytes, aliasable in c.fusion_edges:
             upd = getattr(comps.get(callee), "root_dus_update", None)
             if upd is not None and aliasable:
-                c.bytes += upd - 2.0 * res_bytes
+                delta = upd - 2.0 * res_bytes
+                c.bytes += delta
+                for tag in c.bytes_by_tag:
+                    if isinstance(tag, tuple) and callee in tag:
+                        c.bytes_by_tag[tag] += delta
+                        break
+
+    for nm in scoped_callees:
+        if nm in comps:
+            comps[nm].has_backbone_scope = True
 
     # propagate multiplicities from ENTRY
     mult: dict[str, float] = {c: 0.0 for c in comps}
@@ -265,19 +342,41 @@ def analyze_hlo(hlo: str) -> HloCost:
             for callee, k in comps[name].calls:
                 stack.append((callee, m_ * k))
 
-    tot = HloCost(0.0, 0.0, 0.0, {}, {})
+    # transitive backbone classification over the call graph
+    bb_memo: dict[str, bool] = {}
+
+    def is_backbone(name: str) -> bool:
+        if name in bb_memo:
+            return bb_memo[name]
+        bb_memo[name] = False  # cycle guard
+        c = comps.get(name)
+        if c is not None:
+            bb_memo[name] = (c.has_backbone_scope
+                             or c.max_contract >= backbone_contract
+                             or any(is_backbone(cal) for cal, _ in c.calls))
+        return bb_memo[name]
+
+    tot = HloCost(0.0, 0.0, 0.0, {}, {},
+                  {"backbone": 0.0, "solver": 0.0})
     for name, c in comps.items():
         m_ = mult.get(name, 0.0)
         if m_ == 0.0:
             continue
         tot.flops += m_ * c.flops
         tot.transcendentals += m_ * c.transcendentals
+        region = {"backbone": 0.0, "solver": 0.0}
         if name not in fused_names:
             tot.bytes += m_ * c.bytes
+            for tag, b in c.bytes_by_tag.items():
+                bb = (any(is_backbone(t) for t in tag)
+                      if isinstance(tag, tuple) else bool(tag))
+                region["backbone" if bb else "solver"] += b
+            for k, v in region.items():
+                tot.region_bytes[k] += m_ * v
         for k, v in c.coll_bytes.items():
             tot.coll_bytes[k] = tot.coll_bytes.get(k, 0.0) + m_ * v
         tot.per_comp[name] = {
             "mult": m_, "flops": c.flops, "bytes": c.bytes,
-            "coll": dict(c.coll_bytes),
+            "coll": dict(c.coll_bytes), "region": region,
         }
     return tot

@@ -22,10 +22,16 @@ code path a real eps- or v-prediction checkpoint takes.
 into one doubled-lane network eval; the scale is traced data), and
 ``--cond-file`` loads a ``.npy`` conditioning array threaded to the
 network alongside ``x`` (the unconditional zoo backbones consume it as an
-input-space prompt added to the latent). ``--program`` attaches a
+input-space prompt added to the latent). ``--cfg-shard`` places the
+cond/uncond pair on a size-2 ``cfg`` mesh axis instead of doubling the
+local batch (needs >=2 devices and guidance on). ``--program`` attaches a
 per-step solver program (preset name, inline JSON, or ``@file.json``)
 assigning per-interval orders, P/PEC/PECE mode, and tau — see the README
-"Step programs" section.
+"Step programs" section. ``--feature-cache`` enables DeepCache-style
+step-to-step reuse of the backbone's mid-block features (``K`` refreshes
+every K-th solver step; ``residual:T`` refreshes when the free PECE
+predictor-vs-corrector residual exceeds T) for backbones exposing
+``denoise_cached``.
 """
 
 import argparse
@@ -37,6 +43,7 @@ import numpy as np
 
 from ..configs import get_config, get_smoke
 from ..core import Denoiser, convert_prediction, get_schedule
+from ..core.denoiser import CachedNetwork
 from ..core.programs import list_presets, parse_program
 from ..core.samplers import SamplerSpec, Sampler, list_samplers
 from ..models import build_model, init_params
@@ -60,10 +67,56 @@ def as_prediction_network(model, params, schedule, prediction: str):
 
     def network(x, t, cond):
         h = x if cond is None else x + cond
-        x0 = model.denoise(params, h, t)
+        # per-lane executors (sample_batched / sample_sharded / serve)
+        # call with an unbatched [S, dz] latent — re-rank for the model
+        lane = h.ndim == 2
+        x0 = model.denoise(params, h[None] if lane else h, t)
+        x0 = x0[0] if lane else x0
         return convert_prediction(x0, x, t, "x0", prediction, schedule)
 
     return network
+
+
+def as_cached_network(model, params, schedule, prediction: str):
+    """The feature-cached twin of :func:`as_prediction_network`: a
+    :class:`CachedNetwork` whose ``call`` threads the mid-block feature
+    pytree through ``model.denoise_cached`` and whose ``init`` builds the
+    zero cache for a latent. Rank-polymorphic like the plain network.
+    Refuses backbones without the cached protocol."""
+    for attr in ("denoise_cached", "feature_shape"):
+        if not hasattr(model, attr):
+            raise SystemExit(
+                f"--feature-cache needs a backbone with {attr}(); "
+                f"{type(model).__name__} has none")
+
+    def call(x, t, cond, feats, refresh):
+        h = x if cond is None else x + cond
+        lane = h.ndim == 2
+        x0, new = model.denoise_cached(
+            params, h[None] if lane else h, t,
+            feats=feats[None] if lane else feats, refresh=refresh)
+        if lane:
+            x0, new = x0[0], new[0]
+        return convert_prediction(x0, x, t, "x0", prediction, schedule), new
+
+    def init(x):
+        lane = x.ndim == 2
+        shape = (1, *x.shape) if lane else x.shape
+        aval = model.feature_shape(shape[0], shape[1])
+        feats = jnp.zeros(aval.shape, aval.dtype)
+        return feats[0] if lane else feats
+
+    return CachedNetwork(call=call, init=init)
+
+
+def parse_feature_cache(text: str | None):
+    """``"K"`` -> interval K; ``"residual:T"`` -> residual-gated with
+    threshold T (the SamplerSpec.feature_cache encodings)."""
+    if text is None:
+        return None
+    if text.startswith("residual:"):
+        return ("residual", float(text.split(":", 1)[1]))
+    return int(text)
 
 
 def main():
@@ -114,6 +167,16 @@ def main():
                     help="hot-loop precision policy: bf16 carries the "
                     "scan state/history in bfloat16 with f32 "
                     "accumulation")
+    ap.add_argument("--feature-cache", default=None,
+                    help="step-to-step backbone feature caching: an "
+                    "integer K (refresh the mid-block cache every K-th "
+                    "solver step) or residual:T (refresh when the free "
+                    "PECE predictor-vs-corrector residual exceeds T)")
+    ap.add_argument("--cfg-shard", action="store_true",
+                    help="run classifier-free guidance with the cond/"
+                    "uncond pair sharded over a size-2 'cfg' mesh axis "
+                    "(needs --guidance-scale and >=2 devices) instead "
+                    "of the fused doubled-lane eval")
     args = ap.parse_args()
 
     cfg, model, params = build_denoiser(args.arch, args.smoke, args.latent)
@@ -131,6 +194,7 @@ def main():
         # re-checks the budget
         program = parse_program(args.program, args.nfe - 1, tau=args.tau,
                                 nfe=args.nfe)
+    fc = parse_feature_cache(args.feature_cache)
     spec = SamplerSpec.from_nfe(
         args.sampler, args.nfe,
         schedule=schedule, grid=args.grid,
@@ -140,6 +204,7 @@ def main():
         combine=args.combine, history=args.history,
         precision=args.precision,
         prediction=args.prediction, guidance=guidance,
+        feature_cache=fc,
     )
     sampler = Sampler(spec)
 
@@ -148,17 +213,42 @@ def main():
         cond = jnp.asarray(np.load(args.cond_file), jnp.float32)
     model_fn = Denoiser(
         as_prediction_network(model, params, schedule, args.prediction),
-        schedule, prediction=args.prediction, guidance=guidance)
+        schedule, prediction=args.prediction, guidance=guidance,
+        cached=(as_cached_network(model, params, schedule, args.prediction)
+                if fc is not None else None))
+
+    mesh = None
+    if args.cfg_shard:
+        from ..serve.sharding import auto_cfg_mesh
+        if not guidance:
+            raise SystemExit("--cfg-shard needs --guidance-scale")
+        mesh = auto_cfg_mesh()
+        if mesh is None:
+            raise SystemExit("--cfg-shard needs an even device count >= 2 "
+                             f"(have {len(jax.devices())})")
 
     xT = sampler.init_noise(jax.random.PRNGKey(1), (args.batch, args.seq, dz))
+
+    def run(seed: int):
+        key = jax.random.PRNGKey(seed)
+        if mesh is None:
+            return sampler.sample(model_fn, xT, key, cond=cond,
+                                  guidance_scale=g_scale)
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(
+            key, jnp.arange(args.batch))
+        batch_cond = None
+        if cond is not None:
+            batch_cond = jnp.broadcast_to(
+                cond, (args.batch,) + tuple(cond.shape[-2:]))
+        return sampler.sample_sharded(
+            model_fn, xT, keys, mesh=mesh, data_axis="data",
+            cfg_axis="cfg", cond=batch_cond,
+            guidance_scale=jnp.full((args.batch,), g_scale))
+
     t0 = time.perf_counter()
-    x0 = jax.block_until_ready(
-        sampler.sample(model_fn, xT, jax.random.PRNGKey(2), cond=cond,
-                       guidance_scale=g_scale))
+    x0 = jax.block_until_ready(run(2))
     t1 = time.perf_counter()
-    x0b = jax.block_until_ready(
-        sampler.sample(model_fn, xT, jax.random.PRNGKey(3), cond=cond,
-                       guidance_scale=g_scale))
+    x0b = jax.block_until_ready(run(3))
     t2 = time.perf_counter()
     print(f"arch={cfg.name} latent={dz} sampler={args.sampler} "
           f"NFE={sampler.nfe} (network NFE={spec.network_nfe}) "
@@ -168,7 +258,9 @@ def main():
              f"tau={args.tau} P{args.predictor}C{args.corrector} "
              f"{args.mode}")
           + f" prediction={args.prediction} "
-          f"guidance={g_scale if guidance else 'off'}")
+          f"guidance={g_scale if guidance else 'off'}"
+          + (f" cfg_shard={mesh.devices.shape}" if mesh is not None else "")
+          + (f" feature_cache={fc}" if fc is not None else ""))
     print(f"compile+run {t1-t0:.2f}s, steady {t2-t1:.2f}s; "
           f"out mean={float(jnp.mean(x0)):.4f} std={float(jnp.std(x0)):.4f} "
           f"finite={bool(jnp.all(jnp.isfinite(x0)))}")

@@ -44,8 +44,9 @@ class AttentionConfig:
     causal: bool = True
     mla: MLAConfig | None = None
     attn_logit_softcap: float | None = None
-    #: route the no-cache causal path through kernels/flash_attention
-    #: (jnp oracle on CPU, Mosaic kernel on TPU)
+    #: route the no-cache path (causal LM prefill or bidirectional
+    #: denoiser blocks) through kernels/flash_attention (jnp oracle on
+    #: CPU, Mosaic kernel on TPU)
     use_flash: bool = False
 
 
@@ -201,11 +202,11 @@ def gqa_forward(
     v = shard_heads_dim(v)
 
     if cache is None:
-        if cfg.use_flash and causal and cfg.attn_logit_softcap is None:
+        if cfg.use_flash and cfg.attn_logit_softcap is None:
             from ..kernels import ops as kops
             o = kops.flash_attention(
                 jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
-                jnp.swapaxes(v, 1, 2), causal=True,
+                jnp.swapaxes(v, 1, 2), causal=causal,
             )
             out = jnp.swapaxes(o, 1, 2)
         else:

@@ -198,7 +198,7 @@ class ContinuousBatcher:
                            stream=self.stream, model_key=self.model_key)
         arrays = fns.adapter.arrays(plan)
         carry = fresh_carry(plan, self.lanes, req.shape, req.dtype,
-                            cond=req.cond)
+                            cond=req.cond, model_fn=self.model_fn)
         if not fns.warmed:
             fns.warm(arrays, carry, cond=req.cond)
             self._stats["warmups"] += 1

@@ -95,6 +95,11 @@ class ServeEngine:
             multiples of the data-axis size.
         mesh: optional ``jax.sharding.Mesh``; requests are split over
             ``data_axis``, plan arrays replicated.
+        cfg_axis: optional name of a size-2 mesh axis carrying the CFG
+            cond/uncond pair (see ``sharding.auto_cfg_mesh``). Requires
+            a mesh and a guidance-enabled Denoiser model; numerically
+            equivalent to the fused doubled-lane eval, but each device
+            runs one branch at the local batch instead of both.
         stream: solve with the trajectory hook and attach per-step x0
             previews to every result.
         on_result: optional callback invoked with each ServeResult as its
@@ -112,6 +117,7 @@ class ServeEngine:
     def __init__(self, model_fn: Callable, *,
                  bucket_sizes: Sequence[int] = (1, 2, 4, 8),
                  mesh=None, data_axis: str = "data",
+                 cfg_axis: str | None = None,
                  stream: bool = False,
                  on_result: Callable[[ServeResult], None] | None = None,
                  model_key: Hashable | None = None,
@@ -131,9 +137,15 @@ class ServeEngine:
             raise ValueError(
                 "the step scheduler is single-device (one vmapped carry "
                 "per running batch); use scheduler='solve' with a mesh")
+        if cfg_axis is not None and mesh is None:
+            raise ValueError(
+                "cfg_axis needs a mesh (sharded CFG splits the cond/"
+                "uncond pair across a size-2 mesh axis); without one the "
+                "engine already runs the fused doubled-lane eval")
         self.model_fn = model_fn
         self.mesh = mesh
         self.data_axis = data_axis
+        self.cfg_axis = cfg_axis
         if mesh is not None:
             bucket_sizes = align_bucket_sizes(
                 bucket_sizes, data_axis_size(mesh, data_axis))
@@ -253,6 +265,7 @@ class ServeEngine:
         plan = build_plan(mb.spec)
         warmup(plan, self.model_fn, mb.shape, jnp.dtype(mb.dtype),
                batch=mb.size, mesh=self.mesh, data_axis=self.data_axis,
+               cfg_axis=self.cfg_axis,
                cond=mb.requests[0].cond, trajectory=self.stream,
                model_key=self.model_key, donate=self.donate)
         self._warmed.add(ident)
@@ -313,7 +326,8 @@ class ServeEngine:
         if self.mesh is not None:
             out = sample_sharded(
                 plan, self.model_fn, x_T, solve_keys, mesh=self.mesh,
-                data_axis=self.data_axis, cond=cond_b,
+                data_axis=self.data_axis, cfg_axis=self.cfg_axis,
+                cond=cond_b,
                 guidance_scale=g_scales, trajectory=self.stream,
                 model_key=self.model_key, donate=self.donate)
         else:

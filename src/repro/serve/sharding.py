@@ -17,7 +17,8 @@ from typing import Sequence
 
 import jax
 
-__all__ = ["data_axis_size", "align_bucket_sizes", "auto_mesh"]
+__all__ = ["data_axis_size", "align_bucket_sizes", "auto_mesh",
+           "auto_cfg_mesh"]
 
 
 def data_axis_size(mesh, data_axis: str = "data") -> int:
@@ -52,4 +53,22 @@ def auto_mesh(data_axis: str = "data"):
     if n <= 1:
         return None
     return jax.make_mesh((n, 1), (data_axis, "model"),
+                         devices=jax.devices())
+
+
+def auto_cfg_mesh(data_axis: str = "data", cfg_axis: str = "cfg"):
+    """A CFG-factored serving mesh: ``(cfg=2, data=n//2)``.
+
+    Sharded classifier-free guidance places the cond/uncond pair on the
+    size-2 ``cfg`` axis — each device evaluates ONE branch at the local
+    batch instead of both at a doubled local batch — and the request
+    axis on the remaining ``data`` factor. Returns None when there are
+    fewer than two (or an odd number of) devices; the engine then falls
+    back to the fused doubled-lane eval, which is numerically the same
+    combine.
+    """
+    n = len(jax.devices())
+    if n < 2 or n % 2:
+        return None
+    return jax.make_mesh((2, n // 2), (cfg_axis, data_axis),
                          devices=jax.devices())

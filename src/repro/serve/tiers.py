@@ -76,7 +76,7 @@ class QualityTiers:
 
 
 def default_tiers(*, schedule="vp_linear", tau: float = 1.0,
-                  **spec_kw) -> QualityTiers:
+                  feature_cache=None, **spec_kw) -> QualityTiers:
     """The out-of-the-box draft/standard/best ladder.
 
     Hand-tuned presets over the SA family: ``draft`` spends 6 NFE on an
@@ -84,14 +84,29 @@ def default_tiers(*, schedule="vp_linear", tau: float = 1.0,
     winner shape, ``best`` 20 NFE on the same shape (corrector through
     the coarse phase, predictor-only tail, tau annealed to 0). Override
     ``best`` with a searched program via
-    :meth:`QualityTiers.from_artifact`."""
+    :meth:`QualityTiers.from_artifact`.
+
+    ``feature_cache`` (an int refresh interval or ``("residual",
+    thresh)``) turns the draft tier into the cheap-eval preset: draft
+    keeps its 6-NFE budget but trades the tau-anneal *program* for
+    DeepCache-style feature reuse inside the backbone (the two knobs
+    don't compose — a program's per-step cond dispatch would nest with
+    the cached-eval dispatch). Standard/best stay uncached: the tier
+    ladder then spans eval-cost as well as solver quality.
+    """
     def spec(nfe, preset):
         return SamplerSpec.from_nfe(
             "sa", nfe, schedule=schedule,
             program=program_preset_for_nfe(preset, nfe, tau=tau), **spec_kw)
 
+    if feature_cache is None:
+        draft = spec(6, "tau-anneal")
+    else:
+        draft = SamplerSpec.from_nfe(
+            "sa", 6, schedule=schedule, tau=tau,
+            feature_cache=feature_cache, **spec_kw)
     return QualityTiers({
-        "draft": spec(6, "tau-anneal"),
+        "draft": draft,
         "standard": spec(8, "nfe8-gmm"),
         "best": spec(20, "nfe8-gmm"),
     })

@@ -93,6 +93,38 @@ def test_choose_tile_prefers_aligned_divisors():
     assert choose_tile(A * 9973, 32 * A) == 32 * A
 
 
+@pytest.mark.parametrize("S,dz", [(1500, 64), (1503, 8), (750, 128),
+                                  (2048, 50)])
+def test_choose_tile_long_seq_shapes(S, dz):
+    """Musicgen-style long-sequence latents ((frames, codebook_dim),
+    frames ~ O(1500), non-square): choose_tile must stay within the
+    requested budget, and either divide the flattened size exactly
+    (copy-free steady state) or keep the requested tile for the masked
+    ragged path — never shrink below tile/8 chasing a tiny divisor."""
+    n = S * dz
+    for tile in (256, 1024, 8192):
+        t = choose_tile(n, tile)
+        assert t <= tile and t >= 1
+        if n % t:  # ragged fallback keeps the request
+            assert t == min(tile, n)
+        elif t % LANE_ALIGN == 0:
+            assert t >= tile // 8  # grid stays bounded
+
+
+def test_sa_update_long_seq_exact():
+    """The ring combine stays exact on a flattened non-square long-seq
+    latent whose size has no tile-aligned divisor."""
+    S, dz = 1500, 8  # 12000 = 2^5 * 3 * 5^3 -> no 256-aligned divisor
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    x = jax.random.normal(ks[0], (S, dz))
+    buf = jax.random.normal(ks[1], (3, S, dz))
+    xi = jax.random.normal(ks[2], (S, dz))
+    c = jnp.asarray([0.8, 0.2, 0.3, -0.1, 0.05], jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(sa_update(x, buf, xi, c, tile=256)),
+        np.asarray(sa_update_ref(x, buf, xi, c)), atol=1e-6, rtol=1e-6)
+
+
 def test_sa_update_unaligned_sizes_are_exact():
     """Ragged final blocks (masked, not padded) stay exact for sizes with
     no aligned divisor."""
@@ -122,6 +154,24 @@ def test_flash_attention_sweep(B, H, K, S, hd, bq, bk, dtype):
     v = jax.random.normal(ks[2], (B, K, S, hd), dtype)
     out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
     ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("S", [19, 24, 33])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_ragged_lengths(S, causal, dtype):
+    """Tier-1 guard for the fused e2e path: sequence lengths that are NOT
+    block multiples (masked final q/k blocks) must match the reference at
+    f32 and bf16. Small shapes so the sweep stays in the fast suite."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 2, S, 16), dtype)
+    k = jax.random.normal(ks[1], (1, 2, S, 16), dtype)
+    v = jax.random.normal(ks[2], (1, 2, S, 16), dtype)
+    out = flash_attention(q, k, v, causal=causal, bq=16, bk=16)
+    ref = flash_attention_ref(q, k, v, causal=causal)
     tol = 2e-5 if dtype == jnp.float32 else 4e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), atol=tol, rtol=tol)

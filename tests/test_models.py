@@ -151,6 +151,36 @@ def test_denoiser_mode(arch):
     assert float(jnp.max(jnp.abs(out - out2))) > 0
 
 
+def test_denoiser_tcond_stays_f32_under_bf16():
+    """Precision-policy regression (non-slow: tier-1 guard). Under a
+    bf16 model dtype the timestep/conditioning path must stay f32: bf16
+    has 8 mantissa bits, so adjacent solver timesteps would collapse to
+    one embedding and bias the whole trajectory. Two timesteps closer
+    than a bf16 ulp must still produce distinct adaLN signals — and
+    distinct denoise outputs."""
+    cfg = dataclasses.replace(get_smoke("dit-s"), dtype=jnp.bfloat16)
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_defs(),
+                         jnp.float32)
+    # adaLN-zero init would make the output t-independent; perturb
+    params = jax.tree.map(
+        lambda p: p + 0.02 * jax.random.normal(jax.random.PRNGKey(1),
+                                               p.shape, p.dtype), params)
+    t1 = 0.5
+    t2 = 0.5 * (1 + 2 ** -9)  # < half a bf16 ulp away from t1
+    assert jnp.bfloat16(t1) == jnp.bfloat16(t2)
+    tc1 = model._tcond(params["denoiser"], t1, 2, None)
+    tc2 = model._tcond(params["denoiser"], t2, 2, None)
+    assert tc1.dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(tc1 - tc2))) > 0, \
+        "timestep embedding quantized: sub-bf16-ulp timesteps collapsed"
+    z = jax.random.normal(jax.random.PRNGKey(2),
+                          (2, 32, cfg.denoiser_latent))
+    o1 = model.denoise(params, z, t1)
+    o2 = model.denoise(params, z, t2)
+    assert float(jnp.max(jnp.abs(o1 - o2))) > 0
+
+
 def test_param_counts_match_published():
     from repro.configs import get_config
     expect = {

@@ -82,6 +82,33 @@ def test_choose_bucket():
         choose_bucket(0, (1,))
 
 
+def test_long_seq_shapes_bucket_and_serve():
+    """Musicgen-style long non-square latents ((frames, dz), frames ~
+    O(1500)): shape is part of the bucket key — mixed-shape queues split
+    into per-shape microbatches — and a padded long-seq microbatch
+    returns, per request, exactly the solo-solve bytes."""
+    reqs = [Request(0, SPEC, (1500, 4)), Request(1, SPEC, (750, 8)),
+            Request(2, SPEC, (1500, 4)), Request(3, SPEC, (1500, 4))]
+    mbs = form_microbatches(reqs, bucket_sizes=(2,))
+    assert [[r.rid for r in mb.requests] for mb in mbs] == [[0, 2], [3], [1]]
+    assert mbs[1].rids() == [3, PAD_RID]
+
+    model = lambda x, t: 0.97 * x  # trivial: shape-polymorphic
+    clear_compile_cache()
+    engine = ServeEngine(model, bucket_sizes=(2,))
+    got = {}
+    for rid, shape in [(0, (1500, 4)), (1, (750, 8)), (2, (1500, 4))]:
+        engine.submit(SPEC, shape, rid=rid)
+    got = {res.rid: np.asarray(res.x0) for res in engine.run()}
+    assert got[0].shape == (1500, 4) and got[1].shape == (750, 8)
+    solo = ServeEngine(model, bucket_sizes=(2,))
+    solo.submit(SPEC, (1500, 4), rid=2)
+    (res,) = solo.run()
+    assert (got[2] == np.asarray(res.x0)).all()
+    # two shapes -> two bucket executors, ragged lanes notwithstanding
+    assert compile_cache_stats()["misses"] == 2
+
+
 def test_align_bucket_sizes_rounds_up_to_data_multiples():
     assert align_bucket_sizes((1, 2, 4, 8), 4) == (4, 8)
     assert align_bucket_sizes((3,), 2) == (4,)
