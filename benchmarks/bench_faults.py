@@ -1,0 +1,190 @@
+"""Goodput under injected faults: the chaos harness end-to-end.
+
+    PYTHONPATH=src python benchmarks/bench_faults.py --smoke
+    PYTHONPATH=src python benchmarks/bench_faults.py --requests 32
+
+One request stream is served twice through the step scheduler with
+identical fault-tolerance settings (per-lane numerical guard, bounded
+retry with a tau->0 degradation ladder, quarantine armed): once
+fault-free (baseline) and once under a seam of injected faults — a NaN
+written into one lane's carry mid-solve, a host failure raised against
+one bucket's dispatch, and a latency spike inside a timed tick.
+
+Reports (and asserts under ``--smoke``):
+
+- **blast radius** — every request the faults never touched (attempt 1,
+  status ok) returns bytes BITWISE-identical to its baseline serve:
+  guards, containment, retries, and quarantine add nothing to healthy
+  lanes,
+- **recovery** — every faulted request still completes: retried on a
+  fresh ``fold_in`` subkey (NaN target lands on the "tau0" ladder rung;
+  the raised bucket's in-flight requests back off and re-serve),
+- **cache contract** — the whole fault mix adds ZERO stepwise-cache
+  misses over the baseline's warmup: the guard interval is carry data,
+  injection is host-side, and the tau0 rung re-uses the compiled family,
+- **goodput** — ok-results/s for both phases; the chaos phase's wall
+  time is bounded by the baseline's plus the *injected* sleep and the
+  retry work (no livelock, no quarantine stall on the happy path).
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + assert blast radius, recovery, "
+                    "cache contract, and bounded goodput (CI)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--lanes", type=int, default=4)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = _args(argv)
+
+    import jax.numpy as jnp
+
+    from repro.core import get_schedule
+    from repro.core.samplers import (SamplerSpec, clear_stepwise_cache,
+                                     stepwise_cache_stats)
+    from repro.serve import Fault, FaultInjector, FaultPlan, ServeEngine
+
+    try:
+        from .common import print_table
+    except ImportError:
+        from common import print_table
+
+    n_req = args.requests or 16
+    schedule = get_schedule("vp_linear")
+    spec_a = SamplerSpec(name="sa", schedule=schedule, n_steps=8,
+                         mode="PECE", tau=0.7)
+    spec_b = SamplerSpec(name="sa", schedule=schedule, n_steps=6, tau=0.4)
+    shape = (24, 4)
+
+    # fusion-stable model: the blast-radius claim is bitwise, so the
+    # model must not give XLA re-fusion latitude across programs
+    def model(x, t):
+        return 0.3 * x * jnp.cos(t)
+
+    latency_s = 0.2
+    plan = FaultPlan((
+        Fault("nan", tick=5, rid=0),          # trips the in-graph guard
+        Fault("raise", tick=3, bucket=f"{spec_b.n_steps}step"),
+        Fault("latency", tick=8, seconds=latency_s),
+    ))
+    ft_kw = dict(scheduler="step", lanes=args.lanes, guard_interval=2,
+                 max_retries=2, degrade_ladder=("tau0",),
+                 retry_backoff=0.02, quarantine_after=3, quarantine_s=0.5,
+                 model_key="bench_faults")
+
+    def submit_stream(engine):
+        for i in range(n_req):
+            engine.submit(spec_a if i % 2 == 0 else spec_b, shape, rid=i)
+
+    def timed_run(engine):
+        t0 = time.perf_counter()
+        out = {res.rid: res for res in engine.run()}
+        return time.perf_counter() - t0, out
+
+    # cold pass: compiles land here, both measured phases run warm
+    clear_stepwise_cache()
+    warm = ServeEngine(model, **ft_kw)
+    submit_stream(warm)
+    timed_run(warm)
+    warmed = stepwise_cache_stats()
+
+    # ------------------------------------------------- baseline (no faults)
+    base_eng = ServeEngine(model, **ft_kw)
+    submit_stream(base_eng)
+    dt_base, base = timed_run(base_eng)
+    assert len(base) == n_req
+    assert all(r.status == "ok" and r.attempts == 1 for r in base.values())
+
+    # ---------------------------------------------------- chaos (fault mix)
+    inj = FaultInjector(plan)
+    chaos_eng = ServeEngine(model, fault_injector=inj, **ft_kw)
+    submit_stream(chaos_eng)
+    dt_chaos, chaos = timed_run(chaos_eng)
+    after = stepwise_cache_stats()
+    s = chaos_eng.stats()
+
+    assert len(chaos) == n_req, "every request must reach a terminal state"
+    fired_kinds = sorted(f[0] for f in inj.fired)
+    healthy = [r for r in chaos.values()
+               if r.status == "ok" and r.attempts == 1]
+    touched = [r for r in chaos.values() if r.attempts > 1]
+    bitwise_ok = sum(
+        1 for r in healthy
+        if (np.asarray(r.x0) == np.asarray(base[r.rid].x0)).all())
+    recovered = [r for r in touched if r.status == "ok"]
+    new_misses = after["misses"] - warmed["misses"]
+    goodput_base = sum(r.status == "ok" for r in base.values()) / dt_base
+    goodput_chaos = sum(r.status == "ok" for r in chaos.values()) / dt_chaos
+
+    print_table(
+        f"fault mix over {n_req} requests, 2 buckets, lanes={args.lanes} "
+        f"(guard every 2 steps, 2 retries, tau0 ladder)",
+        ["phase", "ok", "retries", "degraded", "goodput req/s",
+         "wall s"],
+        [["baseline", len(base), 0, 0, f"{goodput_base:.1f}",
+          f"{dt_base:.3f}"],
+         ["chaos", sum(r.status == "ok" for r in chaos.values()),
+          s["retries"], s["degraded"], f"{goodput_chaos:.1f}",
+          f"{dt_chaos:.3f}"]])
+    print(f"\ninjected: {fired_kinds} "
+          f"(latency {latency_s}s, raise -> {len(touched)} in-flight "
+          f"retries, NaN -> rid 0)")
+    print(f"blast radius: {len(healthy)} untouched requests, "
+          f"{bitwise_ok} bitwise-identical to baseline")
+    print(f"recovery: {len(recovered)}/{len(touched)} touched requests "
+          f"completed (rid 0 degraded to "
+          f"{chaos[0].degraded_to!r} on attempt {chaos[0].attempts})")
+    print(f"stepwise cache: {warmed} -> {after} "
+          f"({new_misses} new misses under the fault mix)")
+
+    metrics = {
+        "requests": n_req,
+        "goodput_base": goodput_base,
+        "goodput_chaos": goodput_chaos,
+        "goodput_ratio": goodput_chaos / goodput_base,
+        "healthy": len(healthy),
+        "healthy_bitwise": bitwise_ok,
+        "touched": len(touched),
+        "recovered": len(recovered),
+        "retries": s["retries"],
+        "degraded": s["degraded"],
+        "chaos_cache_misses": new_misses,
+    }
+
+    if args.smoke:
+        assert fired_kinds == ["latency", "nan", "raise"], fired_kinds
+        assert bitwise_ok == len(healthy) and len(healthy) >= n_req // 2, (
+            f"{len(healthy) - bitwise_ok} healthy requests changed bytes "
+            "under the fault mix — containment is leaking")
+        assert len(recovered) == len(touched) and touched, (
+            "faulted requests must retry to completion at this budget")
+        assert chaos[0].attempts >= 2 and chaos[0].degraded_to == "tau0"
+        assert new_misses == 0, (
+            f"fault mix recompiled ({new_misses} stepwise misses) — "
+            "guards/retries/ladder must stay trace-invisible")
+        budget = 3 * dt_base + latency_s + 1.0  # retry work + backoffs
+        assert dt_chaos <= budget, (
+            f"chaos wall time {dt_chaos:.2f}s exceeds {budget:.2f}s — "
+            "recovery is stalling (livelock/quarantine on happy path?)")
+        print(f"smoke OK: {bitwise_ok}/{len(healthy)} healthy bitwise, "
+              f"{len(recovered)}/{len(touched)} recovered, zero misses, "
+              f"chaos {dt_chaos:.2f}s <= {budget:.2f}s")
+    return metrics
+
+
+def run():
+    """benchmarks.run entry: smoke scale, all fault claims asserted."""
+    return main(["--smoke"])
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,8 @@ SECTIONS = [
     ("serving", "serve engine: bucket throughput + compile-cache contract"),
     ("continuous", "continuous batching: step vs solve scheduler on a "
      "straggler mix + churn cache contract"),
+    ("faults", "fault tolerance: goodput + bitwise blast radius under "
+     "an injected NaN/raise/latency mix"),
     ("guidance", "denoiser adapter: CFG scale sweep + cache contract"),
     ("e2e_dit", "end-to-end DiT sampling: bf16 fused ring HBM, sharded "
      "CFG, feature caching"),

@@ -199,5 +199,13 @@ class AsyncCheckpointer:
             raise RuntimeError("async checkpoint failed") from self._err[0]
 
     def close(self):
+        """Stop the worker and surface any failure it hit.
+
+        close() is the shutdown barrier: a write error after the last
+        ``save()``/``wait()`` would otherwise vanish with the daemon
+        thread, leaving a silently missing checkpoint."""
         self._q.put(None)
         self._q.join()
+        self._thread.join(timeout=5.0)
+        if self._err:
+            raise RuntimeError("async checkpoint failed") from self._err[0]

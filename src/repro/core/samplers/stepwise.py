@@ -31,6 +31,15 @@ The carry (leading axis = batch lanes, one slice per lane):
 - ``tol`` / ``min_i`` — per-lane early-exit tolerance (≤ 0 disables; the
   disabled path is bitwise-identical to the whole-solve executor) and
   minimum completed steps before an exit is allowed,
+- ``guard`` — per-lane numerical-guard interval (int32; 0 disables).
+  Every ``guard`` steps (and on the lane's finishing tick) the lane's
+  family state and would-be final sample are checked for non-finite
+  values; a tripped lane is deactivated WITHOUT capturing ``x_final``
+  and flagged in ``aux["failed"]`` so the scheduler can free it and
+  surface ``status="failed_numerics"`` instead of returning garbage.
+  The interval is carry *data* — toggling the guard or sweeping its
+  interval never recompiles, and with ``guard == 0`` every masked
+  write degenerates to the unguarded bytes,
 - ``scale`` (+ optional ``cond``) — per-lane guidance scale and
   conditioning, bound into the model exactly as the whole-solve path
   binds them.
@@ -42,9 +51,9 @@ join/leave churn sweep compiles NOTHING after warmup:
   lane (vmapped per lane; plan arrays broadcast). ``aux`` carries the
   per-tick ``finished``/``stepped`` flags, per-lane step indices, the
   residuals, and (stream mode) the per-step denoised ``x0`` previews.
-- ``join(arrays, carry, lane, x_T, keys, tol, min_i, scale[, cond])`` —
-  masked carry write admitting one request into one lane (scalar traced
-  lane index: any lane, one compilation).
+- ``join(arrays, carry, lane, x_T, keys, tol, min_i, scale[, guard]
+  [, cond])`` — masked carry write admitting one request into one lane
+  (scalar traced lane index: any lane, one compilation).
 - ``copy(dst_carry, src_carry, dst_lane, src_lane)`` — lane migration:
   moves one lane's entire carry slice (state, history, step index, RNG
   keys) between same-shaped batches, so merging half-empty batches is
@@ -148,7 +157,8 @@ def stepwise_adapter(spec) -> StepAdapter:
 
 # -------------------------------------------------------------- build carry
 def fresh_carry(plan: SamplerPlan, batch: int, shape, dtype,
-                *, cond=None, model_fn=None) -> dict:
+                *, cond=None, model_fn=None,
+                guard_every: int = 0) -> dict:
     """An all-lanes-free carry for one running batch.
 
     ``cond`` is a per-request conditioning prototype (arrays or
@@ -156,6 +166,8 @@ def fresh_carry(plan: SamplerPlan, batch: int, shape, dtype,
     inactive until ``join`` writes them. When the spec enables feature
     caching the carry grows a per-lane ``feats`` pytree whose avals come
     from the model's ``init_feats`` (pass the Denoiser as ``model_fn``).
+    ``guard_every`` seeds every lane's numerical-guard interval (data —
+    ``join`` overwrites it per request; 0 disables the guard).
     """
     adapter = stepwise_adapter(plan.spec)
     arrays = adapter.arrays(plan)
@@ -177,6 +189,7 @@ def fresh_carry(plan: SamplerPlan, batch: int, shape, dtype,
         "tol": jnp.zeros((batch,), jnp.float32),
         "min_i": jnp.zeros((batch,), jnp.int32),
         "scale": jnp.ones((batch,), jnp.float32),
+        "guard": jnp.full((batch,), int(guard_every), jnp.int32),
     }
     if cond is not None:
         carry["cond"] = jax.tree.map(
@@ -261,11 +274,12 @@ class StepFns:
         return self._call(self._aot_step, self._step, arrays, carry)
 
     def join(self, arrays, carry, lane, x_T, keys, tol, min_i, scale,
-             cond=None):
+             guard=0, cond=None):
         # numpy scalars, not jnp: each jnp scalar is its own device_put
         # dispatch, and joins sit on the serving hot path
         args = [arrays, carry, np.int32(lane), x_T, keys,
-                np.float32(tol), np.int32(min_i), np.float32(scale)]
+                np.float32(tol), np.int32(min_i), np.float32(scale),
+                np.int32(guard)]
         if self.has_cond:
             args.append(cond)
         return self._call(self._aot_join, self._join, *args)
@@ -297,7 +311,7 @@ class StepFns:
         f_s = jax.ShapeDtypeStruct((), jnp.float32)
         x_s = jax.ShapeDtypeStruct(self.shape, self.dtype)
         k_s = jax.ShapeDtypeStruct((M,) + proto.shape, proto.dtype)
-        join_args = [arrays_s, carry_s, i_s, x_s, k_s, f_s, i_s, f_s]
+        join_args = [arrays_s, carry_s, i_s, x_s, k_s, f_s, i_s, f_s, i_s]
         if self.has_cond:
             if cond is None:
                 raise ValueError(
@@ -316,7 +330,7 @@ def _make_run_step(adapter, dadapter, cell, has_cond: bool, stream: bool,
         M = adapter.n_steps_of(arrays)
 
         def lane(inner, i, keys, active, x_final, err_prev, tol, min_i,
-                 scale, cond, feats):
+                 scale, guard, cond, feats):
             model = _bind_model(m, dadapter, cond, scale)
             init = i < 0
             ic = jnp.clip(i, 0, M - 1)
@@ -352,24 +366,39 @@ def _make_run_step(adapter, dadapter, cell, has_cond: bool, stream: bool,
             # i_new == M is the whole-solve endpoint.
             fin = active & ((i_new >= M)
                             | ((err < tol) & (i_new >= min_i)))
+            # per-lane numerical guard: every `guard` steps (and on the
+            # finishing tick) reduce the family state + would-be final
+            # sample to one finiteness bit. The interval is carry DATA —
+            # guard == 0 makes `bad` constant-False, so every masked
+            # write below selects the unguarded bytes and toggling the
+            # guard never recompiles.
+            due = (guard > 0) & (((i_new % jnp.maximum(guard, 1)) == 0)
+                                 | fin)
+            finite = jnp.bool_(True)
+            for leaf in jax.tree.leaves(inner2) + [final]:
+                finite &= jnp.all(
+                    jnp.isfinite(leaf.astype(jnp.float32)))
+            bad = active & due & ~finite
+            fin = fin & ~bad
             keep = lambda n, o: jnp.where(active, n, o)
             new = {
                 "inner": jax.tree.map(keep, inner2, inner),
                 "i": jnp.where(active, i_new, i),
                 "keys": keys,
-                "active": active & ~fin,
+                "active": active & ~fin & ~bad,
                 "x_final": jnp.where(fin, final, x_final),
                 "err": jnp.where(active, err, err_prev),
                 "tol": tol,
                 "min_i": min_i,
                 "scale": scale,
+                "guard": guard,
             }
             if has_cond:
                 new["cond"] = cond
             if has_fc:
                 new["feats"] = jax.tree.map(keep, box["feats"], feats)
             aux = {"finished": fin, "stepped": active & ~init,
-                   "i": new["i"], "err": new["err"]}
+                   "failed": bad, "i": new["i"], "err": new["err"]}
             if stream:
                 aux["x0"] = x0
             return new, aux
@@ -379,14 +408,14 @@ def _make_run_step(adapter, dadapter, cell, has_cond: bool, stream: bool,
         return jax.vmap(lane)(
             carry["inner"], carry["i"], carry["keys"], carry["active"],
             carry["x_final"], carry["err"], carry["tol"], carry["min_i"],
-            carry["scale"], cond, feats)
+            carry["scale"], carry["guard"], cond, feats)
 
     return run_step
 
 
 def _make_run_join(adapter, has_cond: bool, has_fc: bool = False):
     def run_join(arrays, carry, lane, x_T, keys, tol, min_i, scale,
-                 cond=None):
+                 guard=0, cond=None):
         payload = {
             "inner": adapter.init_inner(arrays, x_T),
             "i": jnp.int32(adapter.i0),
@@ -397,6 +426,7 @@ def _make_run_join(adapter, has_cond: bool, has_fc: bool = False):
             "tol": tol,
             "min_i": min_i,
             "scale": scale,
+            "guard": jnp.asarray(guard, jnp.int32),
         }
         if has_cond:
             payload["cond"] = cond

@@ -140,6 +140,8 @@ def serve_diffusion(args) -> None:
     from ..serve import (QualityTiers, ServeEngine, auto_mesh,
                          default_tiers)
 
+    from ..serve.faults import FaultInjector, FaultPlan
+
     schedule = get_schedule("vp_linear")
     guidance = args.guidance_scale is not None
     adapted = guidance or args.prediction != "data" \
@@ -176,11 +178,26 @@ def serve_diffusion(args) -> None:
                 name: dataclasses.replace(
                     s, prediction=args.prediction, guidance=guidance)
                 for name, s in tiers.specs.items()})
+    injector = None
+    if args.inject and not args.guard_interval:
+        args.guard_interval = 4  # injecting NaNs without the guard
+        # would let them reach results marked "ok"
+    if args.inject:
+        # a small deterministic chaos mix: one NaN'd lane, one raised
+        # tick, one latency spike — seeded so reruns replay it exactly
+        injector = FaultInjector(FaultPlan.seeded(
+            0, n_ticks=max(2, args.requests), rids=range(args.requests)))
+    degrade_ladder = None
+    if args.degrade_ladder:
+        degrade_ladder = [s.strip() for s in args.degrade_ladder.split(",")
+                          if s.strip()]
     engine = ServeEngine(
         model_fn, bucket_sizes=tuple(args.bucket_sizes), mesh=mesh,
         stream=args.stream, on_result=show if args.stream else None,
         model_key=("denoiser", cfg.name, args.prediction, guidance),
-        tiers=tiers, scheduler=args.scheduler, lanes=args.lanes)
+        tiers=tiers, scheduler=args.scheduler, lanes=args.lanes,
+        max_retries=args.max_retries, degrade_ladder=degrade_ladder,
+        guard_interval=args.guard_interval, fault_injector=injector)
     if args.quality_tier is not None:
         spec, submit_kw = None, {"quality_tier": args.quality_tier}
     else:
@@ -206,6 +223,21 @@ def serve_diffusion(args) -> None:
     for res in results:
         if getattr(res, "status", "ok") == "ok":
             assert bool(jnp.all(jnp.isfinite(res.x0)))
+    bad = [r for r in results if getattr(r, "status", "ok") != "ok"]
+    if bad or args.inject:
+        h = engine.health()
+        print(f"health: {h['status']} (completed={h['completed']}, "
+              f"failed={h['failed']}, "
+              f"failed_numerics={h['failed_numerics']}, "
+              f"retries={h['retries']}, shed={h['shed']}, "
+              f"quarantines={h['quarantines']})")
+        for r in bad:
+            print(f"  rid {r.rid}: {r.status} after {r.attempts} "
+                  f"attempt(s)"
+                  + (f" [{r.degraded_to}]" if r.degraded_to else "")
+                  + (f" — {r.error}" if r.error else ""))
+        if injector is not None:
+            print(f"injected: {injector.fired}")
     s = engine.stats()
     mesh_desc = "none" if mesh is None else dict(mesh.shape)
     if args.scheduler == "step":
@@ -292,6 +324,23 @@ def main():
     ap.add_argument("--tuned-artifact", default=None,
                     help="repro.launch.tune JSON artifact; its searched "
                     "winner becomes the 'best' tier")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="serve attempts beyond the first for a failed "
+                    "request (guard trip or host fault); each retry "
+                    "draws a fresh fold_in subkey")
+    ap.add_argument("--degrade-ladder", default=None,
+                    help="comma-separated retry fallback rungs: tier "
+                    "names and/or 'tau0' (same spec at tau=0, the "
+                    "deterministic ODE limit), e.g. 'standard,tau0'")
+    ap.add_argument("--guard-interval", type=int, default=0,
+                    help="per-lane finiteness check every N solver steps "
+                    "(step scheduler; carried as data — no recompiles); "
+                    "any non-zero value also enables the solve "
+                    "scheduler's post-solve check. 0 disables")
+    ap.add_argument("--inject", action="store_true",
+                    help="chaos smoke: seeded fault mix (1 NaN lane, 1 "
+                    "raised tick, 1 latency spike) through the serve "
+                    "path; implies --guard-interval 4 if unset")
     args = ap.parse_args()
     if args.arch is None:
         args.arch = "starcoder2-3b" if args.mode == "lm" else "dit-s"

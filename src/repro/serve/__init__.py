@@ -63,21 +63,36 @@ from a search artifact::
                          tiers=QualityTiers.from_artifact("tune.json"))
     engine.submit(None, shape=(32, 8), quality_tier="best")
 
+Fault tolerance (:mod:`repro.serve.faults` + engine knobs): per-lane
+in-graph numerical guards (``guard_interval`` — carried as data, so
+toggling never recompiles), per-bucket containment (one bucket's fault
+never aborts another's work), bounded retry-with-degradation
+(``max_retries`` + ``degrade_ladder``; each retry folds its attempt
+into the RNG streams, attempt 0 stays bitwise), consecutive-failure
+quarantine with cooldown, a straggler watchdog, and a seeded chaos
+harness (:class:`FaultPlan`/:class:`FaultInjector`) that exercises all
+of it deterministically. ``ServeEngine.health()`` is the poll surface.
+
 Drivers: ``python -m repro.launch.serve --mode diffusion`` (full CLI),
 ``examples/serve_diffusion.py`` (thin client),
-``benchmarks/bench_serving.py`` (bucket/mesh throughput sweeps).
+``benchmarks/bench_serving.py`` (bucket/mesh throughput sweeps),
+``benchmarks/bench_faults.py`` (goodput under an injected fault mix).
 """
 
 from .batching import (MicroBatch, PAD_RID, Request, bucket_key,
                        choose_bucket, cond_struct, fold_keys,
-                       form_microbatches)
+                       form_microbatches, retry_fold)
 from .continuous import ContinuousBatcher, RunningBatch, bucket_label
 from .engine import ServeEngine, ServeResult
+from .faults import Fault, FaultInjector, FaultPlan, poison_lane
 from .sharding import align_bucket_sizes, auto_mesh, data_axis_size
 from .tiers import QualityTiers, default_tiers
 
 __all__ = [
     "ContinuousBatcher",
+    "Fault",
+    "FaultInjector",
+    "FaultPlan",
     "MicroBatch",
     "PAD_RID",
     "QualityTiers",
@@ -95,4 +110,6 @@ __all__ = [
     "default_tiers",
     "fold_keys",
     "form_microbatches",
+    "poison_lane",
+    "retry_fold",
 ]

@@ -53,6 +53,7 @@ __all__ = [
     "cond_struct",
     "form_microbatches",
     "fold_keys",
+    "retry_fold",
 ]
 
 #: rid assigned to padded lanes; int32-max so it cannot collide with real
@@ -90,6 +91,17 @@ class Request:
     #: defaults to the spec's solver order (the multistep warm-up, where
     #: the residual is not yet meaningful)
     min_steps: int | None = None
+    # -- retry bookkeeping (set by the engine when a failed request is
+    # re-enqueued; also not trace-relevant) --
+    #: 0 for the original submission, incremented per retry; folds into
+    #: the RNG streams (attempt 0 is bitwise the base stream)
+    attempt: int = 0
+    #: ``time.monotonic()`` before which the retry must not be served
+    #: (exponential backoff after host-side faults; 0 = immediately)
+    not_before: float = 0.0
+    #: label of the degradation-ladder rung this retry runs at (a tier
+    #: name or "tau0"); None while undegraded
+    degraded_to: str | None = None
 
 
 def bucket_key(req: Request) -> tuple:
@@ -187,3 +199,16 @@ def fold_keys(base_key: jax.Array, rids) -> jax.Array:
     """
     rids = jnp.asarray(rids, dtype=jnp.int32)
     return jax.vmap(lambda r: jax.random.fold_in(base_key, r))(rids)
+
+
+def retry_fold(keys: jax.Array, attempts) -> jax.Array:
+    """Fresh per-attempt subkeys: ``fold_in(key, attempt)`` per lane.
+
+    A retried request must not replay the stream that just went
+    non-finite, so each attempt folds its count into the rid-derived
+    key. Attempt 0 is bitwise the base stream (``where`` selects the
+    unfolded key), preserving every fault-free RNG contract.
+    """
+    a = jnp.asarray(attempts, dtype=jnp.int32)
+    folded = jax.vmap(jax.random.fold_in)(keys, a)
+    return jnp.where((a > 0)[:, None], folded, keys)

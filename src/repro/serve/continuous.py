@@ -48,16 +48,18 @@ like-for-like.
 
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Callable, Hashable
+from typing import Callable, Hashable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.denoiser import Denoiser
-from ..core.samplers import (build_plan, fresh_carry, make_stepfns,
-                             stepwise_cache_stats)
+from ..core.samplers import (SamplerSpec, build_plan, fresh_carry,
+                             make_stepfns, stepwise_cache_stats)
+from ..runtime import StragglerMonitor
 from .batching import Request, bucket_key
 
 __all__ = ["ContinuousBatcher", "RunningBatch", "bucket_label"]
@@ -119,7 +121,17 @@ class ContinuousBatcher:
                  model_key: Hashable | None = None,
                  noise_seed: int = 7, solve_seed: int = 8,
                  max_pending: int | None = None,
-                 result_factory: Callable | None = None):
+                 result_factory: Callable | None = None,
+                 max_retries: int = 0,
+                 degrade_ladder: Sequence | None = None,
+                 tiers=None,
+                 guard_interval: int = 0,
+                 retry_backoff: float = 0.05,
+                 quarantine_after: int = 3,
+                 quarantine_s: float = 1.0,
+                 watchdog: StragglerMonitor | None = None,
+                 shed_on_straggler: bool = False,
+                 fault_injector=None):
         if lanes < 1:
             raise ValueError("need at least one lane")
         self.model_fn = model_fn
@@ -129,14 +141,27 @@ class ContinuousBatcher:
         self.model_key = model_key
         self.max_pending = max_pending
         self._result = result_factory
+        self.max_retries = int(max_retries)
+        self.degrade_ladder = tuple(degrade_ladder) if degrade_ladder \
+            else ()
+        self._tiers = tiers
+        self.guard_interval = int(guard_interval)
+        self.retry_backoff = float(retry_backoff)
+        self.quarantine_after = int(quarantine_after)
+        self.quarantine_s = float(quarantine_s)
+        self.watchdog = watchdog if watchdog is not None \
+            else StragglerMonitor()
+        self.shed_on_straggler = shed_on_straggler
+        self._inject = fault_injector
         self._noise_base = jax.random.PRNGKey(noise_seed)
         self._solve_base = jax.random.PRNGKey(solve_seed)
         self._pending: list[tuple] = []  # (sort_key, seq, Request)
         self._seq = 0
         self._rr = 0
         self._batches: list[RunningBatch] = []
-        #: (shape, dtype, M, scale) -> jitted rid -> (x_T, step keys);
-        #: one dispatch per join instead of a chain of eager RNG ops
+        #: (shape, dtype, M, scale) -> jitted (rid, attempt) ->
+        #: (x_T, step keys); one dispatch per join instead of a chain of
+        #: eager RNG ops
         self._derive: dict[tuple, Callable] = {}
         self._network_factor = 2 if (isinstance(model_fn, Denoiser)
                                      and model_fn.guidance) else 1
@@ -144,8 +169,17 @@ class ContinuousBatcher:
             "requests": 0, "completed": 0, "shed": 0, "joins": 0,
             "migrations": 0, "ticks": 0, "model_evals": 0,
             "network_evals": 0, "warmups": 0, "serve_s": 0.0,
+            "failed": 0, "failed_numerics": 0, "retries": 0,
+            "degraded": 0, "quarantines": 0, "callback_errors": 0,
+            "straggler_sheds": 0,
         }
         self._buckets: dict[str, dict] = {}
+        #: bucket label -> consecutive failures (reset by any success)
+        self._fail_streak: dict[str, int] = {}
+        #: bucket label -> monotonic time the quarantine lifts
+        self._quarantine: dict[str, float] = {}
+        self._callback_errs: list[str] = []
+        self._shed_deadlines = False
 
     # ------------------------------------------------------------- intake
     def enqueue(self, req: Request) -> None:
@@ -185,8 +219,89 @@ class ContinuousBatcher:
 
     def _emit(self, res):
         if self.on_result is not None:
-            self.on_result(res)
+            try:
+                self.on_result(res)
+            except Exception as e:  # a user callback must not lose
+                self._stats["callback_errors"] += 1  # other results
+                self._callback_errs.append(repr(e))
+                del self._callback_errs[:-8]
         return res
+
+    # --------------------------------------------------- fault handling
+    @staticmethod
+    def _label_of(req: Request) -> str:
+        return bucket_label(bucket_key(req))
+
+    def _quarantined(self, label: str, now: float) -> bool:
+        until = self._quarantine.get(label)
+        if until is None:
+            return False
+        if now >= until:  # cooldown elapsed: allow a probe
+            del self._quarantine[label]
+            return False
+        return True
+
+    def _note_failure(self, label: str) -> None:
+        """Consecutive-failure counting -> quarantine with cooldown."""
+        n = self._fail_streak.get(label, 0) + 1
+        self._fail_streak[label] = n
+        if n >= self.quarantine_after:
+            self._quarantine[label] = time.monotonic() + self.quarantine_s
+            self._fail_streak[label] = 0
+            self._stats["quarantines"] += 1
+
+    def _note_success(self, label: str) -> None:
+        self._fail_streak.pop(label, None)
+
+    def _degrade(self, req: Request, attempt: int):
+        """Resolve the retry's spec through the degradation ladder.
+
+        Ladder entries are tier names (resolved via the engine's
+        ``QualityTiers``), the literal ``"tau0"`` (the deterministic
+        ODE-limit fallback: same spec with tau=0, program dropped), or
+        explicit ``SamplerSpec`` s. Attempt ``a`` runs at rung
+        ``min(a-1, len(ladder)-1)``; an empty ladder retries unchanged.
+        """
+        if not self.degrade_ladder:
+            return req.spec, req.degraded_to
+        entry = self.degrade_ladder[min(attempt - 1,
+                                        len(self.degrade_ladder) - 1)]
+        if isinstance(entry, SamplerSpec):
+            return entry, f"spec:{entry.name}/{entry.n_steps}"
+        if entry == "tau0":
+            return req.spec.replace(tau=0.0, program=None), "tau0"
+        if self._tiers is None:
+            raise ValueError(
+                f"degrade ladder names tier {entry!r} but the engine "
+                "has no QualityTiers to resolve it")
+        return self._tiers.resolve(entry), entry
+
+    def _fail(self, req: Request, err, *, numerics: bool) -> list:
+        """Retry (bounded, degraded, backed off) or emit a failure."""
+        if req.attempt < self.max_retries:
+            self._stats["retries"] += 1
+            attempt = req.attempt + 1
+            spec, rung = self._degrade(req, attempt)
+            # numerics failures retry immediately (a fresh fold_in
+            # subkey / degraded spec is the fix); host-side faults back
+            # off exponentially to ride out transient breakage
+            not_before = 0.0 if numerics else \
+                time.monotonic() + self.retry_backoff * (2 ** req.attempt)
+            retry = dataclasses.replace(
+                req, spec=spec, attempt=attempt, not_before=not_before,
+                degraded_to=rung)
+            dl = float("inf") if retry.deadline is None \
+                else float(retry.deadline)
+            self._pending.append(
+                ((-int(retry.priority), dl, self._seq), retry))
+            self._seq += 1
+            return []
+        status = "failed_numerics" if numerics else "failed"
+        self._stats[status] += 1
+        return [self._emit(self._make_result(
+            rid=req.rid, x0=None, status=status,
+            attempts=req.attempt + 1, degraded_to=req.degraded_to,
+            error=f"{type(err).__name__}: {err}"))]
 
     def _new_batch(self, req: Request) -> RunningBatch:
         key = bucket_key(req)
@@ -198,7 +313,8 @@ class ContinuousBatcher:
                            stream=self.stream, model_key=self.model_key)
         arrays = fns.adapter.arrays(plan)
         carry = fresh_carry(plan, self.lanes, req.shape, req.dtype,
-                            cond=req.cond, model_fn=self.model_fn)
+                            cond=req.cond, model_fn=self.model_fn,
+                            guard_every=self.guard_interval)
         if not fns.warmed:
             fns.warm(arrays, carry, cond=req.cond)
             self._stats["warmups"] += 1
@@ -216,8 +332,11 @@ class ContinuousBatcher:
         solve streams are pure in the rid, and the per-step key split
         matches what the whole-solve executor does internally — so a
         request's bytes are independent of lane, batch, and scheduler.
-        The rid is a traced argument (one compile per geometry, reused
-        across every join and batch churn)."""
+        The rid and retry attempt are traced arguments (one compile per
+        geometry, reused across every join, batch churn, and retry).
+        Attempt 0 is bitwise the base stream; a retry folds its attempt
+        count in for a fresh subkey (the stream that just failed is
+        never replayed)."""
         dkey = (req.shape, req.dtype, batch.M, batch.scale)
         fn = self._derive.get(dkey)
         if fn is None:
@@ -225,18 +344,22 @@ class ContinuousBatcher:
             scale, M = batch.scale, batch.M
             nb, sb = self._noise_base, self._solve_base
 
-            def derive(rid):
-                noise_key = jax.random.fold_in(nb, rid)
-                x_T = scale * jax.random.normal(noise_key, shape, dtype)
-                keys = jax.random.split(jax.random.fold_in(sb, rid), M)
-                return x_T, keys
+            def derive(rid, attempt):
+                retry = attempt > 0
+                nk = jax.random.fold_in(nb, rid)
+                nk = jnp.where(retry, jax.random.fold_in(nk, attempt), nk)
+                sk = jax.random.fold_in(sb, rid)
+                sk = jnp.where(retry, jax.random.fold_in(sk, attempt), sk)
+                x_T = scale * jax.random.normal(nk, shape, dtype)
+                return x_T, jax.random.split(sk, M)
 
             fn = self._derive[dkey] = jax.jit(derive)
         return fn
 
     def _join(self, batch: RunningBatch, lane: int, req: Request) -> None:
         spec = batch.key[0]
-        x_T, keys = self._derive_fn(batch, req)(np.int32(req.rid))
+        x_T, keys = self._derive_fn(batch, req)(np.int32(req.rid),
+                                                np.int32(req.attempt))
         min_i = req.min_steps
         if min_i is None:
             min_i = max(int(spec.predictor_order),
@@ -244,68 +367,116 @@ class ContinuousBatcher:
         batch.carry = batch.fns.join(
             batch.arrays, batch.carry, lane, x_T, keys,
             float(req.early_exit_tol), int(min_i),
-            float(req.guidance_scale), cond=req.cond)
+            float(req.guidance_scale), guard=self.guard_interval,
+            cond=req.cond)
         batch.requests[lane] = req
         batch.previews[lane] = []
         self._stats["joins"] += 1
 
     def _admit(self) -> list:
-        """Priority-ordered admission: shed expired, fill free lanes,
-        open new batches for whatever has no lane. Returns shed results."""
+        """Priority-ordered admission: shed expired, hold quarantined /
+        backed-off retries, fill free lanes, open new batches for
+        whatever has no lane. A request whose bucket fails to build or
+        warm (e.g. a raising model fn at trace time) fails alone — the
+        other buckets' work is untouched. Returns shed/failed results."""
         if not self._pending:
             return []
         now = time.monotonic()
         self._pending.sort(key=lambda e: e[0])
-        shed = []
-        for sort_key, req in self._pending:
+        shed_deadlines = self._shed_deadlines
+        self._shed_deadlines = False
+        results, held = [], []
+        # snapshot: _fail() re-enqueues retries onto self._pending, and
+        # those must wait for the NEXT admission pass (backoff aside,
+        # re-admitting a failing request in the same pass would loop)
+        queue, self._pending = self._pending, []
+        for sort_key, req in queue:
             if req.deadline is not None and now > float(req.deadline):
                 self._stats["shed"] += 1
-                shed.append(self._emit(self._make_result(
+                results.append(self._emit(self._make_result(
                     rid=req.rid, x0=None, status="shed")))
                 continue
+            if shed_deadlines and req.deadline is not None:
+                # straggler watchdog fired: deadline-bearing work can't
+                # meet its SLO behind a slow tick — shed it now instead
+                # of letting it expire in the queue
+                self._stats["shed"] += 1
+                self._stats["straggler_sheds"] += 1
+                results.append(self._emit(self._make_result(
+                    rid=req.rid, x0=None, status="shed")))
+                continue
+            label = self._label_of(req)
+            if req.not_before > now or self._quarantined(label, now):
+                held.append((sort_key, req))
+                continue
             key = bucket_key(req)
-            lane_home = None
-            for b in self._batches:
-                if b.key == key:
-                    free = b.free_lanes()
-                    if free:
-                        lane_home = (b, free[0])
-                        break
-            if lane_home is None:
-                b = self._new_batch(req)
-                lane_home = (b, 0)
-            self._join(lane_home[0], lane_home[1], req)
-        self._pending = []
-        return shed
+            try:
+                lane_home = None
+                for b in self._batches:
+                    if b.key == key:
+                        free = b.free_lanes()
+                        if free:
+                            lane_home = (b, free[0])
+                            break
+                if lane_home is None:
+                    b = self._new_batch(req)
+                    lane_home = (b, 0)
+                self._join(lane_home[0], lane_home[1], req)
+            except Exception as err:
+                self._note_failure(label)
+                results.extend(self._fail(req, err, numerics=False))
+        self._pending.extend(held)
+        return results
 
     def _harvest(self, batch: RunningBatch, aux) -> list:
-        """Collect finished lanes after one step; frees them in place."""
+        """Collect finished + guard-tripped lanes after one step; frees
+        them in place."""
         # one host round-trip per tick: the flags and step indices come
-        # back together (each device_get is a sync barrier on the tick)
+        # back together (each device_get is a sync barrier on the tick);
+        # the numerical-guard trips ride the same fetch
         flags = jax.device_get(
-            {k: aux[k] for k in ("finished", "stepped", "i")})
-        fin, stepped = flags["finished"], flags["stepped"]
+            {k: aux[k] for k in ("finished", "stepped", "failed", "i")})
+        fin, stepped, bad = (flags["finished"], flags["stepped"],
+                             flags["failed"])
         if self.stream:
             for lane, req in enumerate(batch.requests):
                 if req is not None and stepped[lane]:
                     batch.previews[lane].append(aux["x0"][lane])
-        if not fin.any():
+        if not fin.any() and not bad.any():
             return []
         steps = flags["i"]
+        label = bucket_label(batch.key)
         results = []
         for lane, req in enumerate(batch.requests):
-            if req is None or not fin[lane]:
+            if req is None:
+                continue
+            if bad[lane]:
+                # in-graph guard tripped: the lane was already masked
+                # out; free it and retry/fail the request
+                self._note_failure(label)
+                results.extend(self._fail(
+                    req, ArithmeticError(
+                        f"non-finite state at step {int(steps[lane])}"),
+                    numerics=True))
+                batch.requests[lane] = None
+                batch.previews[lane] = []
+                continue
+            if not fin[lane]:
                 continue
             previews = None
             if self.stream:
                 previews = jnp.stack(batch.previews[lane])
+            if req.degraded_to is not None:
+                self._stats["degraded"] += 1
             results.append(self._emit(self._make_result(
                 rid=req.rid, x0=batch.carry["x_final"][lane],
                 previews=previews, status="ok",
-                n_steps=int(steps[lane]))))
+                n_steps=int(steps[lane]), attempts=req.attempt + 1,
+                degraded_to=req.degraded_to)))
             batch.requests[lane] = None
             batch.previews[lane] = []
             self._stats["completed"] += 1
+            self._note_success(label)
         return results
 
     def _merge(self) -> None:
@@ -342,11 +513,30 @@ class ContinuousBatcher:
             self._batches = [b for b in self._batches if b not in retired]
             self._rr = 0
 
+    def _contain(self, batch: RunningBatch, err: Exception) -> list:
+        """One bucket's tick raised: fail ONLY that batch's in-flight
+        requests (retry path included) and drop the batch — its carry
+        may hold a poisoned dispatch. The compiled step functions stay
+        cached, so a post-quarantine probe re-warms nothing."""
+        label = bucket_label(batch.key)
+        self._note_failure(label)
+        results = []
+        for req in batch.requests:
+            if req is not None:
+                results.extend(self._fail(req, err, numerics=False))
+        self._batches.remove(batch)
+        self._rr = 0
+        return results
+
     # ------------------------------------------------------------ serving
     def tick(self) -> list:
         """One scheduler tick: admit, advance one batch, harvest, merge.
 
-        Returns the results completed this tick (possibly empty).
+        Per-tick execution is containment-wrapped: an exception (model
+        fault, injected failure, runtime error surfacing at the tick's
+        sync barrier) fails only the stepped batch's requests; every
+        other batch and the pending queue are untouched. Returns the
+        results completed this tick (possibly empty).
         """
         t0 = time.perf_counter()
         results = self._admit()
@@ -357,21 +547,44 @@ class ContinuousBatcher:
         batch = self._batches[self._rr]
         self._rr += 1
         n_active = batch.n_active
-        batch.carry, aux = batch.fns.step(batch.arrays, batch.carry)
-        self._stats["ticks"] += 1
-        evals = batch.fns.adapter.evals_per_tick * n_active
-        self._stats["model_evals"] += evals
-        self._stats["network_evals"] += evals * self._network_factor
-        bs = self._bucket_stats(batch.key)
-        bs["ticks"] += 1
-        bs["lane_steps"] += batch.lanes
-        bs["active_lane_steps"] += n_active
-        bs["wasted_lane_steps"] += batch.lanes - n_active
-        results.extend(self._harvest(batch, aux))
+        tick_no = self._stats["ticks"]
+        try:
+            if self._inject is not None:
+                self._inject.on_tick(tick_no, batch)
+            batch.carry, aux = batch.fns.step(batch.arrays, batch.carry)
+            self._stats["ticks"] += 1
+            evals = batch.fns.adapter.evals_per_tick * n_active
+            self._stats["model_evals"] += evals
+            self._stats["network_evals"] += evals * self._network_factor
+            bs = self._bucket_stats(batch.key)
+            bs["ticks"] += 1
+            bs["lane_steps"] += batch.lanes
+            bs["active_lane_steps"] += n_active
+            bs["wasted_lane_steps"] += batch.lanes - n_active
+            results.extend(self._harvest(batch, aux))
+        except Exception as err:
+            results.extend(self._contain(batch, err))
         if results or self._pending:
             self._merge()
-        self._stats["serve_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._stats["serve_s"] += dt
+        # watchdog: injected latency, a straggling device, or a slow
+        # host all show up as a per-tick wall-time outlier
+        if self.watchdog.observe(tick_no, dt) and self.shed_on_straggler:
+            self._shed_deadlines = True
         return results
+
+    def _next_wake(self) -> float:
+        """Earliest monotonic time any held pending request becomes
+        admittable (backoff expiry or quarantine lift); inf if none."""
+        wake = float("inf")
+        for _, req in self._pending:
+            w = req.not_before
+            until = self._quarantine.get(self._label_of(req))
+            if until is not None:
+                w = max(w, until)
+            wake = min(wake, w)
+        return wake
 
     def run(self) -> list:
         """Drain pending + running work; results in completion order."""
@@ -379,9 +592,19 @@ class ContinuousBatcher:
         while self._pending or self._batches:
             got = self.tick()
             out.extend(got)
-            if not got and not self._batches and self._pending:
-                # only shed-able work left and _admit dropped it all
+            if got or self._batches:
+                continue
+            if not self._pending:
                 break
+            # pending-only: everything is backed off or quarantined —
+            # sleep until the earliest becomes admittable instead of
+            # spinning (quarantine cooldowns are wall-clock)
+            wake = self._next_wake()
+            if wake == float("inf"):
+                break
+            wait = wake - time.monotonic()
+            if wait > 0:
+                time.sleep(min(wait, 0.05))
         return out
 
     # -------------------------------------------------------------- stats
@@ -398,4 +621,32 @@ class ContinuousBatcher:
             buckets[label] = b
         s["buckets"] = buckets
         s["stepwise_cache"] = stepwise_cache_stats()
+        s["callback_error_messages"] = list(self._callback_errs)
+        s["straggler_events"] = len(self.watchdog.events)
         return s
+
+    def health(self) -> dict:
+        """Machine-readable health snapshot (no device sync)."""
+        now = time.monotonic()
+        quarantined = {label: round(until - now, 6)
+                       for label, until in self._quarantine.items()
+                       if until > now}
+        s = self._stats
+        return {
+            "status": "degraded" if quarantined else "ok",
+            "scheduler": "step",
+            "pending": len(self._pending),
+            "active": self.active(),
+            "running_batches": len(self._batches),
+            "quarantined": quarantined,
+            "consecutive_failures": dict(self._fail_streak),
+            "completed": s["completed"],
+            "failed": s["failed"],
+            "failed_numerics": s["failed_numerics"],
+            "retries": s["retries"],
+            "degraded_results": s["degraded"],
+            "shed": s["shed"],
+            "quarantines": s["quarantines"],
+            "callback_errors": s["callback_errors"],
+            "straggler_events": len(self.watchdog.events),
+        }

@@ -50,11 +50,14 @@ from typing import Any, Callable, Hashable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.denoiser import Denoiser
 from ..core.samplers import (SamplerSpec, build_plan, compile_cache_stats,
                              sample_batched, sample_sharded, warmup)
-from .batching import MicroBatch, Request, fold_keys, form_microbatches
+from ..runtime import StragglerMonitor
+from .batching import (MicroBatch, Request, bucket_key, fold_keys,
+                       form_microbatches, retry_fold)
 from .continuous import ContinuousBatcher, bucket_label
 from .sharding import align_bucket_sizes, data_axis_size
 from .tiers import QualityTiers, default_tiers
@@ -72,12 +75,26 @@ class ServeResult:
     #: only), in per-request step order — under the step scheduler an
     #: early-exited lane carries fewer rows than the full solve
     previews: jnp.ndarray | None = None
-    #: "ok" | "shed" (deadline expired before the request got a lane;
-    #: step scheduler only — x0 is None then)
+    #: terminal status — x0 is None for everything but "ok":
+    #: - "ok": served (possibly on a degraded retry; see degraded_to)
+    #: - "shed": deadline expired before the request got a lane (step
+    #:   scheduler only)
+    #: - "failed_numerics": the per-lane numerical guard tripped
+    #:   (non-finite state) and retries were exhausted
+    #: - "failed": a host-side fault (model exception, injected failure)
+    #:   outlived the retry budget
     status: str = "ok"
     #: solver steps actually run (step scheduler; None under "solve",
     #: where every request runs its spec's full step count)
     n_steps: int | None = None
+    #: serve attempts consumed (1 = first try succeeded; retries add 1
+    #: each, so a result that failed after 2 retries reports 3)
+    attempts: int = 1
+    #: degradation-ladder rung the final attempt ran at (a tier name,
+    #: "tau0", or "spec:name/steps"); None when served undegraded
+    degraded_to: str | None = None
+    #: last error string for failed results; None on success
+    error: str | None = None
 
 
 class ServeEngine:
@@ -112,6 +129,37 @@ class ServeEngine:
             ``submit(..., quality_tier=...)``; defaults to
             :func:`~repro.serve.tiers.default_tiers`. Load an autotuned
             ladder with ``QualityTiers.from_artifact(path)``.
+        max_retries: serve attempts beyond the first for a failed
+            request (numerical-guard trip or host-side fault). Each
+            retry folds its attempt count into the request's RNG
+            streams (attempt 0 is bitwise the base stream) and may run
+            degraded (see ``degrade_ladder``). 0 disables retries.
+        degrade_ladder: per-retry quality fallback — a sequence of tier
+            names (resolved through ``tiers``), the literal ``"tau0"``
+            (same spec at tau=0, the deterministic ODE limit), or
+            explicit :class:`SamplerSpec` s; attempt ``a`` runs at rung
+            ``min(a-1, len-1)``. Empty/None retries at full quality.
+        guard_interval: every N solver steps, an in-graph per-lane
+            finiteness check on the full family state (step scheduler);
+            a tripped lane is masked out and its request fails with
+            ``status="failed_numerics"`` (or retries). The interval is
+            carried as data — toggling or sweeping it never recompiles.
+            Under the solve scheduler, any non-zero value enables a
+            post-solve per-lane check on the final latent. 0 disables.
+        retry_backoff: base seconds for exponential backoff before a
+            host-fault retry (numerics retries re-enqueue immediately —
+            the fresh subkey / degraded spec is the fix, not time).
+        quarantine_after: consecutive failures of one bucket before it
+            is quarantined (its pending work held, not dropped).
+        quarantine_s: quarantine cooldown; after it elapses the next
+            request through is the probe.
+        watchdog: a :class:`repro.runtime.StragglerMonitor` observing
+            per-tick (step scheduler) / per-microbatch (solve) wall
+            times; defaults to a fresh monitor. ``shed_on_straggler``
+            makes a straggler event shed deadline-bearing pending work
+            (step scheduler only).
+        fault_injector: a :class:`repro.serve.faults.FaultInjector`
+            consulted before each dispatch — chaos testing only.
     """
 
     def __init__(self, model_fn: Callable, *,
@@ -125,7 +173,16 @@ class ServeEngine:
                  donate: bool | None = None,
                  tiers: QualityTiers | None = None,
                  scheduler: str = "solve", lanes: int = 8,
-                 max_pending: int | None = None):
+                 max_pending: int | None = None,
+                 max_retries: int = 0,
+                 degrade_ladder: Sequence | None = None,
+                 guard_interval: int = 0,
+                 retry_backoff: float = 0.05,
+                 quarantine_after: int = 3,
+                 quarantine_s: float = 1.0,
+                 watchdog: StragglerMonitor | None = None,
+                 shed_on_straggler: bool = False,
+                 fault_injector=None):
         if not bucket_sizes:
             raise ValueError("need at least one bucket size")
         if scheduler not in ("solve", "step"):
@@ -157,6 +214,17 @@ class ServeEngine:
         self.tiers = tiers if tiers is not None else default_tiers()
         self.scheduler = scheduler
         self.max_pending = max_pending
+        self.max_retries = int(max_retries)
+        self.degrade_ladder = tuple(degrade_ladder) if degrade_ladder \
+            else ()
+        self.guard_interval = int(guard_interval)
+        self.retry_backoff = float(retry_backoff)
+        self.quarantine_after = int(quarantine_after)
+        self.quarantine_s = float(quarantine_s)
+        self.watchdog = watchdog if watchdog is not None \
+            else StragglerMonitor()
+        self.shed_on_straggler = shed_on_straggler
+        self._inject = fault_injector
         self._noise_base = jax.random.PRNGKey(noise_seed)
         self._solve_base = jax.random.PRNGKey(solve_seed)
         self._queue: list[Request] = []
@@ -165,9 +233,14 @@ class ServeEngine:
         self._stats = {
             "requests": 0, "microbatches": 0, "padded_slots": 0,
             "model_evals": 0, "network_evals": 0, "warmups": 0,
-            "serve_s": 0.0,
+            "serve_s": 0.0, "completed": 0,
+            "failed": 0, "failed_numerics": 0, "retries": 0,
+            "degraded": 0, "quarantines": 0, "callback_errors": 0,
         }
         self._buckets: dict[str, dict] = {}
+        self._fail_streak: dict[str, int] = {}
+        self._quarantine: dict[str, float] = {}
+        self._callback_errs: list[str] = []
         self._batcher = None
         if scheduler == "step":
             self._batcher = ContinuousBatcher(
@@ -175,7 +248,17 @@ class ServeEngine:
                 on_result=on_result, model_key=model_key,
                 noise_seed=noise_seed, solve_seed=solve_seed,
                 max_pending=max_pending,
-                result_factory=ServeResult)
+                result_factory=ServeResult,
+                max_retries=self.max_retries,
+                degrade_ladder=self.degrade_ladder,
+                tiers=self.tiers,
+                guard_interval=self.guard_interval,
+                retry_backoff=self.retry_backoff,
+                quarantine_after=self.quarantine_after,
+                quarantine_s=self.quarantine_s,
+                watchdog=self.watchdog,
+                shed_on_straggler=shed_on_straggler,
+                fault_injector=fault_injector)
 
     # ------------------------------------------------------------- intake
     def submit(self, spec: SamplerSpec | None, shape: Sequence[int],
@@ -250,6 +333,106 @@ class ServeEngine:
             return self._batcher.pending()
         return len(self._queue)
 
+    # --------------------------------------------------- fault handling
+    # (solve scheduler; the step scheduler's ContinuousBatcher carries
+    # its own copy of this state so containment is per-scheduler-tick)
+    def _emit(self, res: ServeResult) -> ServeResult:
+        if self.on_result is not None:
+            try:
+                self.on_result(res)
+            except Exception as e:  # a user callback must not lose
+                self._stats["callback_errors"] += 1  # other results
+                self._callback_errs.append(repr(e))
+                del self._callback_errs[:-8]
+        return res
+
+    def _quarantined(self, label: str, now: float) -> bool:
+        until = self._quarantine.get(label)
+        if until is None:
+            return False
+        if now >= until:  # cooldown elapsed: allow a probe
+            del self._quarantine[label]
+            return False
+        return True
+
+    def _note_failure(self, label: str) -> None:
+        n = self._fail_streak.get(label, 0) + 1
+        self._fail_streak[label] = n
+        if n >= self.quarantine_after:
+            self._quarantine[label] = time.monotonic() + self.quarantine_s
+            self._fail_streak[label] = 0
+            self._stats["quarantines"] += 1
+
+    def _note_success(self, label: str) -> None:
+        self._fail_streak.pop(label, None)
+
+    def _degrade(self, req: Request, attempt: int):
+        if not self.degrade_ladder:
+            return req.spec, req.degraded_to
+        entry = self.degrade_ladder[min(attempt - 1,
+                                        len(self.degrade_ladder) - 1)]
+        if isinstance(entry, SamplerSpec):
+            return entry, f"spec:{entry.name}/{entry.n_steps}"
+        if entry == "tau0":
+            return req.spec.replace(tau=0.0, program=None), "tau0"
+        return self.tiers.resolve(entry), entry
+
+    def _fail(self, req: Request, err, *, numerics: bool) -> list:
+        """Retry (bounded, degraded, backed off) or emit a failure."""
+        if req.attempt < self.max_retries:
+            self._stats["retries"] += 1
+            attempt = req.attempt + 1
+            spec, rung = self._degrade(req, attempt)
+            not_before = 0.0 if numerics else \
+                time.monotonic() + self.retry_backoff * (2 ** req.attempt)
+            self._queue.append(dataclasses.replace(
+                req, spec=spec, attempt=attempt, not_before=not_before,
+                degraded_to=rung))
+            return []
+        status = "failed_numerics" if numerics else "failed"
+        self._stats[status] += 1
+        return [self._emit(ServeResult(
+            rid=req.rid, x0=None, status=status,
+            attempts=req.attempt + 1, degraded_to=req.degraded_to,
+            error=f"{type(err).__name__}: {err}"))]
+
+    def _eligible(self) -> tuple[list[Request], list[Request]]:
+        """Split the queue into (servable now, held) — held requests are
+        backed off or their bucket is quarantined."""
+        now = time.monotonic()
+        ok, held = [], []
+        for r in self._queue:
+            label = bucket_label(bucket_key(r))
+            if r.not_before > now or self._quarantined(label, now):
+                held.append(r)
+            else:
+                ok.append(r)
+        return ok, held
+
+    def _next_wake(self) -> float:
+        wake = float("inf")
+        for r in self._queue:
+            w = r.not_before
+            until = self._quarantine.get(bucket_label(bucket_key(r)))
+            if until is not None:
+                w = max(w, until)
+            wake = min(wake, w)
+        return wake
+
+    def _serve_safe(self, mb: MicroBatch) -> list[ServeResult]:
+        """Containment boundary: a fault anywhere in one microbatch's
+        warmup or solve (model exception at trace time, injected
+        failure, runtime error at the sync barrier) fails ONLY this
+        bucket's requests — queue and other buckets are untouched."""
+        try:
+            return self._serve(mb)
+        except Exception as err:
+            self._note_failure(bucket_label(mb.key))
+            results = []
+            for req in mb.requests:
+                results.extend(self._fail(req, err, numerics=False))
+            return results
+
     # ------------------------------------------------------------ serving
     def warmup_bucket(self, mb: MicroBatch) -> None:
         """AOT-compile this microbatch's executor if not already warm.
@@ -282,10 +465,13 @@ class ServeEngine:
             return self._batcher.tick()
         if not self._queue:
             return []
-        mb = form_microbatches(self._queue, self.bucket_sizes)[0]
+        eligible, _ = self._eligible()
+        if not eligible:
+            return []  # everything is backed off / quarantined
+        mb = form_microbatches(eligible, self.bucket_sizes)[0]
         taken = set(id(r) for r in mb.requests)
         self._queue = [r for r in self._queue if id(r) not in taken]
-        return self._serve(mb)
+        return self._serve_safe(mb)
 
     def run(self) -> list[ServeResult]:
         """Drain the queue; results in service order (completion order
@@ -300,10 +486,20 @@ class ServeEngine:
             return self._batcher.run()
         out: list[ServeResult] = []
         while self._queue:
-            batches = form_microbatches(self._queue, self.bucket_sizes)
-            self._queue = []
-            for mb in batches:
-                out.extend(self._serve(mb))
+            eligible, held = self._eligible()
+            if not eligible:
+                # everything is backed off or quarantined — sleep until
+                # the earliest becomes admittable instead of spinning
+                wake = self._next_wake()
+                if wake == float("inf"):
+                    break
+                wait = wake - time.monotonic()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+                continue
+            self._queue = held  # retries from _serve_safe append here
+            for mb in form_microbatches(eligible, self.bucket_sizes):
+                out.extend(self._serve_safe(mb))
         return out
 
     def _serve(self, mb: MicroBatch) -> list[ServeResult]:
@@ -315,11 +511,18 @@ class ServeEngine:
 
         t0 = time.perf_counter()
         noise_keys = fold_keys(self._noise_base, rids)
+        solve_keys = fold_keys(self._solve_base, rids)
+        attempts = [r.attempt for r in mb.requests] + [0] * mb.n_padded
+        if any(attempts):  # retries draw fresh per-attempt subkeys;
+            noise_keys = retry_fold(noise_keys, attempts)  # attempt 0
+            solve_keys = retry_fold(solve_keys, attempts)  # is bitwise
         scale = spec.resolve_schedule().prior_scale(float(plan.ts[0]))
         x_T = jax.vmap(
             lambda k: scale * jax.random.normal(k, shape, dtype)
         )(noise_keys)
-        solve_keys = fold_keys(self._solve_base, rids)
+        if self._inject is not None:
+            x_T = self._inject.on_solve(self._stats["microbatches"],
+                                        mb, x_T)
         cond_b = mb.stacked_cond()
         g_scales = mb.scales()
 
@@ -341,7 +544,9 @@ class ServeEngine:
         else:
             x0, previews = out, None
         x0 = jax.block_until_ready(x0)
-        self._stats["serve_s"] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        self._stats["serve_s"] += dt
+        self.watchdog.observe(self._stats["microbatches"], dt)
 
         n_real = len(mb.requests)
         self._stats["requests"] += n_real
@@ -361,14 +566,30 @@ class ServeEngine:
         bs["active_lane_steps"] += n_real * spec.n_steps
         bs["wasted_lane_steps"] += mb.n_padded * spec.n_steps
 
+        # post-solve numerical guard (the solve scheduler has no
+        # in-graph per-step check — the whole solve is one dispatch —
+        # so any non-zero guard_interval means "check the final latent")
+        bad = np.zeros(n_real, bool)
+        if self.guard_interval and n_real:
+            flat = np.asarray(x0[:n_real], np.float32).reshape(n_real, -1)
+            bad = ~np.isfinite(flat).all(axis=1)
+
         results = []
         for lane, req in enumerate(mb.requests):  # pad lanes dropped here
-            res = ServeResult(
+            if bad[lane]:
+                self._note_failure(label)
+                results.extend(self._fail(
+                    req, ArithmeticError("non-finite final latent"),
+                    numerics=True))
+                continue
+            if req.degraded_to is not None:
+                self._stats["degraded"] += 1
+            results.append(self._emit(ServeResult(
                 rid=req.rid, x0=x0[lane],
-                previews=previews[lane] if previews is not None else None)
-            if self.on_result is not None:
-                self.on_result(res)
-            results.append(res)
+                previews=previews[lane] if previews is not None else None,
+                attempts=req.attempt + 1, degraded_to=req.degraded_to)))
+            self._stats["completed"] += 1
+            self._note_success(label)
         return results
 
     # -------------------------------------------------------------- stats
@@ -394,6 +615,8 @@ class ServeEngine:
             s["compile_cache"] = compile_cache_stats()
             return s
         s = dict(self._stats)
+        s["callback_error_messages"] = list(self._callback_errs)
+        s["straggler_events"] = len(self.watchdog.events)
         dt = s["serve_s"]
         s["requests_per_s"] = s["requests"] / dt if dt > 0 else 0.0
         s["model_evals_per_s"] = s["model_evals"] / dt if dt > 0 else 0.0
@@ -407,3 +630,34 @@ class ServeEngine:
         s["buckets"] = buckets
         s["compile_cache"] = compile_cache_stats()
         return s
+
+    def health(self) -> dict:
+        """Machine-readable health snapshot — no device sync, cheap
+        enough for a poll loop. ``status`` is "degraded" while any
+        bucket is quarantined, else "ok"; ``quarantined`` maps bucket
+        labels to seconds of cooldown remaining."""
+        if self._batcher is not None:
+            return self._batcher.health()
+        now = time.monotonic()
+        quarantined = {lbl: round(until - now, 6)
+                       for lbl, until in self._quarantine.items()
+                       if until > now}
+        s = self._stats
+        return {
+            "status": "degraded" if quarantined else "ok",
+            "scheduler": "solve",
+            "pending": len(self._queue),
+            "active": 0,  # solve dispatches are synchronous
+            "running_batches": 0,
+            "quarantined": quarantined,
+            "consecutive_failures": dict(self._fail_streak),
+            "completed": s["completed"],
+            "failed": s["failed"],
+            "failed_numerics": s["failed_numerics"],
+            "retries": s["retries"],
+            "degraded_results": s["degraded"],
+            "shed": 0,
+            "quarantines": s["quarantines"],
+            "callback_errors": s["callback_errors"],
+            "straggler_events": len(self.watchdog.events),
+        }
