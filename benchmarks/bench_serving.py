@@ -17,6 +17,13 @@ Reports (CSV-ish tables, matching benchmarks/common.py style):
   misses and zero retraces: tau lives in the traced coefficient tables,
   so re-planning cannot re-compile. This is the guard against silently
   regressing to retrace-per-batch.
+- **heterogeneous multi-tenant mix** — three tenants in ONE engine:
+  SA-Solver on DiT-style ``(seq, dz)`` token latents,
+  SEEDS on musicgen_large-shaped long-sequence audio latents (declared
+  ``prediction="data"`` — the x0 backbone is converted to eps in-graph),
+  and DPM-Solver++ on stacked-frame ``(frames, seq, dz)`` video latents
+  through a rank-flattening model view. Per-bucket occupancy and
+  wasted-lane columns, plus the same zero-new-miss second pass.
 
 ``--devices`` must be handled before jax imports, so heavy imports live
 inside main().
@@ -149,6 +156,61 @@ def main(argv=None):
             "serving hot path regressed to retrace-per-batch")
         assert after["hits"] > warmed["hits"]
         print("smoke OK: zero compile-cache misses after warmup")
+
+    # ------------------------------ heterogeneous multi-tenant traffic
+    def hetero_model_fn(x, t):
+        # stacked-frame video latents (frames, seq, dz): flatten frames
+        # into the token axis for the backbone, restore the rank after
+        # (rank is static at trace time, so this costs nothing per step)
+        if x.ndim == 3:
+            f, s, d = x.shape
+            return model_fn(x.reshape(f * s, d), t).reshape(f, s, d)
+        return model_fn(x, t)
+
+    hetero_nfe = 6
+    dz = cfg.denoiser_latent
+    tenants = [
+        ("sa", shape, {"tau": 0.7}),                    # DiT tokens
+        ("seeds", (6 * seq, dz),                        # musicgen-like
+         {"tau": 0.7, "prediction": "data"}),           # long sequence
+        ("dpmpp_multistep", (4, seq, dz), {}),          # video frames
+    ]
+    clear_compile_cache()
+    engine = ServeEngine(hetero_model_fn, bucket_sizes=(1, 2, 4),
+                         model_key=("bench-hetero", cfg.name))
+
+    def submit_mix():
+        for i in range(n_req):
+            fam, shp, kw = tenants[i % len(tenants)]
+            engine.submit(SamplerSpec.from_nfe(
+                fam, hetero_nfe, schedule=schedule, **kw), shp)
+
+    submit_mix()
+    engine.run()                      # cold pass warms every bucket
+    warmed = compile_cache_stats()
+    submit_mix()
+    t0 = time.perf_counter()
+    res = engine.run()
+    dt = time.perf_counter() - t0
+    assert len(res) == n_req
+    after = compile_cache_stats()
+    s = engine.stats()
+    rows = [[lbl, f"{b['occupancy']:.2f}", b["wasted_lane_steps"]]
+            for lbl, b in sorted(s["buckets"].items())]
+    print_table(
+        f"heterogeneous multi-tenant mix ({n_req} requests, 3 families x "
+        f"3 latent shapes, NFE={hetero_nfe}, {n_req / dt:.1f} req/s warm)",
+        ["bucket", "occupancy", "wasted-lane-steps"], rows)
+    hetero_misses = after["misses"] - warmed["misses"]
+    print(f"new misses across second heterogeneous pass: {hetero_misses}")
+    if args.smoke:
+        assert hetero_misses == 0, (
+            f"heterogeneous re-pass re-compiled ({hetero_misses} new "
+            "misses) — family/shape mixing broke bucket reuse")
+        families = {lbl.split("/")[0] for lbl in s["buckets"]}
+        assert families == {"sa", "seeds", "dpmpp_multistep"}, families
+        print("smoke OK: mixed-family mixed-shape engine reuses every "
+              "bucket executable")
 
 
 def run():

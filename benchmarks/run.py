@@ -40,6 +40,8 @@ SECTIONS = [
     ("guidance", "denoiser adapter: CFG scale sweep + cache contract"),
     ("e2e_dit", "end-to-end DiT sampling: bf16 fused ring HBM, sharded "
      "CFG, feature caching"),
+    ("families", "solver families: quality vs NFE per registry family "
+     "on the GMM oracle"),
 ]
 
 DEFAULT_JSON = os.path.join(

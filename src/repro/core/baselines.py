@@ -1,27 +1,23 @@
 """Baseline samplers the paper compares SA-Solver against (§6.4).
 
 .. deprecated::
-    These free functions are thin shims over the unified plan/execute
-    registry (``repro.core.samplers``) — each builds the family's plan for
-    the given explicit grid and runs the shared jitted executor. New code
-    should use ``make_sampler(name, ...)`` directly.
+    Pure re-export: the legacy free functions live with their families in
+    ``repro.core.samplers.baselines`` (one import surface, no duplicate
+    shim code path). Each is a thin wrapper over the unified plan/execute
+    registry — new code should use ``make_sampler(name, ...)`` directly.
 
 All baselines share the legacy signature
 
     sampler(model_fn, x_T, key, schedule, ts, **kw) -> x_0
 
 where ``ts`` is a decreasing float64 grid (from ``timestep_grid``) and
-``model_fn(x, t)`` is a *data-prediction* model. Host-side per-interval
-constants are precomputed in float64 and shipped as f32 device arrays,
-mirroring the SA-Solver implementation so microbenchmarks compare like
-with like.
+``model_fn(x, t)`` is a *data-prediction* model.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from .schedules import NoiseSchedule
+from .samplers.baselines import (ddim, ddpm_ancestral, dpm_solver_pp_2m,
+                                 edm_heun, edm_stochastic, euler_maruyama)
 
 __all__ = [
     "ddim",
@@ -31,50 +27,3 @@ __all__ = [
     "edm_heun",
     "edm_stochastic",
 ]
-
-
-def _run(name: str, model_fn, x_T, key, schedule: NoiseSchedule, ts, **spec_kw):
-    from .samplers import SamplerSpec, build_plan, sample
-
-    ts = np.asarray(ts, dtype=np.float64)
-    spec = SamplerSpec(
-        name=name, schedule=schedule, n_steps=len(ts) - 1,
-        ts=tuple(float(t) for t in ts), **spec_kw)
-    return sample(build_plan(spec), model_fn, x_T, key)
-
-
-def ddim(model_fn, x_T, key, schedule, ts, eta: float = 0.0):
-    """DDIM-eta (Eq. 19), generalized (alpha, sigma) form."""
-    return _run("ddim", model_fn, x_T, key, schedule, ts, eta=eta)
-
-
-def dpm_solver_pp_2m(model_fn, x_T, key, schedule, ts):
-    """DPM-Solver++(2M), data prediction, deterministic (official multistep
-    second-order update; first step is DDIM)."""
-    return _run("dpm_solver_pp_2m", model_fn, x_T, key, schedule, ts)
-
-
-def euler_maruyama(model_fn, x_T, key, schedule, ts, tau: float = 1.0):
-    """Euler-Maruyama on the variance-controlled SDE (Eq. 9) in lambda-time."""
-    return _run("euler_maruyama", model_fn, x_T, key, schedule, ts, tau=tau)
-
-
-def ddpm_ancestral(model_fn, x_T, key, schedule, ts):
-    """Ancestral (posterior) sampling == DDIM with eta = 1."""
-    return _run("ddpm_ancestral", model_fn, x_T, key, schedule, ts)
-
-
-def edm_heun(model_fn, x_T, key, schedule, ts):
-    """EDM deterministic Heun (2nd order) in the scaled space."""
-    return _run("edm_heun", model_fn, x_T, key, schedule, ts)
-
-
-def edm_stochastic(
-    model_fn, x_T, key, schedule, ts,
-    s_churn: float = 40.0, s_tmin: float = 0.05, s_tmax: float = 50.0,
-    s_noise: float = 1.003,
-):
-    """EDM stochastic sampler (Karras Alg. 2) adapted to the scaled space."""
-    return _run("edm_stochastic", model_fn, x_T, key, schedule, ts,
-                s_churn=s_churn, s_tmin=s_tmin, s_tmax=s_tmax,
-                s_noise=s_noise)

@@ -48,7 +48,11 @@ import numpy as np
 from .schedules import NoiseSchedule
 from .tau import ConstantTau, TauSchedule
 
-__all__ = ["SolverTables", "build_tables", "exp_monomial_integrals", "lagrange_coeff_matrix"]
+__all__ = [
+    "IntervalContext", "SATableBuilder", "SolverTables", "TableBuilder",
+    "build_tables", "exp_monomial_integrals", "lagrange_coeff_matrix",
+    "newton_exp_row",
+]
 
 
 def exp_monomial_integrals(a: float, h: float, k_max: int) -> np.ndarray:
@@ -98,6 +102,142 @@ def lagrange_coeff_matrix(nodes: np.ndarray) -> np.ndarray:
         # np.poly returns highest-degree first -> reverse to u^m order
         C[j, : n] = poly[::-1]
     return C
+
+
+def newton_exp_row(nodes: np.ndarray, h: float, a: float) -> np.ndarray:
+    """``Int_{-h}^0 e^{a u} l_j(u) du`` over the Lagrange basis on ``nodes``.
+
+    Same integrals as ``lagrange_coeff_matrix(nodes) @
+    exp_monomial_integrals(a, h, n-1)`` but reduced through the *Newton*
+    (divided-difference) form of the interpolant instead of the monomial
+    expansion of each basis polynomial: the interpolant is ``p(u) = sum_k
+    f[v_0..v_k] prod_{m<k}(u - v_m)`` and the coefficient of ``f(v_j)``
+    in ``Int w p`` is ``sum_{k>=j} N_k / prod_{m<=k, m!=j}(v_j - v_m)``
+    with ``N_k = Int_{-h}^0 e^{a u} prod_{m<k}(u - v_m) du``. The SEEDS /
+    DPM-Solver++ table builders use this path, so the cross-family limit
+    tests exercise the coefficient math through two independent
+    polynomial-basis reductions.
+    """
+    nodes = np.asarray(nodes, dtype=np.float64)
+    n = len(nodes)
+    I = exp_monomial_integrals(a, h, n - 1)
+    b = np.zeros(n, dtype=np.float64)
+    for k in range(n):
+        # prod_{m<k} (u - v_m) expanded to monomials (np.poly is
+        # highest-degree-first; reverse to pair with I's u^m order)
+        pk = np.poly(nodes[:k]) if k else np.array([1.0])
+        N_k = float(pk[::-1] @ I[: k + 1])
+        for j in range(k + 1):
+            w = 1.0
+            for m in range(k + 1):
+                if m != j:
+                    w /= nodes[j] - nodes[m]
+            b[j] += w * N_k
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class IntervalContext:
+    """Host-side view of one grid interval ``t_i -> t_{i+1}`` (float64).
+
+    Handed to a :class:`TableBuilder` for every interval; builders read the
+    grid geometry from here and return plain floats/arrays, so the shared
+    :func:`build_tables` loop owns warm-up clamping, ``width=`` flooring and
+    table padding for every family.
+    """
+
+    i: int
+    lams: np.ndarray    # full grid log-SNRs (M+1,)
+    alphas: np.ndarray  # schedule alpha on the grid (M+1,)
+    sigmas: np.ndarray  # schedule sigma on the grid (M+1,)
+    tau: float          # this interval's tau (already through map_taus)
+
+    @property
+    def h(self) -> float:
+        """Log-SNR step ``lambda_{i+1} - lambda_i > 0``."""
+        return float(self.lams[self.i + 1] - self.lams[self.i])
+
+    @property
+    def alpha_next(self) -> float:
+        return float(self.alphas[self.i + 1])
+
+    @property
+    def sigma_next(self) -> float:
+        return float(self.sigmas[self.i + 1])
+
+
+class TableBuilder:
+    """Per-family coefficient rule: turns grid intervals into table rows.
+
+    A solver family built on the multistep core is *only* this object — the
+    generic ring-buffer scan executor (``core/samplers/multistep.py``)
+    consumes whatever rows/scalars the builder emits as plan data. Subclass
+    contract:
+
+    - ``parameterization``: which prediction convention the rows weight
+      ("data" or "noise") — the executor uses it for the x0 trajectory
+      hook and the final-denoise step, and the model adapter uses it to
+      convert network outputs.
+    - ``map_taus(taus)``: family-level tau semantics. Identity by default;
+      a deterministic family maps everything to 0 (it *is* the ODE limit).
+    - ``decay_noise(ctx)``: ``(decay_i, noise_i)`` — coefficient of the
+      carried state and std-dev of the injected Gaussian for interval i.
+    - ``row(ctx, order, include_new)``: length-``order`` (+1 when
+      ``include_new``) coefficient row for the newest-first history nodes;
+      with ``include_new`` entry 0 weights the predicted-point eval
+      (corrector row).
+
+    The warm-up ramp (effective order ``min(i+1, requested)``), step-program
+    track resolution, and padding to the shared buffer width R are handled
+    by :func:`build_tables` and are identical across families.
+    """
+
+    parameterization: str = "data"
+
+    def map_taus(self, taus: np.ndarray) -> np.ndarray:
+        return taus
+
+    def decay_noise(self, ctx: IntervalContext) -> tuple[float, float]:
+        raise NotImplementedError
+
+    def row(self, ctx: IntervalContext, order: int, include_new: bool) -> np.ndarray:
+        raise NotImplementedError
+
+
+class SATableBuilder(TableBuilder):
+    """SA-Solver rows (paper Eqs. 14-18): the default family.
+
+    Reproduces the historical ``build_tables`` op sequence exactly — f64
+    host tables are byte-identical to the pre-refactor builder.
+    """
+
+    def __init__(self, parameterization: str = "data"):
+        if parameterization not in ("data", "noise"):
+            raise ValueError(parameterization)
+        self.parameterization = parameterization
+
+    def decay_noise(self, ctx: IntervalContext) -> tuple[float, float]:
+        i = ctx.i
+        h = ctx.lams[i + 1] - ctx.lams[i]
+        t2 = ctx.tau ** 2
+        if self.parameterization == "data":
+            decay = (ctx.sigmas[i + 1] / ctx.sigmas[i]) * math.exp(-t2 * h)
+            noise = ctx.sigmas[i + 1] * math.sqrt(
+                max(-math.expm1(-2.0 * t2 * h), 0.0))
+        else:
+            # Prop A.1: decay alpha ratio (no tau damping); Ito variance
+            # sigma_next^2 * 2 tau^2 * (e^{2h} - 1)/2 ... see module docstring
+            decay = ctx.alphas[i + 1] / ctx.alphas[i]
+            j0 = (math.exp(2.0 * h) - 1.0) / 2.0 if h > 0 else 0.0
+            noise = ctx.sigmas[i + 1] * math.sqrt(max(2.0 * t2 * j0, 0.0))
+        return decay, noise
+
+    def row(self, ctx: IntervalContext, order: int, include_new: bool) -> np.ndarray:
+        return _interval_coeffs(
+            ctx.lams, ctx.i, order, ctx.tau,
+            ctx.alphas[ctx.i + 1], ctx.sigmas[ctx.i + 1],
+            self.parameterization, include_new=include_new,
+        )
 
 
 @dataclasses.dataclass
@@ -192,6 +332,7 @@ def build_tables(
     corrector_order: int = 0,
     parameterization: str = "data",
     program=None,
+    builder: TableBuilder | None = None,
 ) -> SolverTables:
     """Precompute all per-step solver constants for the grid ``ts``.
 
@@ -207,9 +348,15 @@ def build_tables(
     the executor. Requested orders are clamped to the same warm-up ramp;
     a program that pins constant order/tau produces byte-identical tables
     to the fixed arguments it shadows.
+
+    ``builder`` selects the solver family's coefficient rule
+    (:class:`TableBuilder`); the default is :class:`SATableBuilder` with the
+    given ``parameterization``. When a builder is passed, its own
+    ``parameterization`` attribute wins and the argument is ignored.
     """
-    if parameterization not in ("data", "noise"):
-        raise ValueError(parameterization)
+    if builder is None:
+        builder = SATableBuilder(parameterization)
+    parameterization = builder.parameterization
     ts = np.asarray(ts, dtype=np.float64)
     M = len(ts) - 1
     lams = schedule.lam(ts)
@@ -235,6 +382,7 @@ def build_tables(
         R = max(P, Cn, 1)  # buffer rows: both tables padded to this width
     if len(taus) != M:
         raise ValueError("tau schedule returned wrong length")
+    taus = builder.map_taus(np.asarray(taus, dtype=np.float64))
 
     decay = np.zeros(M)
     noise = np.zeros(M)
@@ -245,33 +393,18 @@ def build_tables(
     c_eff = np.zeros(M, dtype=int)
 
     for i in range(M):
-        h = lams[i + 1] - lams[i]
-        t2 = taus[i] ** 2
-        if parameterization == "data":
-            decay[i] = (sigmas[i + 1] / sigmas[i]) * math.exp(-t2 * h)
-            noise[i] = sigmas[i + 1] * math.sqrt(max(-math.expm1(-2.0 * t2 * h), 0.0))
-        else:
-            # Prop A.1: decay alpha ratio (no tau damping); Ito variance
-            # sigma_next^2 * 2 tau^2 * (e^{2h} - 1)/2 ... see module docstring
-            decay[i] = alphas[i + 1] / alphas[i]
-            j0 = (math.exp(2.0 * h) - 1.0) / 2.0 if h > 0 else 0.0
-            noise[i] = sigmas[i + 1] * math.sqrt(max(2.0 * t2 * j0, 0.0))
+        ctx = IntervalContext(
+            i=i, lams=lams, alphas=alphas, sigmas=sigmas, tau=taus[i])
+        decay[i], noise[i] = builder.decay_noise(ctx)
 
         p_ord = min(i + 1, max(1, int(p_req[i])))
         p_eff[i] = p_ord
-        bp = _interval_coeffs(
-            lams, i, p_ord, taus[i], alphas[i + 1], sigmas[i + 1],
-            parameterization, include_new=False,
-        )
-        pred[i, :p_ord] = bp
+        pred[i, :p_ord] = builder.row(ctx, p_ord, include_new=False)
 
         if c_req[i] > 0:
             c_ord = min(i + 1, int(c_req[i]))
             c_eff[i] = c_ord
-            bc = _interval_coeffs(
-                lams, i, c_ord, taus[i], alphas[i + 1], sigmas[i + 1],
-                parameterization, include_new=True,
-            )
+            bc = builder.row(ctx, c_ord, include_new=True)
             corr_new[i] = bc[0]
             corr[i, :c_ord] = bc[1:]
 

@@ -5,11 +5,14 @@
     s = samplers.make_sampler("sa", nfe=20, tau=0.4)   # or any baseline
     x0 = s.sample(model_fn, s.init_noise(k0, (4096, 2)), k1)
 
-One registry covers SA-Solver ("sa") and the paper's six baselines
-("ddim", "ddpm_ancestral", "dpm_solver_pp_2m", "euler_maruyama",
-"edm_heun", "edm_stochastic"); ``list_samplers()`` enumerates them. See
-``base`` for the spec -> plan -> execute protocol and the compile cache,
-``sa`` / ``baselines`` for the families.
+One registry covers the three multistep-core families ("sa", "seeds",
+"dpmpp_multistep" — see ``multistep`` for the shared ring-buffer
+executor and ``coefficients.TableBuilder`` for adding another) and the
+paper's six baselines ("ddim", "ddpm_ancestral", "dpm_solver_pp_2m",
+"euler_maruyama", "edm_heun", "edm_stochastic"); ``list_samplers()``
+enumerates them. See ``base`` for the spec -> plan -> execute protocol
+and the compile cache, ``sa`` / ``seeds`` / ``dpmpp`` / ``baselines``
+for the families.
 """
 
 from ..denoiser import (Denoiser, canonical_prediction, convert_prediction,
@@ -35,8 +38,10 @@ from .base import (
 
 # importing the family modules registers them
 from . import sa as _sa_family  # noqa: F401
+from . import seeds as _seeds_family  # noqa: F401
+from . import dpmpp as _dpmpp_family  # noqa: F401
 from . import baselines as _baseline_families  # noqa: F401
-from .sa import tables_to_arrays
+from .multistep import make_multistep_family, tables_to_arrays
 from .stepwise import (
     StepAdapter,
     StepFns,
@@ -68,6 +73,7 @@ __all__ = [
     "sample",
     "sample_batched",
     "sample_sharded",
+    "make_multistep_family",
     "tables_to_arrays",
     "warmup",
     "StepAdapter",

@@ -176,7 +176,8 @@ class SamplerSpec:
     #: doubled-lane network eval per model call (requires a Denoiser).
     guidance: bool = False
     #: DeepCache-style step-to-step feature caching (requires a Denoiser
-    #: built with ``cached=``; SA family, ring history). ``None`` = off;
+    #: built with ``cached=``; a family with ``supports_feature_cache`` —
+    #: the multistep core — and ring history). ``None`` = off;
     #: an int ``k`` refreshes the deep feature segment every k-th solver
     #: step (interval policy); ``("residual", thresh)`` refreshes when the
     #: previous step's free PECE predictor-vs-corrector residual meets
@@ -274,6 +275,18 @@ class SamplerFamily:
     #: spec -> repro.core.samplers.stepwise.StepAdapter, or None when the
     #: family has no step-granular executor (whole-solve scan only)
     stepwise: Callable | None = None
+    #: whether the family's executors dispatch the Denoiser's cached
+    #: (split-segment) eval — spec.feature_cache is rejected otherwise
+    #: (the knob would be silently inert)
+    supports_feature_cache: bool = False
+    #: whether the family consumes FULL step programs (per-interval order
+    #: and mode tracks, not just the tau track). True for families on the
+    #: multistep core; the baselines only honor program tau tracks.
+    full_programs: bool = False
+    #: whether tau is definitionally inert for this family (a
+    #: deterministic family maps every tau to 0) — lets the autotuner and
+    #: tier ladders skip tau moves instead of sweeping a no-op axis
+    tau_inert: bool = False
 
 
 _REGISTRY: dict[str, SamplerFamily] = {}
@@ -536,11 +549,12 @@ def _check_model(plan: SamplerPlan, model_fn, cond, guidance_scale):
                 "conditioning requires a Denoiser model; a plain "
                 "model_fn(x, t) has no cond input")
     if spec.feature_cache is not None:
-        if spec.name != "sa":
+        if not get_family(spec.name).supports_feature_cache:
             raise ValueError(
-                "feature_cache is only supported by the 'sa' family "
-                "(other executors never dispatch the cached eval, so the "
-                "knob would be silently inert)")
+                f"feature_cache is not supported by the {spec.name!r} "
+                "family (its executors never dispatch the cached eval, so "
+                "the knob would be silently inert); use a multistep-core "
+                "family (sa, seeds, dpmpp_multistep)")
         if not (isinstance(model_fn, Denoiser)
                 and model_fn.cached is not None):
             raise ValueError(

@@ -53,7 +53,10 @@ from .stepwise import StepAdapter
 __all__ = ["plan_ddim", "execute_ddim", "plan_dpmpp2m", "execute_dpmpp2m",
            "plan_euler_maruyama", "execute_euler_maruyama",
            "plan_edm_heun", "execute_edm_heun",
-           "plan_edm_stochastic", "execute_edm_stochastic"]
+           "plan_edm_stochastic", "execute_edm_stochastic",
+           # legacy free-function surface (repro.core.baselines re-exports)
+           "ddim", "dpm_solver_pp_2m", "euler_maruyama", "ddpm_ancestral",
+           "edm_heun", "edm_stochastic"]
 
 
 def _base_consts(schedule, ts: np.ndarray) -> dict:
@@ -594,3 +597,56 @@ _register_simple("edm_stochastic", plan_edm_stochastic,
                  execute_edm_stochastic, steps_from_nfe=_steps_heun,
                  nfe_per_step=2, statics=_edm_stochastic_statics,
                  stepwise=_stepwise_edm_stochastic)
+
+
+# ------------------------------------------- legacy free-function surface
+# The paper-comparison shims (§6.4) that used to live in
+# ``repro.core.baselines``; that module is now a pure re-export of these.
+# Each builds the family's plan for the given explicit grid and runs the
+# shared jitted executor, so they stay bitwise-equal to make_sampler.
+
+def _run_legacy(name: str, model_fn, x_T, key, schedule, ts, **spec_kw):
+    from .base import build_plan, sample
+    ts = np.asarray(ts, dtype=np.float64)
+    spec = SamplerSpec(
+        name=name, schedule=schedule, n_steps=len(ts) - 1,
+        ts=tuple(float(t) for t in ts), **spec_kw)
+    return sample(build_plan(spec), model_fn, x_T, key)
+
+
+def ddim(model_fn, x_T, key, schedule, ts, eta: float = 0.0):
+    """DDIM-eta (Eq. 19), generalized (alpha, sigma) form."""
+    return _run_legacy("ddim", model_fn, x_T, key, schedule, ts, eta=eta)
+
+
+def dpm_solver_pp_2m(model_fn, x_T, key, schedule, ts):
+    """DPM-Solver++(2M), data prediction, deterministic (official multistep
+    second-order update; first step is DDIM)."""
+    return _run_legacy("dpm_solver_pp_2m", model_fn, x_T, key, schedule, ts)
+
+
+def euler_maruyama(model_fn, x_T, key, schedule, ts, tau: float = 1.0):
+    """Euler-Maruyama on the variance-controlled SDE (Eq. 9) in lambda-time."""
+    return _run_legacy("euler_maruyama", model_fn, x_T, key, schedule, ts,
+                       tau=tau)
+
+
+def ddpm_ancestral(model_fn, x_T, key, schedule, ts):
+    """Ancestral (posterior) sampling == DDIM with eta = 1."""
+    return _run_legacy("ddpm_ancestral", model_fn, x_T, key, schedule, ts)
+
+
+def edm_heun(model_fn, x_T, key, schedule, ts):
+    """EDM deterministic Heun (2nd order) in the scaled space."""
+    return _run_legacy("edm_heun", model_fn, x_T, key, schedule, ts)
+
+
+def edm_stochastic(
+    model_fn, x_T, key, schedule, ts,
+    s_churn: float = 40.0, s_tmin: float = 0.05, s_tmax: float = 50.0,
+    s_noise: float = 1.003,
+):
+    """EDM stochastic sampler (Karras Alg. 2) adapted to the scaled space."""
+    return _run_legacy("edm_stochastic", model_fn, x_T, key, schedule, ts,
+                       s_churn=s_churn, s_tmin=s_tmin, s_tmax=s_tmax,
+                       s_noise=s_noise)

@@ -1,0 +1,65 @@
+"""DPM-Solver++ multistep (2M/3M) as a deterministic table rule.
+
+Lu et al. 2022 (PAPERS.md) solve the probability-flow ODE in the
+*data*-prediction convention with exponential multistep updates. The
+SA-Solver paper notes its own tau=0 limit degenerates to exactly this
+integrator, so the family is the multistep core with:
+
+- decay ``sigma_{i+1}/sigma_i`` (the tau=0 data-convention decay),
+- predictor/corrector rows ``alpha_{i+1} Int_{-h}^0 e^{u} l_j(u) du``
+  over the newest-first log-SNR history nodes,
+- a noise track that is identically ZERO — every tau (``spec.tau`` and
+  program tau tracks alike) is mapped to 0 by :meth:`map_taus`, because
+  the family IS the ODE limit (``tau_inert=True`` tells the autotuner
+  and tier ladders not to sweep the dead axis).
+
+``predictor_order`` 2/3 are the 2M/3M variants. Note this is the *exact
+exponential-Adams* (phi-function) form of DPM-Solver++ — at order 2 the
+second-row coefficient is ``b_1 = -alpha_{i+1} (h + e^{-h} - 1)/h_prev``
+— whereas the official DPM-Solver++ 2M release uses the first-order
+Taylor split ``alpha(1 - e^{-h})(1 + h/(2 h_p))`` / ``-alpha(1 -
+e^{-h}) h/(2 h_p)``, which differs at O(h^3). The Taylor variant is kept
+as the ``dpm_solver_pp_2m`` baseline family; THIS family matches SA's
+tau=0 degenerate case to float64 round-off (cross-checked through the
+independent Newton-basis reduction in ``tests/test_families.py``), which
+is what makes the tight-tolerance limit tests meaningful.
+
+Everything else — step programs (order/mode tracks stay live; tau tracks
+are inert by definition), PEC/PECE correctors, the stepwise join/copy
+protocol, feature caching, quality tiers, the autotuner — is inherited
+from :mod:`repro.core.samplers.multistep` unchanged.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..coefficients import IntervalContext, TableBuilder, newton_exp_row
+from .multistep import make_multistep_family
+
+__all__ = ["DPMppTableBuilder", "FAMILY"]
+
+
+class DPMppTableBuilder(TableBuilder):
+    parameterization = "data"
+
+    def map_taus(self, taus: np.ndarray) -> np.ndarray:
+        # the family IS the tau=0 ODE limit: every requested tau (spec
+        # field or program track) collapses to 0, so the noise track is
+        # identically zero and sweeps along tau are definitionally no-ops
+        return np.zeros_like(taus)
+
+    def decay_noise(self, ctx: IntervalContext) -> tuple[float, float]:
+        return ctx.sigmas[ctx.i + 1] / ctx.sigmas[ctx.i], 0.0
+
+    def row(self, ctx: IntervalContext, order: int,
+            include_new: bool) -> np.ndarray:
+        lam_next = ctx.lams[ctx.i + 1]
+        nodes = [0.0] if include_new else []
+        nodes.extend(ctx.lams[ctx.i - j] - lam_next for j in range(order))
+        return ctx.alpha_next * newton_exp_row(
+            np.asarray(nodes), ctx.h, 1.0)
+
+
+FAMILY = make_multistep_family(
+    "dpmpp_multistep", lambda spec: DPMppTableBuilder(), tau_inert=True)

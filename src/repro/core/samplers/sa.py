@@ -1,730 +1,64 @@
-"""SA-Solver (paper Algorithm 1) on the plan/execute protocol.
+"""SA-Solver (paper Algorithm 1) on the multistep-integrator core.
 
-The plan phase runs ``coefficients.build_tables`` (host float64 — the
-exponentially-weighted Adams coefficients cancel at O(h^s) and must not be
-computed in f32) and ships the tables as f32 device arrays. The executor
-is a single ``lax.scan``; the legacy ``repro.core.solver.sample`` entry
-point is a shim over it, so the two paths are bitwise identical by
-construction.
+The plan/statics/executor/stepwise machinery that used to live here was
+factored verbatim into :mod:`repro.core.samplers.multistep` (see its
+docstring for history layouts, combine modes, the precision policy, step
+programs, and the statics contract) — SA is now just the default
+:class:`repro.core.coefficients.SATableBuilder` rule registered through
+that core. The factoring is behavior-preserving by construction: the
+compile caches key on ``(spec.name, statics, ...)``, the statics tuple is
+built by the same code, and the tables come from the same host-f64
+builder, so the f32 ring path stays bitwise-identical to the
+pre-refactor executor and shares its compile-cache entries.
 
-History layouts (``spec.history``):
+What is SA-specific:
 
-- ``"ring"`` (default): the [P, *latent] evaluation history lives in a
-  fixed ring — age-j sits in slot ``(i - j) mod P`` at step i — and the
-  new evaluation lands with ONE ``dynamic_update_index`` row write. The
-  seed layout instead re-materialized the whole buffer twice per step
-  (``jnp.concatenate([e_new[None], buf[:-1]])`` for the shift plus
-  ``jnp.concatenate([e_new[None], buf])`` for the corrector row):
-  2P rows written + read per step that the ring never touches. For the
-  ``einsum``/``kernel`` combines the P rows are gathered newest-first
-  before the combine, so the f32 ring path is *bitwise identical* to the
-  seed executor (same values through the same reduction). That gather is
-  the compatibility compromise: when XLA materializes the stacked rows
-  instead of fusing them into the combine (the CPU backend does), it
-  gives back the shift savings and then some — ``bench_hotpath.py``
-  records ring-einsum at +12.5% bytes-accessed vs concat under XLA's
-  accounting (+2.3% per-step trip-aware), though still faster in wall
-  time. The byte *reduction* is delivered by ``combine="fused"``, which
-  rotates the [P] coefficient *columns* by the ring head — the [P, N]
-  data is never gathered or rotated — and is equivalent at tight f32
-  tolerance.
-- ``"concat"``: the seed layout, kept as the regression/benchmark
-  baseline (``benchmarks/bench_hotpath.py`` measures one against the
-  other).
+- the coefficient rule (exponentially-weighted Adams rows, paper
+  Eqs. 14-18, tau-damped decay + matching Ito variance);
+- ``spec.parameterization`` selects the prediction convention ("data" or
+  "noise") directly — the other families pin theirs;
+- ``spec.tau`` / program tau tracks are live stochasticity controls
+  (tau=0 is the deterministic ODE limit — the exponential-Adams
+  DPM-Solver++ variant, see the ``dpmpp_multistep`` family).
 
-Combine modes (``spec.combine``):
-
-- ``"einsum"``: single XLA contraction (seed behaviour).
-- ``"kernel"``: the Pallas ``sa_update`` kernel, interpret-mode on CPU.
-- ``"fused"``: the dual-output ``sa_fused_update`` op — predictor and
-  corrector partial sums in ONE pass over x/xi/buffer, so the post-eval
-  corrector touches only ``e_new`` (roughly halves per-step solver HBM
-  bytes for PEC-with-corrector). Ring history only. Dispatches through
-  ``kernels.ops`` (compiled Mosaic on TPU, one-contraction jnp oracle on
-  CPU).
-
-Precision policy (``spec.precision``): ``"f32"`` (default) or ``"bf16"``
-— the scan state and history buffer are carried (and the model is fed) in
-bf16 while every combine accumulates in f32 and the coefficient tables
-stay f32. At f32 the policy casts are dtype-identities, so the default
-path stays bitwise-stable; bf16 halves the hot loop's HBM bytes at ~1e-2
-tolerance.
-
-Step programs (``spec.program``, a
-:class:`repro.core.programs.StepProgram`): per-interval (predictor order,
-corrector order, P/PEC/PECE mode, tau) tracks. Orders and taus land in
-the zero-padded coefficient tables — pure *data*, one executor per mode
-pattern — while the mode pattern itself is trace-relevant (a PECE step
-evaluates the model twice) and is baked into the statics as contiguous
-``(use_corrector, pece, length)`` segments, each run as its own
-``lax.scan`` over the shared carry. A single-segment (mode-uniform)
-program collapses to exactly the fixed-spec statics, so constant
-programs share the fixed path's compile-cache entry and are bitwise
-identical to it. Patterns that fragment into more than
-:data:`MAX_SCAN_SEGMENTS` contiguous segments (alternating P/PEC/...)
-fall back to ONE scan with the mode folded into table data and a
-``lax.cond`` gating the PECE re-eval — the statics collapse to
-``("cond",)``, so every pathological pattern at a given step count
-shares a single executor.
-
-Statics (compile-cache key): parameterization, mode structure (corrector
-on/off + PECE — or the program's segment tuple), combine mode,
-denoise_final, history layout, precision. tau, the grid, per-interval
-orders, and the coefficient values are *data*, so tau/order/program
-sweeps at a fixed step count reuse one compilation.
+The legacy names (``plan_sa``, ``execute_sa``, ``sa_statics``,
+``sa_stepwise``, ``sa_stepwise_arrays``, ``tables_to_arrays``,
+``fc_policy``, ``MAX_SCAN_SEGMENTS``) remain importable here.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ...kernels import ops
-from ...kernels.sa_update import sa_update
-from ..coefficients import SolverTables, build_tables
-from ..programs import StepProgram
-from .base import (SamplerFamily, SamplerSpec, carry_dtype,
-                   register_sampler)
-from .stepwise import StepAdapter
+from ..coefficients import SATableBuilder
+from .base import SamplerSpec
+from .multistep import (MAX_SCAN_SEGMENTS, execute_multistep, fc_policy,
+                        make_multistep_family, multistep_stepwise,
+                        multistep_stepwise_arrays, plan_multistep,
+                        multistep_statics, tables_to_arrays)
 
 __all__ = ["MAX_SCAN_SEGMENTS", "fc_policy", "plan_sa", "execute_sa",
            "tables_to_arrays", "sa_statics", "sa_stepwise",
            "sa_stepwise_arrays"]
 
-_COMBINES = ("einsum", "kernel", "fused")
-_HISTORIES = ("ring", "concat")
 
-#: a program whose mode pattern fragments into more contiguous segments
-#: than this would unroll one ``lax.scan`` per segment — pathological
-#: alternating patterns (P/PEC/P/PEC/...) would trace M scans of length 1.
-#: Beyond the cap the executor switches to ONE scan with the mode folded
-#: into table data (predictor-only steps get ``corr := pred`` rows, so the
-#: unconditional corrector combine reproduces ``x_pred``) plus a
-#: ``lax.cond`` on a per-step flag for the PECE re-eval. Every such
-#: pattern at a given step count shares that single compiled executor.
-MAX_SCAN_SEGMENTS = 4
-
-
-def _use_cond_fallback(program: StepProgram | None, n_steps: int) -> bool:
-    return (program is not None
-            and len(program.segments(n_steps)) > MAX_SCAN_SEGMENTS)
-
-
-def fc_policy(spec: SamplerSpec):
-    """Normalize ``spec.feature_cache`` to ``None``, ``("interval", k)``
-    or ``("residual", thresh)``; raises on anything else. Policy
-    parameters are plan *data* — only on/off reaches the statics."""
-    fc = spec.feature_cache
-    if fc is None:
-        return None
-    if isinstance(fc, int) and not isinstance(fc, bool):
-        if fc < 1:
-            raise ValueError(f"feature_cache interval must be >= 1, got {fc}")
-        return ("interval", int(fc))
-    if (isinstance(fc, tuple) and len(fc) == 2 and fc[0] == "residual"):
-        return ("residual", float(fc[1]))
-    raise ValueError(
-        f"feature_cache={fc!r}; expected None, an int refresh interval, "
-        "or ('residual', threshold)")
-
-
-def tables_to_arrays(tables: SolverTables) -> dict:
-    """f32 device view of the host-f64 coefficient tables."""
-    f32 = lambda a: jnp.asarray(a, dtype=jnp.float32)
-    arrays = dict(
-        ts=f32(tables.ts),
-        decay=f32(tables.decay),
-        noise=f32(tables.noise),
-        pred=f32(tables.pred),
-        corr_new=f32(tables.corr_new),
-        corr=f32(tables.corr),
-    )
-    if tables.alphas is not None:
-        arrays["alphas"] = f32(tables.alphas)
-        arrays["sigmas"] = f32(tables.sigmas)
-    return arrays
-
-
-def _check_program(spec: SamplerSpec) -> StepProgram | None:
-    if spec.program is None:
-        return None
-    if not isinstance(spec.program, StepProgram):
-        raise TypeError(
-            f"spec.program must be a StepProgram, got "
-            f"{type(spec.program).__name__} (build one with "
-            "repro.core.programs.StepProgram / program_preset / "
-            "parse_program)")
-    L = spec.program.length()
-    if L is not None and L != spec.n_steps:
-        raise ValueError(
-            f"program covers {L} intervals but the spec solves "
-            f"{spec.n_steps} steps")
-    return spec.program
+def _builder(spec: SamplerSpec) -> SATableBuilder:
+    # the executor consumes whatever spec.parameterization names — the
+    # denoiser adapter converts any wrapped network to it in-graph
+    return SATableBuilder(spec.parameterization)
 
 
 def plan_sa(spec: SamplerSpec):
-    schedule = spec.resolve_schedule()
-    ts = spec.grid_ts()
-    program = _check_program(spec)
-    tables = build_tables(
-        schedule, ts,
-        tau=spec.tau,
-        predictor_order=spec.predictor_order,
-        corrector_order=spec.corrector_order,
-        parameterization=spec.parameterization,
-        program=program,
-    )
-    arrays = tables_to_arrays(tables)
-    if _use_cond_fallback(program, spec.n_steps):
-        # single-scan fallback: fold predictor-only steps into the
-        # corrector tables — corr_new is already 0 there, and with
-        # corr := pred the unconditional corrector combine reproduces
-        # x_pred exactly, so the executor runs every step "with
-        # corrector" and only the PECE re-eval needs a per-step cond.
-        # The host-side `tables` keep the true (unfolded) rows.
-        rp = program.resolve(schedule, ts)
-        corr = np.array(tables.corr)
-        p_only = tables.c_orders == 0
-        corr[p_only] = tables.pred[p_only]
-        arrays["corr"] = jnp.asarray(corr, jnp.float32)
-        arrays["pece"] = jnp.asarray(rp.pece, jnp.bool_)
-    fc = fc_policy(spec)
-    if fc is not None:
-        M = spec.n_steps
-        if fc[0] == "interval":
-            # refresh every k-th step; the init eval (pre-scan) always
-            # refreshes, so step 0 may already reuse fresh features
-            refresh = (np.arange(M) + 1) % fc[1] == 0
-            thresh = np.inf  # the residual trigger never fires
-        else:
-            refresh = np.zeros(M, np.bool_)
-            refresh[0] = True
-            thresh = fc[1]
-        arrays["fc_refresh"] = jnp.asarray(refresh)
-        arrays["fc_thresh"] = jnp.asarray(thresh, jnp.float32)
-    return arrays, {"ts": ts, "tables": tables}
+    return plan_multistep(spec, _builder(spec))
 
 
 def sa_statics(spec: SamplerSpec) -> tuple:
-    if spec.combine not in _COMBINES:
-        raise ValueError(
-            f"combine={spec.combine!r}; expected one of {_COMBINES}")
-    if spec.history not in _HISTORIES:
-        raise ValueError(
-            f"history={spec.history!r}; expected one of {_HISTORIES}")
-    carry_dtype(spec.precision)  # validates the policy value
-    if spec.combine == "fused" and spec.history != "ring":
-        raise ValueError(
-            "combine='fused' takes the ring-buffer layout (its rotated "
-            "coefficient columns encode the ring head); use "
-            "history='ring' or a non-fused combine")
-    program = _check_program(spec)
-    if program is not None:
-        segs = program.segments(spec.n_steps)
-        if len(segs) == 1:
-            # mode-uniform program: exactly the fixed-spec statics, so it
-            # shares the fixed path's compile-cache entry (the bitwise
-            # regression lock — same executor, byte-equal tables)
-            modes = (segs[0][0], segs[0][1])
-        elif len(segs) > MAX_SCAN_SEGMENTS:
-            # pathological fragmentation: the mode pattern moves into the
-            # plan data (folded corr tables + per-step pece flags), so ALL
-            # such patterns at this step count share one executor
-            modes = ("cond",)
-        else:
-            modes = ("segments", segs)
-    else:
-        use_corrector = spec.corrector_order > 0
-        modes = (use_corrector, spec.mode == "PECE" and use_corrector)
-    fc = fc_policy(spec)
-    if fc is not None:
-        if program is not None:
-            raise ValueError(
-                "feature_cache does not compose with step programs (the "
-                "per-step cond fallback and the cached-eval dispatch "
-                "would nest); drop one of the two")
-        if spec.history != "ring":
-            raise ValueError("feature_cache requires history='ring'")
-        if fc[0] == "residual" and spec.corrector_order <= 0:
-            raise ValueError(
-                "the 'residual' feature-cache policy rides the free "
-                "predictor-vs-corrector residual — it needs "
-                "corrector_order > 0 (use an int interval otherwise)")
-    return (
-        spec.parameterization,
-        modes,
-        spec.combine,
-        spec.denoise_final and spec.parameterization == "data",
-        spec.history == "ring",
-        spec.precision,
-        fc is not None,
-    )
+    return multistep_statics(spec, spec.parameterization)
 
 
-# ------------------------------------------------- shared step-body helpers
-# The whole-solve scan executor and the step-granular adapter
-# (``sa_stepwise``) run the SAME per-step arithmetic through these
-# module-level helpers, so their parity is structural: one op sequence,
-# two loop factorings.
-
-def _draw_noise(cdt, step_key, shape):
-    """Drawn in f32 then rounded to the policy dtype: the bf16 policy
-    narrows precision but keeps the SAME noise stream as f32, so
-    precision sweeps stay pointwise comparable (at f32 the cast is an
-    identity — bitwise the seed draw)."""
-    return jax.random.normal(step_key, shape, jnp.float32).astype(cdt)
+def sa_stepwise(spec: SamplerSpec):
+    return multistep_stepwise(spec, spec.parameterization)
 
 
-def _combine_rows(combine, cdt, decay_i, x_prev, coeffs, buf, noise_i, xi):
-    """The seed combine over an age-ordered (newest-first) row stack.
-    At f32 every astype below is a dtype identity, so this is
-    bitwise-identical to the seed executor's combine."""
-    f32 = jnp.float32
-    if combine == "kernel":
-        # packed-coefficient convention: [decay, noise, b_0..b_{P-1}]
-        cvec = jnp.concatenate([decay_i[None], noise_i[None], coeffs])
-        return sa_update(x_prev, buf, xi, cvec)
-    # sum_j coeffs[j] * buf[j]  — einsum keeps it a single contraction
-    acc = jnp.einsum("p,p...->...", coeffs, buf.astype(f32))
-    return (decay_i * x_prev.astype(f32) + acc
-            + noise_i * xi.astype(f32)).astype(cdt)
+execute_sa = execute_multistep
+sa_stepwise_arrays = multistep_stepwise_arrays
 
-
-def _age_rows(buf, i, P, k=None):
-    """Newest-first history rows: age j lives in slot (i - j) mod P at
-    step i (jnp %, so the index is non-negative)."""
-    return [jax.lax.dynamic_index_in_dim(buf, (i - j) % P, axis=0,
-                                         keepdims=False)
-            for j in range(P if k is None else k)]
-
-
-def _rotated(dev, i, P, *tables_i):
-    """[len(tables_i), P+2] packed-coefficient matrix with the
-    b-columns rotated to ring positions — the data never moves."""
-    pos = (i - jnp.arange(P)) % P
-    c = jnp.zeros((len(tables_i), P + 2), jnp.float32)
-    c = c.at[:, 0].set(dev["decay"][i]).at[:, 1].set(dev["noise"][i])
-    return c.at[:, 2 + pos].set(jnp.stack(tables_i))
-
-
-def _pc_residual(x_next, x_pred):
-    """Relative-RMS predictor-vs-corrector gap — the free step-change
-    signal PEC-with-corrector already computes both states for. Drives
-    the stepwise early exit AND the 'residual' feature-cache refresh."""
-    f32 = jnp.float32
-    diff = x_next.astype(f32) - x_pred.astype(f32)
-    return jnp.sqrt(jnp.mean(diff * diff)) / (
-        jnp.sqrt(jnp.mean(x_next.astype(f32) ** 2)) + 1e-8)
-
-
-def _x0_preview(dev, parameterization, cdt, x_eval, e_new, i):
-    if parameterization == "data":
-        return e_new
-    # eps-hat -> x0-hat at t_{i+1}, reconstructed from the state the
-    # eval saw (under PEC+corrector x_next moved away from x_pred;
-    # pairing it with e_new(x_pred) made the streamed preview
-    # inconsistent — amplified by 1/alpha at early steps)
-    f32 = jnp.float32
-    return ((x_eval.astype(f32) - dev["sigmas"][i + 1]
-             * e_new.astype(f32)) / dev["alphas"][i + 1]).astype(cdt)
-
-
-def execute_sa(statics, dev, model_fn, x_T, key, trajectory: bool):
-    """Algorithm 1 as one scan per mode segment; see repro.core.solver
-    for the step math. Fixed specs and mode-uniform programs are a single
-    segment — one scan over ``arange(M)``, exactly the seed executor;
-    multi-segment programs chain scans over the shared (x, history)
-    carry, with the global step index threaded through so the ring head
-    stays consistent across segment boundaries.
-
-    Feature caching (``statics[-1]``): every model evaluation goes
-    through the Denoiser's cached companion (``model_fn.cached_call``,
-    attached by ``_bind_model``), the feature pytree and the previous
-    step's predictor-vs-corrector residual join the scan carry, and the
-    per-step refresh predicate is ``fc_refresh[i] | (prev_err >=
-    fc_thresh)`` — the planned schedule OR'd with the residual trigger
-    (inert at +inf threshold for the interval policy). PECE re-evals
-    always reuse the step's own features. With caching off the carry and
-    the traced graph are unchanged from the seed executor."""
-    (parameterization, modes, combine, denoise, ring, precision,
-     fc) = statics
-    if modes[0] == "segments":
-        segments = modes[1]  # ((use_corrector, pece, length), ...)
-    elif modes[0] == "cond":
-        # single-scan fallback: every step runs the corrector combine
-        # (predictor-only steps were folded into the tables at plan time)
-        # and pece="cond" gates the re-eval on dev["pece"][i] per step
-        segments = ((True, "cond", None),)
-    else:
-        segments = ((modes[0], modes[1], None),)  # None = all M steps
-    P = dev["pred"].shape[1]  # buffer rows = max(pred order, corr order)
-    M = dev["decay"].shape[0]
-    cdt = carry_dtype(precision)
-    f32 = jnp.float32
-
-    x = x_T.astype(cdt)
-    if fc:
-        def eval_model(x_in, t_in, feats, refresh):
-            e, feats = model_fn.cached_call(x_in, t_in, feats, refresh)
-            return e.astype(cdt), feats
-        feats0 = model_fn.init_feats(x)
-        e0, feats0 = eval_model(x, dev["ts"][0], feats0, True)
-    else:
-        def eval_model(x_in, t_in, feats, refresh):
-            return model_fn(x_in, t_in).astype(cdt), feats
-        feats0 = ()
-        e0, _ = eval_model(x, dev["ts"][0], (), True)
-    buffer = jnp.zeros((P,) + x.shape, dtype=cdt).at[0].set(e0)
-
-    def combine_rows(decay_i, x_prev, coeffs, buf, noise_i, xi):
-        return _combine_rows(combine, cdt, decay_i, x_prev, coeffs, buf,
-                             noise_i, xi)
-
-    def re_eval(pece, i, t_next, x_next, e_new, x_eval, feats):
-        """The PECE second model evaluation. ``pece`` is a static bool in
-        the scan-segment executors; ``"cond"`` (the single-scan fallback)
-        dispatches per step on the planned ``dev["pece"]`` flag array.
-        The predicate is a scalar per scan step — un-batched under vmap —
-        so the cond stays a true branch and non-PECE steps skip the
-        second evaluation entirely. Under feature caching the re-eval
-        reuses this step's features (refresh=False passes them through
-        unchanged, so the returned pytree is dropped)."""
-        def hit(_):
-            e2, _ = eval_model(x_next, t_next, feats, False)
-            return e2, x_next
-        if pece == "cond":
-            return jax.lax.cond(dev["pece"][i], hit,
-                                lambda _: (e_new, x_eval), None)
-        if pece:
-            return hit(None)
-        return e_new, x_eval
-
-    def x0_preview(x_eval, e_new, i):
-        return _x0_preview(dev, parameterization, cdt, x_eval, e_new, i)
-
-    def draw_noise(step_key, shape):
-        return _draw_noise(cdt, step_key, shape)
-
-    # ------------------------------------------------------- concat layout
-    def make_step_concat(use_corrector, pece):
-        def step_concat(carry, per_step):
-            x, buf = carry
-            (i, step_key) = per_step
-            xi = draw_noise(step_key, x.shape)
-            decay_i = dev["decay"][i]
-            noise_i = dev["noise"][i]
-            t_next = dev["ts"][i + 1]
-
-            x_pred = combine_rows(decay_i, x, dev["pred"][i], buf,
-                                  noise_i, xi)
-            e_new = model_fn(x_pred, t_next).astype(cdt)
-            x_eval = x_pred  # the state e_new was actually evaluated at
-            if use_corrector:
-                # corrector: fold the predicted-point eval in as one more
-                # row
-                coeffs = jnp.concatenate([dev["corr_new"][i][None],
-                                          dev["corr"][i]])
-                rows = jnp.concatenate([e_new[None], buf], axis=0)
-                x_next = combine_rows(decay_i, x, coeffs, rows, noise_i, xi)
-                e_new, x_eval = re_eval(pece, i, t_next, x_next,
-                                        e_new, x_eval, ())
-            else:
-                x_next = x_pred
-            buf = jnp.concatenate([e_new[None], buf[:-1]], axis=0)
-            if trajectory:
-                return (x_next, buf), {"x": x_next,
-                                       "x0": x0_preview(x_eval, e_new, i)}
-            return (x_next, buf), None
-        return step_concat
-
-    # --------------------------------------------------------- ring layout
-    def age_rows(buf, i, k):
-        return _age_rows(buf, i, P, k)
-
-    def rotated(i, *tables_i):
-        return _rotated(dev, i, P, *tables_i)
-
-    def make_step_ring(use_corrector, pece):
-        def step_ring(carry, per_step):
-            if fc:
-                x, buf, feats, prev_err = carry
-            else:
-                x, buf = carry
-                feats, prev_err = (), None
-            (i, step_key) = per_step
-            xi = draw_noise(step_key, x.shape)
-            decay_i = dev["decay"][i]
-            noise_i = dev["noise"][i]
-            t_next = dev["ts"][i + 1]
-            # refresh when the plan says so OR the last step moved enough
-            refresh = (dev["fc_refresh"][i]
-                       | (prev_err >= dev["fc_thresh"])) if fc else True
-            new_err = prev_err
-
-            if combine == "fused":
-                if use_corrector:
-                    x_pred, corr_base = ops.sa_fused_update(
-                        x, buf, xi,
-                        rotated(i, dev["pred"][i], dev["corr"][i]))
-                else:
-                    x_pred = ops.sa_update(
-                        x, buf, xi, rotated(i, dev["pred"][i])[0])
-                e_new, feats = eval_model(x_pred, t_next, feats, refresh)
-                x_eval = x_pred
-                if use_corrector:
-                    # post-eval corrector: only e_new is touched — the
-                    # history was already folded into corr_base
-                    x_next = (corr_base.astype(f32) + dev["corr_new"][i]
-                              * e_new.astype(f32)).astype(cdt)
-                    if fc:
-                        new_err = _pc_residual(x_next, x_pred)
-                    e_new, x_eval = re_eval(pece, i, t_next, x_next,
-                                            e_new, x_eval, feats)
-                else:
-                    x_next = x_pred
-            else:
-                rows = age_rows(buf, i, P)
-                x_pred = combine_rows(decay_i, x, dev["pred"][i],
-                                      jnp.stack(rows), noise_i, xi)
-                e_new, feats = eval_model(x_pred, t_next, feats, refresh)
-                x_eval = x_pred
-                if use_corrector:
-                    coeffs = jnp.concatenate([dev["corr_new"][i][None],
-                                              dev["corr"][i]])
-                    x_next = combine_rows(decay_i, x, coeffs,
-                                          jnp.stack([e_new] + rows),
-                                          noise_i, xi)
-                    if fc:
-                        new_err = _pc_residual(x_next, x_pred)
-                    e_new, x_eval = re_eval(pece, i, t_next, x_next,
-                                            e_new, x_eval, feats)
-                else:
-                    x_next = x_pred
-            # the ONE history write: e_new becomes age 0 of step i+1, in
-            # slot (i+1) mod P — overwriting age P-1, which no combine
-            # needs again
-            buf = jax.lax.dynamic_update_index_in_dim(buf, e_new,
-                                                      (i + 1) % P, axis=0)
-            out = (x_next, buf, feats, new_err) if fc else (x_next, buf)
-            if trajectory:
-                return out, {"x": x_next,
-                             "x0": x0_preview(x_eval, e_new, i)}
-            return out, None
-        return step_ring
-
-    make_step = make_step_ring if ring else make_step_concat
-    keys = jax.random.split(key, M)
-    idx = jnp.arange(M)
-    carry = (x, buffer, feats0, jnp.float32(0.0)) if fc else (x, buffer)
-    traj_parts = []
-    start = 0
-    for (use_corrector, pece, length) in segments:
-        L = M - start if length is None else length
-        carry, traj = jax.lax.scan(make_step(use_corrector, pece), carry,
-                                   (idx[start:start + L],
-                                    keys[start:start + L]))
-        traj_parts.append(traj)
-        start += L
-    if start != M:
-        raise ValueError(
-            f"mode segments cover {start} steps but the tables have {M}")
-    x, buffer = carry[0], carry[1]
-    traj = (traj_parts[0] if len(traj_parts) == 1 else jax.tree.map(
-        lambda *xs: jnp.concatenate(xs, axis=0), *traj_parts))
-
-    if denoise:
-        # newest eval: ring slot M mod P, concat row 0
-        x = buffer[M % P] if ring else buffer[0]
-    if trajectory:
-        return x, traj
-    return x
-
-
-def _sa_nfe(spec: SamplerSpec) -> int:
-    program = _check_program(spec)
-    if program is not None:
-        # 1 init eval + 1 per step + 1 more per PECE step (exact)
-        return program.nfe(spec.n_steps)
-    per_step = 2 if (spec.mode == "PECE" and spec.corrector_order > 0) else 1
-    return spec.n_steps * per_step + 1
-
-
-def _sa_steps_from_nfe(nfe: int, kw: dict) -> int:
-    program = kw.get("program")
-    if isinstance(program, StepProgram):
-        L = program.length()
-        if L is not None:
-            # explicit per-interval tracks dictate the step count; honor
-            # the "at most nfe" contract loudly instead of truncating
-            if program.nfe(L) > nfe:
-                raise ValueError(
-                    f"program spends {program.nfe(L)} evaluations over "
-                    f"its {L} intervals but the budget is nfe={nfe}")
-            return L
-        # all-scalar program: invert its uniform per-step cost
-        _, pece = program.mode_flags(1)[0]
-        return max(1, (nfe - 1) // (2 if pece else 1))
-    pece = kw.get("mode", "PEC") == "PECE" and kw.get("corrector_order", 3) > 0
-    return max(1, (nfe - 1) // (2 if pece else 1))
-
-
-# --------------------------------------------------- step-granular adapter
-
-def _sa_stepwise_modes(spec: SamplerSpec) -> tuple:
-    """Mode statics for the per-lane step function. Under vmap the step
-    index is per-lane traced data, so ANY multi-segment program collapses
-    to the cond path (the segment boundaries can't be statics when each
-    lane sits at a different step)."""
-    program = _check_program(spec)
-    if program is not None:
-        segs = program.segments(spec.n_steps)
-        if len(segs) > 1:
-            return ("cond",)
-        return (segs[0][0], segs[0][1])
-    use_corrector = spec.corrector_order > 0
-    return (use_corrector, spec.mode == "PECE" and use_corrector)
-
-
-def sa_stepwise_arrays(plan) -> dict:
-    spec = plan.spec
-    modes = _sa_stepwise_modes(spec)
-    dev = dict(plan.arrays)
-    if modes[0] != "cond":
-        return dev
-    tables = plan.host["tables"]
-    p_only = tables.c_orders == 0
-    if "pece" not in dev:
-        # <=MAX_SCAN_SEGMENTS program: plan_sa kept the segment-scan
-        # tables, so apply the same P-step fold the cond fallback uses
-        # (corr := pred where the corrector order is 0; corr_new is
-        # already 0 there, so the corrector combine reproduces x_pred)
-        corr = np.array(tables.corr)
-        corr[p_only] = tables.pred[p_only]
-        dev["corr"] = jnp.asarray(corr, jnp.float32)
-        dev["pece"] = jnp.asarray(
-            [p for (_, p) in spec.program.mode_flags(spec.n_steps)],
-            jnp.bool_)
-    # folded P-only steps report a spuriously-zero PECE residual (the
-    # corrector combine IS the predictor there) — mask them out of the
-    # early-exit signal
-    dev["ee_ok"] = jnp.asarray(~p_only, jnp.bool_)
-    return dev
-
-
-def sa_stepwise(spec: SamplerSpec) -> StepAdapter:
-    """Per-lane single-step SA: the executor above refactored from "scan
-    over steps, one solve" to "one tick, vmapped over lanes at per-lane
-    step indices". The init model eval (seed row e0) is folded in-band:
-    a lane at i=-1 runs an init tick that evaluates the model at
-    (x_T, ts[0]) via selects that are bit-transparent on real steps, so
-    the compiled shape never changes when lanes join mid-flight."""
-    base = sa_statics(spec)
-    (parameterization, _, combine, denoise, ring, precision, fc) = base
-    if not ring:
-        raise ValueError(
-            "step-granular SA needs history='ring' (the concat layout "
-            "re-materializes the buffer per step and exists only as the "
-            "seed regression baseline)")
-    modes = _sa_stepwise_modes(spec)
-    use_corrector = True if modes[0] == "cond" else modes[0]
-    pece = "cond" if modes[0] == "cond" else modes[1]
-    cdt = carry_dtype(precision)
-    f32 = jnp.float32
-
-    def init_inner(dev, x_T):
-        P = dev["pred"].shape[1]
-        x = x_T.astype(cdt)
-        return {"x": x, "buf": jnp.zeros((P,) + x.shape, cdt)}
-
-    def step(dev, model_fn, inner, ic, init, key):
-        x, buf = inner["x"], inner["buf"]
-        P = buf.shape[0]
-        xi = _draw_noise(cdt, key, x.shape)
-        decay_i = dev["decay"][ic]
-        noise_i = dev["noise"][ic]
-        t_next = dev["ts"][ic + 1]
-        rows = None
-        if combine == "fused":
-            if use_corrector:
-                x_pred, corr_base = ops.sa_fused_update(
-                    x, buf, xi,
-                    _rotated(dev, ic, P, dev["pred"][ic], dev["corr"][ic]))
-            else:
-                x_pred = ops.sa_update(
-                    x, buf, xi, _rotated(dev, ic, P, dev["pred"][ic])[0])
-        else:
-            rows = _age_rows(buf, ic, P)
-            x_pred = _combine_rows(combine, cdt, decay_i, x,
-                                   dev["pred"][ic], jnp.stack(rows),
-                                   noise_i, xi)
-        # init tick: evaluate at (x_T, ts[0]) instead — on real steps
-        # both selects pick the step-i operand bit-for-bit
-        x_in = jnp.where(init, x, x_pred)
-        t_in = jnp.where(init, dev["ts"][0], t_next)
-        e_new = model_fn(x_in, t_in).astype(cdt)
-        x_eval = x_in
-        if use_corrector:
-            if combine == "fused":
-                x_next = (corr_base.astype(f32) + dev["corr_new"][ic]
-                          * e_new.astype(f32)).astype(cdt)
-            else:
-                coeffs = jnp.concatenate([dev["corr_new"][ic][None],
-                                          dev["corr"][ic]])
-                x_next = _combine_rows(combine, cdt, decay_i, x, coeffs,
-                                       jnp.stack([e_new] + rows),
-                                       noise_i, xi)
-            # predictor-vs-corrector residual — free under PEC+corrector,
-            # computed BEFORE any PECE re-eval (relative RMS)
-            err = _pc_residual(x_next, x_pred)
-            if pece == "cond":
-                # per-lane step index -> per-lane predicate: under vmap a
-                # lax.cond lowers to select anyway, so write the select
-                # directly (2 evals/tick, reflected in evals_per_tick)
-                e2 = model_fn(x_next, t_next).astype(cdt)
-                hit = dev["pece"][ic] & ~init
-                e_new = jnp.where(hit, e2, e_new)
-                x_eval = jnp.where(hit, x_next, x_eval)
-                err = jnp.where(dev["ee_ok"][ic], err, jnp.inf)
-            elif pece:
-                e2 = model_fn(x_next, t_next).astype(cdt)
-                e_new = jnp.where(init, e_new, e2)
-                x_eval = jnp.where(init, x_eval, x_next)
-        else:
-            x_next = x_pred
-            err = jnp.float32(jnp.inf)
-        # the ONE history write; the init eval is the seed row in slot 0
-        slot = jnp.where(init, 0, (ic + 1) % P)
-        buf = jax.lax.dynamic_update_index_in_dim(buf, e_new, slot, axis=0)
-        x_out = jnp.where(init, x, x_next)
-        # denoise-final: the newest eval is this tick's e_new, so an
-        # early-exiting lane's result is already in hand
-        final = e_new if denoise else x_out
-        x0 = _x0_preview(dev, parameterization, cdt, x_eval, e_new, ic)
-        return {"x": x_out, "buf": buf}, final, x0, err
-
-    return StepAdapter(
-        statics=(parameterization, modes, combine, denoise, precision, fc),
-        i0=-1,
-        evals_per_tick=2 if pece else 1,
-        n_steps_of=lambda dev: int(dev["decay"].shape[0]),
-        init_inner=init_inner,
-        step=step,
-        arrays=sa_stepwise_arrays,
-        shape_key=lambda plan: (int(plan.arrays["pred"].shape[1]),
-                                "alphas" in plan.arrays),
-    )
-
-
-register_sampler(SamplerFamily(
-    name="sa",
-    plan=plan_sa,
-    execute=execute_sa,
-    statics=sa_statics,
-    nfe_of=_sa_nfe,
-    steps_from_nfe=_sa_steps_from_nfe,
-    # the executor consumes whatever spec.parameterization names — the
-    # denoiser adapter converts any wrapped network to it in-graph
-    model_convention=lambda spec: spec.parameterization,
-    stepwise=sa_stepwise,
-))
+FAMILY = make_multistep_family("sa", _builder)

@@ -1,0 +1,79 @@
+"""SEEDS: stochastic exponential derivative-free solvers as a table rule.
+
+Gonzalez et al. 2023 (PAPERS.md) derive exponential multistep SDE solvers
+in the *noise*-prediction convention whose per-interval update is exactly
+the multistep core's shape — decay the carried state by the alpha ratio,
+combine a short history of eps-evaluations with exponentially-weighted
+Adams rows, and inject Gaussian noise with the exact Ito variance of the
+linear SDE. The family is therefore ONLY this :class:`TableBuilder`;
+plan/execute/stepwise/serving all come from
+:mod:`repro.core.samplers.multistep`.
+
+Update rule (interval ``t_i -> t_{i+1}``, ``h = lam_{i+1} - lam_i``):
+
+    x_{i+1} = (alpha_{i+1}/alpha_i) x_i
+              - sigma_{i+1} (1 + tau^2) sum_j [Int_{-h}^0 e^{-u} l_j(u) du] eps_j
+              + sigma_{i+1} tau sqrt(e^{2h} - 1) xi
+
+with per-interval ``tau`` controlling the variance: tau=1 is the
+published SEEDS SDE (stage s = ``predictor_order`` s — SEEDS-1/2/3), and
+tau=0 drops the noise track and the rows reduce to the deterministic
+exponential integrator limit (DPM-Solver-1 at stage 1:
+``b_0 = -sigma_{i+1} (e^h - 1)``). Intermediate taus interpolate, the
+same way SA-Solver's tau does — in fact SA-Solver in noise
+parameterization IS this rule (Prop. A.1 of the paper), so the two
+families' tables agree to float64 round-off while being computed through
+different polynomial-basis reductions (Newton here, Lagrange there): a
+genuine cross-implementation check, locked in ``tests/test_families.py``.
+
+The family pins the "noise" model convention: ``spec.parameterization``
+is ignored (families read the subset of spec fields they understand) and
+the denoiser adapter converts any wrapped network to eps-hat in-graph.
+``spec.tau`` / program tau tracks, step programs, PEC/PECE correctors,
+feature caching, and both serve schedulers work unchanged.
+
+A practical note the quality-tier ladder encodes: the published SEEDS
+solvers are predictor-only. The corrector machinery is available and
+exact, but near tau=1 a high-order corrector interpolates *noisy* eps
+evaluations with O(1)-weighted alternating rows and amplifies the
+injected noise (the same reason the SA paper runs its SDE in the data
+convention) — prefer ``corrector_order=0`` at large tau, or keep the
+corrector and drop tau.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..coefficients import IntervalContext, TableBuilder, newton_exp_row
+from .multistep import make_multistep_family
+
+__all__ = ["SEEDSTableBuilder", "FAMILY"]
+
+
+class SEEDSTableBuilder(TableBuilder):
+    parameterization = "noise"
+
+    def decay_noise(self, ctx: IntervalContext) -> tuple[float, float]:
+        i = ctx.i
+        decay = ctx.alphas[i + 1] / ctx.alphas[i]
+        # exact Ito variance of the tau-SDE over the interval:
+        # sigma_{i+1}^2 * tau^2 * (e^{2h} - 1)
+        var = (ctx.tau * ctx.tau) * math.expm1(2.0 * ctx.h)
+        noise = ctx.sigma_next * math.sqrt(max(var, 0.0))
+        return decay, noise
+
+    def row(self, ctx: IntervalContext, order: int,
+            include_new: bool) -> np.ndarray:
+        lam_next = ctx.lams[ctx.i + 1]
+        nodes = [0.0] if include_new else []
+        nodes.extend(ctx.lams[ctx.i - j] - lam_next for j in range(order))
+        a_tau = 1.0 + ctx.tau * ctx.tau
+        return -ctx.sigma_next * a_tau * newton_exp_row(
+            np.asarray(nodes), ctx.h, -1.0)
+
+
+FAMILY = make_multistep_family(
+    "seeds", lambda spec: SEEDSTableBuilder())

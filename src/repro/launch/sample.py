@@ -45,7 +45,7 @@ from ..configs import get_config, get_smoke
 from ..core import Denoiser, convert_prediction, get_schedule
 from ..core.denoiser import CachedNetwork
 from ..core.programs import list_presets, parse_program
-from ..core.samplers import SamplerSpec, Sampler, list_samplers
+from ..core.samplers import SamplerSpec, Sampler, get_family, list_samplers
 from ..models import build_model, init_params
 
 
@@ -186,8 +186,12 @@ def main():
     g_scale = 1.0 if args.guidance_scale is None else args.guidance_scale
     program = None
     if args.program is not None:
-        if args.sampler != "sa":
-            raise SystemExit("--program is an SA-family feature")
+        if not get_family(args.sampler).full_programs:
+            raise SystemExit(
+                "--program needs a family that consumes full step "
+                "programs (the multistep core: sa, seeds, "
+                f"dpmpp_multistep); {args.sampler!r} only honors the "
+                "tau track")
         # presets are stamped at the largest step count whose own cost
         # (PECE steps evaluate twice) fits --nfe; an explicit JSON
         # program dictates its own step count through from_nfe, which

@@ -172,7 +172,8 @@ def serve_diffusion(args) -> None:
     tiers = None
     if args.quality_tier is not None:
         tiers = QualityTiers.from_artifact(args.tuned_artifact) \
-            if args.tuned_artifact else default_tiers(schedule=schedule)
+            if args.tuned_artifact else default_tiers(
+                family=args.tier_family, schedule=schedule)
         if adapted:  # tiers carry solver choices; serving adapter fields
             tiers = QualityTiers({  # (prediction/guidance) come from flags
                 name: dataclasses.replace(
@@ -323,7 +324,12 @@ def main():
                     "the default ladder) instead of --sampler/--nfe/--tau")
     ap.add_argument("--tuned-artifact", default=None,
                     help="repro.launch.tune JSON artifact; its searched "
-                    "winner becomes the 'best' tier")
+                    "winner becomes the 'best' tier (and its feature-"
+                    "cache winner, if recorded, the 'draft' tier)")
+    ap.add_argument("--tier-family", default="sa",
+                    help="sampler family the default tier ladder is "
+                    "built over (a multistep-core family: sa, seeds, "
+                    "dpmpp_multistep); ignored with --tuned-artifact")
     ap.add_argument("--max-retries", type=int, default=0,
                     help="serve attempts beyond the first for a failed "
                     "request (guard trip or host fault); each retry "

@@ -27,8 +27,11 @@ from ..tune import SearchConfig, run_search
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--family", default="sa",
-                    help="sampler family to tune (sa, ddim, "
-                    "ddpm_ancestral, euler_maruyama, edm_stochastic)")
+                    help="sampler family to tune: multistep-core "
+                    "families (sa, seeds, dpmpp_multistep) search full "
+                    "order/mode/tau programs; baselines (ddim, "
+                    "ddpm_ancestral, euler_maruyama, edm_stochastic) "
+                    "search the tau track only")
     ap.add_argument("--schedule", default="vp_linear")
     ap.add_argument("--nfe", type=int, default=8,
                     help="model-evaluation budget per solve")
@@ -49,6 +52,15 @@ def main():
     ap.add_argument("--cd-passes", type=int, default=2)
     ap.add_argument("--evo-population", type=int, default=12)
     ap.add_argument("--evo-generations", type=int, default=3)
+    ap.add_argument("--fc-thresholds", default=None,
+                    help="comma-separated residual feature-cache "
+                    "thresholds; enables a final search unit over the "
+                    "(tau, threshold) plane whose winner — the largest "
+                    "threshold scoring within --fc-slack of the program "
+                    "winner — lands in the artifact as best_fc")
+    ap.add_argument("--fc-slack", type=float, default=1.25,
+                    help="quality-slack factor for the feature-cache "
+                    "winner selection")
     ap.add_argument("--artifact", default=None,
                     help="JSON checkpoint path (written at every unit "
                     "boundary)")
@@ -68,6 +80,10 @@ def main():
         chunk=args.chunk, cd_passes=args.cd_passes,
         evo_population=args.evo_population,
         evo_generations=args.evo_generations,
+        fc_thresholds=(tuple(float(v) for v in
+                             args.fc_thresholds.split(","))
+                       if args.fc_thresholds else ()),
+        fc_slack=args.fc_slack,
         spec_kw={"schedule": args.schedule})
 
     result = run_search(config, artifact=args.artifact, resume=args.resume,
@@ -85,6 +101,11 @@ def main():
     print(f"best score: {result.best_score:.5f}")
     print("best program:",
           json.dumps(json.loads(result.best_program.to_json()), indent=1))
+    if result.best_fc is not None:
+        fc = result.best_fc
+        print(f"best feature-cache: thresh={fc['thresh']:g} "
+              f"tau={fc['tau']:g} score={fc['score']:.5f} "
+              f"(anchor {fc['anchor']:.5f}, slack {fc['slack']:g})")
     if args.artifact:
         print(f"artifact: {args.artifact} "
               f"({'complete' if result.done else 'resumable'})")

@@ -22,7 +22,7 @@ import dataclasses
 from typing import Mapping
 
 from ..core.programs import program_preset_for_nfe
-from ..core.samplers import SamplerSpec
+from ..core.samplers import SamplerSpec, get_family
 
 __all__ = ["QualityTiers", "default_tiers"]
 
@@ -57,34 +57,56 @@ class QualityTiers:
 
     @classmethod
     def from_artifact(cls, path: str, *, tier: str = "best",
+                      fc_tier: str | None = "draft",
                       base: "QualityTiers | None" = None,
                       **overrides) -> "QualityTiers":
-        """Load a finished search artifact's winner as a tier.
+        """Load a finished search artifact's winner(s) as tiers.
 
         The winner's spec is rebuilt exactly as the search evaluated it
         (family, NFE, spec_kw from the artifact's echoed config), so
         serving the tier reproduces the searched program bitwise;
         ``overrides`` adjust serving-only fields (e.g. ``combine``,
-        ``precision``). The remaining tiers come from ``base`` (default:
-        :func:`default_tiers` built on the artifact's schedule)."""
-        from ..tune.search import load_state, spec_from_state
+        ``precision``). When the artifact also records a feature-cache
+        winner (a search run with ``fc_thresholds``), its tuned
+        residual-threshold spec becomes the ``fc_tier`` tier — the
+        cheap-eval draft rung, autotuned instead of hand-set (pass
+        ``fc_tier=None`` to skip). The remaining tiers come from
+        ``base`` (default: :func:`default_tiers` for the artifact's
+        family on the winner's schedule)."""
+        from ..tune.search import (fc_spec_from_state, load_state,
+                                   spec_from_state)
         state = load_state(path)
         spec = spec_from_state(state, **overrides)
         if base is None:
-            base = default_tiers(schedule=spec.schedule)
-        return base.with_tier(tier, spec)
+            fam = (spec.name if get_family(spec.name).full_programs
+                   else "sa")
+            base = default_tiers(family=fam, schedule=spec.schedule)
+        tiers = base.with_tier(tier, spec)
+        if fc_tier and state.get("best_fc"):
+            tiers = tiers.with_tier(fc_tier, fc_spec_from_state(state))
+        return tiers
 
 
-def default_tiers(*, schedule="vp_linear", tau: float = 1.0,
-                  feature_cache=None, **spec_kw) -> QualityTiers:
-    """The out-of-the-box draft/standard/best ladder.
+def default_tiers(*, family: str = "sa", schedule="vp_linear",
+                  tau: float = 1.0, feature_cache=None,
+                  **spec_kw) -> QualityTiers:
+    """The out-of-the-box draft/standard/best ladder, per family.
 
-    Hand-tuned presets over the SA family: ``draft`` spends 6 NFE on an
-    annealed-tau program, ``standard`` 8 NFE on the recorded ``nfe8-gmm``
-    winner shape, ``best`` 20 NFE on the same shape (corrector through
-    the coarse phase, predictor-only tail, tau annealed to 0). Override
-    ``best`` with a searched program via
+    Hand-tuned presets over any multistep-core family (``family`` must
+    have ``full_programs`` in the registry — the baselines only honor
+    tau tracks, and a ladder of inert presets would be a lie): ``draft``
+    spends 6 NFE on an annealed-tau program, ``standard`` 8 NFE on the
+    recorded ``nfe8-gmm`` winner shape, ``best`` 20 NFE on the same
+    shape (corrector through the coarse phase, predictor-only tail, tau
+    annealed to 0). Override ``best`` with a searched program via
     :meth:`QualityTiers.from_artifact`.
+
+    The ``seeds`` ladder is predictor-only (``corrector_order=0``) at
+    every rung: the published SEEDS solvers have no corrector, and at
+    large tau a high-order corrector amplifies the injected noise (see
+    ``repro.core.samplers.seeds``). For ``dpmpp_multistep`` the tau
+    tracks are inert (its builder zeroes them) and the order/mode
+    structure of the presets carries the ladder.
 
     ``feature_cache`` (an int refresh interval or ``("residual",
     thresh)``) turns the draft tier into the cheap-eval preset: draft
@@ -94,19 +116,37 @@ def default_tiers(*, schedule="vp_linear", tau: float = 1.0,
     the cached-eval dispatch). Standard/best stay uncached: the tier
     ladder then spans eval-cost as well as solver quality.
     """
-    def spec(nfe, preset):
-        return SamplerSpec.from_nfe(
-            "sa", nfe, schedule=schedule,
-            program=program_preset_for_nfe(preset, nfe, tau=tau), **spec_kw)
+    if not get_family(family).full_programs:
+        raise ValueError(
+            f"default_tiers needs a full-programs family (the multistep "
+            f"core: sa, seeds, dpmpp_multistep); {family!r} only honors "
+            "tau tracks, so the preset ladder would be inert")
 
-    if feature_cache is None:
-        draft = spec(6, "tau-anneal")
+    if family == "seeds":
+        # predictor-only ladder (see docstring); no step program — the
+        # presets' corrector segments are exactly what seeds must avoid
+        def spec(nfe):
+            return SamplerSpec.from_nfe(
+                family, nfe, schedule=schedule, tau=tau,
+                corrector_order=0, mode="PEC", **spec_kw)
+        draft, standard, best = spec(6), spec(8), spec(20)
+        if feature_cache is not None:
+            draft = draft.replace(feature_cache=feature_cache)
     else:
-        draft = SamplerSpec.from_nfe(
-            "sa", 6, schedule=schedule, tau=tau,
-            feature_cache=feature_cache, **spec_kw)
+        def spec(nfe, preset):
+            return SamplerSpec.from_nfe(
+                family, nfe, schedule=schedule,
+                program=program_preset_for_nfe(preset, nfe, tau=tau),
+                **spec_kw)
+        if feature_cache is None:
+            draft = spec(6, "tau-anneal")
+        else:
+            draft = SamplerSpec.from_nfe(
+                family, 6, schedule=schedule, tau=tau,
+                feature_cache=feature_cache, **spec_kw)
+        standard, best = spec(8, "nfe8-gmm"), spec(20, "nfe8-gmm")
     return QualityTiers({
         "draft": draft,
-        "standard": spec(8, "nfe8-gmm"),
-        "best": spec(20, "nfe8-gmm"),
+        "standard": standard,
+        "best": best,
     })

@@ -91,12 +91,15 @@ class ProgramEvaluator:
 
     def _context(self, spec: SamplerSpec):
         conv = self.family.model_convention(spec)
-        ctx = self._ctx.get(conv)
+        fc_on = spec.feature_cache is not None
+        ctx = self._ctx.get((conv, fc_on))
         if ctx is None:
-            model = self.objective.model_fn(conv, spec.resolve_schedule())
+            schedule = spec.resolve_schedule()
+            model = (self.objective.cached_model_fn(conv, schedule)
+                     if fc_on else self.objective.model_fn(conv, schedule))
             ctx = (model, self.objective.init(spec),
                    self.objective.solve_keys())
-            self._ctx[conv] = ctx
+            self._ctx[(conv, fc_on)] = ctx
         return ctx
 
     def _chunk_fn(self, statics, n_steps: int, spec: SamplerSpec):
@@ -118,19 +121,43 @@ class ProgramEvaluator:
         self.stats["compiles"] += 1
         return fn
 
+    def spec_for_fc(self, tau: float, thresh: float) -> SamplerSpec:
+        """The spec a ``(tau, threshold)`` feature-cache candidate runs
+        as: the family default order configuration in PECE mode (the
+        residual policy reads the free predictor-vs-corrector residual,
+        which only PECE produces) with ``("residual", thresh)`` caching.
+        No step program — the threshold is tuned against the family's
+        stock configuration so the artifact's fc winner composes with
+        ANY program at serve time."""
+        kw = dict(self.spec_kw)
+        kw.update(tau=float(tau), mode="PECE",
+                  feature_cache=("residual", float(thresh)))
+        return SamplerSpec.from_nfe(self.family_name, self.nfe, **kw)
+
     # ----------------------------------------------------------- evaluate
     def evaluate(self, programs: Sequence[StepProgram]) -> np.ndarray:
         """Scores aligned with ``programs`` (lower is better; NaN scores
         come back as +inf so unstable candidates lose, never win)."""
-        if not programs:
-            return np.zeros((0,), np.float64)
         specs = [self.spec_for(p) for p in programs]
+        return self._evaluate_specs(specs)
+
+    def evaluate_fc(self, cands: Sequence[tuple]) -> np.ndarray:
+        """Scores aligned with ``cands`` — ``(tau, thresh)`` pairs run
+        through the objective's ``cached_model_fn`` (prediction-reuse /
+        split-segment eval), so a loose threshold really does pay its
+        staleness cost in the score."""
+        specs = [self.spec_for_fc(tau, thresh) for tau, thresh in cands]
+        return self._evaluate_specs(specs)
+
+    def _evaluate_specs(self, specs: Sequence[SamplerSpec]) -> np.ndarray:
+        if not specs:
+            return np.zeros((0,), np.float64)
         groups: dict = {}
         for idx, spec in enumerate(specs):
             gkey = (self.family.statics(spec), spec.n_steps)
             groups.setdefault(gkey, []).append(idx)
 
-        scores = np.full(len(programs), np.inf, np.float64)
+        scores = np.full(len(specs), np.inf, np.float64)
         for (statics, n_steps), idxs in groups.items():
             fn = self._chunk_fn(statics, n_steps, specs[idxs[0]])
             for lo in range(0, len(idxs), self.chunk):
@@ -154,3 +181,9 @@ class ProgramEvaluator:
     def cost_of(self, program: StepProgram) -> int:
         """NFE-equivalents one evaluation of ``program`` will spend."""
         return self.spec_for(program).nfe * self.objective.n_seeds
+
+    def cost_of_fc(self, tau: float, thresh: float) -> int:
+        """NFE-equivalents one ``(tau, thresh)`` evaluation will spend
+        (nominal — accounted at the spec's full NFE even though the
+        cache skips model segments, so budgets stay comparable)."""
+        return self.spec_for_fc(tau, thresh).nfe * self.objective.n_seeds

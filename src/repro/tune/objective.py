@@ -57,6 +57,20 @@ class Objective:
         """The ``(x, t)`` model in the family's prediction convention."""
         raise NotImplementedError
 
+    def cached_model_fn(self, convention: str,
+                        schedule: NoiseSchedule) -> Callable:
+        """A feature-cache-capable model for scoring
+        ``feature_cache=("residual", thresh)`` candidates: a callable
+        additionally exposing ``cached_call(x, t, feats, refresh)`` and
+        ``init_feats(x)`` (the executor's cached-eval contract). Override
+        to let the residual threshold join the search space; the default
+        refuses so threshold candidates fail loudly rather than score a
+        cache-less model."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement cached_model_fn; "
+            "feature-cache threshold search needs an objective whose "
+            "model exposes the cached-eval contract")
+
     def init(self, spec: SamplerSpec) -> jnp.ndarray:  # pragma: no cover
         """``[n_seeds, *shape]`` initial states (the prior draw)."""
         raise NotImplementedError
@@ -91,6 +105,29 @@ class GMMObjective(Objective):
 
     def model_fn(self, convention: str, schedule: NoiseSchedule) -> Callable:
         return self.gmm.model_fn(schedule, convention)
+
+    def cached_model_fn(self, convention: str,
+                        schedule: NoiseSchedule) -> Callable:
+        """Prediction-reuse wrapper over the oracle: on refresh steps the
+        real model runs and its prediction is stored as the feature
+        state; on skipped steps the stored prediction is returned
+        verbatim. The oracle has no intermediate features to cache, so
+        this is the degenerate-but-faithful cache — skipping a step
+        reuses a stale prediction, which is exactly the quality/NFE
+        trade a residual threshold modulates."""
+        base = self.gmm.model_fn(schedule, convention)
+
+        def fn(x, t):
+            return base(x, t)
+
+        def cached_call(x, t, feats, refresh):
+            pred = jnp.where(refresh, base(x, t).astype(jnp.float32),
+                             feats)
+            return pred, pred
+
+        fn.cached_call = cached_call
+        fn.init_feats = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return fn
 
     def init(self, spec: SamplerSpec) -> jnp.ndarray:
         schedule = spec.resolve_schedule()

@@ -20,6 +20,21 @@ Search structure (cheap-to-expensive, mirroring what recompiles):
   (plus occasional order point-mutations), elites update mean/sigma each
   generation. This explores off-grid tau values coordinate descent's
   fixed grid cannot reach.
+- **Feature-cache unit** (when ``fc_thresholds`` is set): one final unit
+  sweeps the residual-threshold x tau plane (grid, then log-threshold
+  evolutionary refinement) against the objective's cache-capable model.
+  Quality alone is a DEGENERATE objective for a threshold — smaller is
+  always at least as good — so the winner is the *largest* threshold
+  whose score stays within ``fc_slack`` of the program winner's (the
+  anchor): the cheapest cache setting that is still quality-equivalent.
+  It lands in ``state["best_fc"]`` beside (never instead of) the
+  program winner.
+
+Family capabilities come from the registry: families without
+``full_programs`` search only the tau track, and ``tau_inert`` families
+(deterministic ODE limits like ``dpmpp_multistep``) skip tau moves
+entirely — their builders zero the tau track, so tau proposals would all
+alias one table set.
 
 Budget is quoted in **NFE-equivalents** (``spec.nfe * n_seeds`` per
 candidate); duplicate candidates are served from the eval cache and cost
@@ -42,21 +57,24 @@ from typing import Callable
 import numpy as np
 
 from ..core.programs import StepProgram, program_preset_for_nfe
-from ..core.samplers import SamplerSpec
+from ..core.samplers import SamplerSpec, get_family
 from .evaluate import ProgramEvaluator
 from .objective import GMMObjective, Objective
 
 __all__ = ["SearchConfig", "SearchResult", "default_presets", "run_search",
-           "save_state", "load_state", "best_program", "spec_from_state"]
+           "save_state", "load_state", "best_program", "spec_from_state",
+           "fc_spec_from_state"]
 
 _VERSION = 1
 
 
 def default_presets(family: str) -> tuple[str, ...]:
     """Warm-start presets (= the mode patterns the outer loop visits).
-    Tau-only families keep uniform-mode presets: their executors have no
+    Families that consume full step programs (``full_programs`` in the
+    registry — the multistep core) get the structured presets; tau-only
+    baselines keep uniform-mode presets, since their executors have no
     P/PEC/PECE structure to vary."""
-    if family == "sa":
+    if get_family(family).full_programs:
         return ("nfe8-gmm", "predictor-tail", "tau-anneal")
     return ("tau-anneal", "constant")
 
@@ -85,6 +103,15 @@ class SearchConfig:
     evo_elite: int = 4
     #: initial evo sigma (per tau coordinate)
     sigma0: float = 0.25
+    #: residual feature-cache thresholds to sweep in a final search unit;
+    #: () disables the unit (ROADMAP: the cache threshold joins the
+    #: search space alongside tau)
+    fc_thresholds: tuple[float, ...] = ()
+    #: fc winner = LARGEST threshold scoring within ``fc_slack *
+    #: anchor`` (anchor = the program winner's score) — the selection
+    #: rule that keeps a pure-quality objective from degenerating to
+    #: threshold -> 0
+    fc_slack: float = 1.25
     # objective knobs (used when no explicit objective is passed)
     n_samples: int = 512
     n_seeds: int = 4
@@ -98,6 +125,8 @@ class SearchConfig:
         object.__setattr__(self, "presets", tuple(self.presets))
         object.__setattr__(self, "tau_values",
                           tuple(float(v) for v in self.tau_values))
+        object.__setattr__(self, "fc_thresholds",
+                          tuple(float(v) for v in self.fc_thresholds))
         object.__setattr__(self, "spec_kw", dict(self.spec_kw))
 
     def resolved_presets(self) -> tuple[str, ...]:
@@ -109,7 +138,7 @@ class SearchConfig:
     @classmethod
     def from_obj(cls, obj: dict) -> "SearchConfig":
         kw = dict(obj)
-        for f in ("presets", "tau_values"):
+        for f in ("presets", "tau_values", "fc_thresholds"):
             if f in kw:
                 kw[f] = tuple(kw[f])
         return cls(**kw)
@@ -126,6 +155,9 @@ class SearchResult:
     done: bool
     #: the NFE budget ran out
     exhausted: bool
+    #: feature-cache winner ``{"tau", "thresh", "score", "anchor",
+    #: "slack"}`` from the fc unit, or None when disabled / not reached
+    best_fc: dict | None = None
 
 
 # ----------------------------------------------------------------- artifact
@@ -168,6 +200,7 @@ def _fresh_state(config: SearchConfig) -> dict:
         "budget_spent": 0,
         "history": [],
         "best": None,
+        "best_fc": None,
     }
 
 
@@ -194,9 +227,11 @@ def _explicit(program: StepProgram, evaluator: ProgramEvaluator,
 
 
 def _neighbors(prog: StepProgram, config: SearchConfig,
-               tau_only: bool) -> list[StepProgram]:
+               tau_only: bool, tau_inert: bool = False) -> list[StepProgram]:
     """All single-coordinate variants that keep the mode pattern (and
-    therefore the compiled executor) fixed."""
+    therefore the compiled executor) fixed. ``tau_inert`` families skip
+    tau proposals — their builders zero the tau track, so every grid
+    value aliases the same tables."""
     out: list[StepProgram] = []
     M = len(prog.tau)
     for i in range(M):
@@ -217,12 +252,20 @@ def _neighbors(prog: StepProgram, config: SearchConfig,
                         t = list(prog.corrector_order)
                         t[i] = v
                         out.append(prog.replace(corrector_order=tuple(t)))
+        if tau_inert:
+            continue
         for tv in config.tau_values:
             if abs(tv - prog.tau[i]) > 1e-9:
                 t = list(prog.tau)
                 t[i] = round(float(tv), 4)
                 out.append(prog.replace(tau=tuple(t)))
     return out
+
+
+def _fc_key(tau: float, thresh: float) -> str:
+    """Eval-cache key of a feature-cache candidate (the fc analogue of
+    ``StepProgram.to_json``)."""
+    return json.dumps({"fc": [round(float(tau), 6), float(thresh)]})
 
 
 class _Session:
@@ -237,11 +280,18 @@ class _Session:
             objective, family=config.family, nfe=config.nfe,
             width=config.max_order, chunk=config.chunk,
             spec_kw=config.spec_kw)
-        self.tau_only = config.family != "sa"
-        # dedup cache, rebuilt from history so resumes never re-spend
-        self.seen: dict[str, float] = {
-            StepProgram.from_json(h["program"]).to_json(): float(h["score"])
-            for h in state["history"]}
+        fam = get_family(config.family)
+        self.tau_only = not fam.full_programs
+        self.tau_inert = fam.tau_inert
+        # dedup cache, rebuilt from history so resumes never re-spend;
+        # history holds two entry kinds (program units and the fc unit)
+        self.seen: dict[str, float] = {}
+        for h in state["history"]:
+            if "fc" in h:
+                k = _fc_key(h["fc"]["tau"], h["fc"]["thresh"])
+            else:
+                k = StepProgram.from_json(h["program"]).to_json()
+            self.seen[k] = float(h["score"])
         self.exhausted = False
 
     def evaluate(self, cands: list[StepProgram]) -> list[tuple]:
@@ -278,6 +328,39 @@ class _Session:
             out.extend(zip(kept, [float(s) for s in scores]))
         return out
 
+    def evaluate_fc(self, cands: list[tuple]) -> list[tuple]:
+        """(cand, score) for ``(tau, thresh)`` candidates, budgeted and
+        deduped exactly like program candidates — fc scores go to the
+        shared history (as ``{"fc": ...}`` entries), never to
+        ``state["best"]``: the fc winner has its own slack-based rule."""
+        fresh, out = [], []
+        claimed = set()
+        for c in cands:
+            k = _fc_key(*c)
+            if k in self.seen:
+                out.append((c, self.seen[k]))
+            elif k not in claimed:
+                claimed.add(k)
+                fresh.append((k, c))
+        kept = []
+        for k, c in fresh:
+            cost = self.evaluator.cost_of_fc(*c)
+            if self.state["budget_spent"] + cost > self.config.budget:
+                self.exhausted = True
+                break
+            self.state["budget_spent"] += cost
+            kept.append((k, c))
+        if kept:
+            scores = self.evaluator.evaluate_fc([c for _, c in kept])
+            for (k, c), s in zip(kept, scores):
+                s = float(s)
+                self.seen[k] = s
+                self.state["history"].append({
+                    "fc": {"tau": float(c[0]), "thresh": float(c[1])},
+                    "score": s, "nfe": self.config.nfe})
+                out.append((c, s))
+        return out
+
     # -------------------------------------------------------------- phases
     def search_unit(self, warm: StepProgram, rng: np.random.Generator):
         config = self.config
@@ -288,7 +371,8 @@ class _Session:
         inc_score = dict((p.to_json(), s) for p, s in res)[incumbent.to_json()]
 
         for _ in range(config.cd_passes):
-            res = self.evaluate(_neighbors(incumbent, config, self.tau_only))
+            res = self.evaluate(_neighbors(incumbent, config, self.tau_only,
+                                           self.tau_inert))
             if not res:
                 break
             p, s = min(res, key=lambda r: r[1])
@@ -302,13 +386,20 @@ class _Session:
         mean = np.asarray(incumbent.tau, np.float64)
         sigma = np.full(M, config.sigma0)
         tau_hi = max(config.tau_values)
+        # tau-inert families have no tau dimension to explore: evo
+        # degenerates to order point-mutations, made unconditional so the
+        # population is not all-duplicates of the incumbent
+        mut_p = 1.0 if self.tau_inert else 0.3
         for g in range(config.evo_generations):
             pop = []
             for _ in range(config.evo_population):
-                taus = np.clip(rng.normal(mean, sigma), 0.0, tau_hi)
-                cand = incumbent.replace(
-                    tau=tuple(round(float(t), 4) for t in taus))
-                if not self.tau_only and rng.random() < 0.3:
+                if self.tau_inert:
+                    cand = incumbent
+                else:
+                    taus = np.clip(rng.normal(mean, sigma), 0.0, tau_hi)
+                    cand = incumbent.replace(
+                        tau=tuple(round(float(t), 4) for t in taus))
+                if not self.tau_only and rng.random() < mut_p:
                     i = int(rng.integers(M))
                     track = list(cand.predictor_order)
                     track[i] = int(rng.integers(1, config.max_order + 1))
@@ -327,6 +418,58 @@ class _Session:
                                 in res[:config.evo_elite]], np.float64)
             mean = elite.mean(axis=0)
             sigma = np.maximum(elite.std(axis=0), 0.02) * 0.85
+
+    def search_fc_unit(self, rng: np.random.Generator):
+        """The feature-cache unit: sweep the (tau, residual-threshold)
+        plane, refine the threshold evolutionarily in log-space, then
+        pick by the slack rule — the LARGEST threshold whose score stays
+        within ``fc_slack`` of the program winner's (pure quality is
+        degenerate for a threshold: smaller always scores at least as
+        well, so argmin would pin the cache permanently on)."""
+        config = self.config
+        taus = (0.0,) if self.tau_inert else config.tau_values
+        grid = [(round(float(t), 4), float(th))
+                for t in taus for th in config.fc_thresholds]
+        res = self.evaluate_fc(grid)
+        if not res:
+            return
+        (bt, bth), bs = min(res, key=lambda r: r[1])
+
+        tau_hi = max(config.tau_values)
+        for g in range(config.evo_generations):
+            pop = []
+            for _ in range(config.evo_population):
+                th = float(10.0 ** np.clip(
+                    rng.normal(np.log10(max(bth, 1e-12)), 0.3), -9.0, 4.0))
+                t = bt if self.tau_inert else float(np.clip(
+                    rng.normal(bt, config.sigma0), 0.0, tau_hi))
+                pop.append((round(t, 4), float(f"{th:.6g}")))
+            batch = self.evaluate_fc(pop)
+            if not batch:
+                break
+            res.extend(batch)
+            (ct, cth), cs = min(batch, key=lambda r: r[1])
+            if cs < bs:
+                (bt, bth), bs = (ct, cth), cs
+                self.log(f"  fc evo gen {g}: {cs:.5f}")
+
+        finite = [(c, s) for c, s in res if np.isfinite(s)]
+        if not finite:
+            return
+        best = self.state["best"]
+        anchor = float(best["score"]) if best else bs
+        within = [(c, s) for c, s in finite
+                  if s <= config.fc_slack * anchor]
+        if within:
+            # largest threshold first; break threshold ties on score
+            (t, th), s = max(within, key=lambda r: (r[0][1], -r[1]))
+        else:
+            (t, th), s = min(finite, key=lambda r: r[1])
+        self.state["best_fc"] = {
+            "tau": float(t), "thresh": float(th), "score": float(s),
+            "anchor": anchor, "slack": float(config.fc_slack)}
+        self.log(f"  fc winner: thresh={th:g} tau={t:g} score={s:.5f} "
+                 f"(anchor {anchor:.5f}, slack {config.fc_slack:g})")
 
 
 def run_search(config: SearchConfig | None = None, *,
@@ -369,16 +512,23 @@ def run_search(config: SearchConfig | None = None, *,
     rng.bit_generator.state = state["rng"]
 
     presets = config.resolved_presets()
+    n_units = len(presets) + (1 if config.fc_thresholds else 0)
     units_run = 0
-    while state["unit"] < len(presets):
+    while state["unit"] < n_units:
         if max_units is not None and units_run >= max_units:
             break
-        name = presets[state["unit"]]
-        warm = program_preset_for_nfe(name, config.nfe, tau=config.tau)
-        if log:
-            log(f"unit {state['unit']} [{name}] "
-                f"(budget {state['budget_spent']}/{config.budget})")
-        session.search_unit(warm, rng)
+        if state["unit"] < len(presets):
+            name = presets[state["unit"]]
+            warm = program_preset_for_nfe(name, config.nfe, tau=config.tau)
+            if log:
+                log(f"unit {state['unit']} [{name}] "
+                    f"(budget {state['budget_spent']}/{config.budget})")
+            session.search_unit(warm, rng)
+        else:
+            if log:
+                log(f"unit {state['unit']} [feature-cache] "
+                    f"(budget {state['budget_spent']}/{config.budget})")
+            session.search_fc_unit(rng)
         state["unit"] += 1
         state["rng"] = rng.bit_generator.state
         units_run += 1
@@ -393,8 +543,9 @@ def run_search(config: SearchConfig | None = None, *,
     return SearchResult(
         best_program=best_p, best_score=best_s, state=state,
         stats=dict(session.evaluator.stats),
-        done=state["unit"] >= len(presets),
-        exhausted=session.exhausted)
+        done=state["unit"] >= n_units,
+        exhausted=session.exhausted,
+        best_fc=state.get("best_fc"))
 
 
 def spec_from_state(state: dict, **overrides) -> SamplerSpec:
@@ -407,3 +558,22 @@ def spec_from_state(state: dict, **overrides) -> SamplerSpec:
     kw.update(overrides)
     return SamplerSpec.from_nfe(config.family, config.nfe, program=prog,
                                 **kw)
+
+
+def fc_spec_from_state(state: dict, **overrides) -> SamplerSpec:
+    """The serving spec of a search artifact's feature-cache winner: the
+    family's stock PECE configuration with the tuned residual threshold
+    and tau — exactly what the fc unit scored it as. Composable with a
+    program via ``overrides`` (the threshold was tuned program-free so it
+    transfers)."""
+    config = SearchConfig.from_obj(state["config"])
+    best = state.get("best_fc")
+    if not best:
+        raise ValueError(
+            "search artifact records no feature-cache winner (run with "
+            "fc_thresholds set)")
+    kw = dict(config.spec_kw)
+    kw.update(tau=float(best["tau"]), mode="PECE",
+              feature_cache=("residual", float(best["thresh"])))
+    kw.update(overrides)
+    return SamplerSpec.from_nfe(config.family, config.nfe, **kw)

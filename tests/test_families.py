@@ -1,0 +1,327 @@
+"""Cross-family contracts of the multistep integrator core.
+
+Three registered families share one generic executor and differ ONLY in
+their :class:`~repro.core.coefficients.TableBuilder` (per-interval
+coefficient rows + decay/noise scalars, all plan data):
+
+- ``sa``       — SA-Solver (Lagrange-basis reduction, data or noise);
+- ``seeds``    — SEEDS stochastic exponential solvers (Newton-basis
+                 reduction, noise convention);
+- ``dpmpp_multistep`` — DPM-Solver++ exact exponential-Adams rows (data
+                 convention, zero noise track, tau-inert).
+
+The suite locks the mathematical relationships BETWEEN the families —
+each is an independent implementation of overlapping math, so agreement
+is a genuine two-implementation check, not a tautology:
+
+- table-level: SEEDS == SA-in-noise at every tau (Prop. A.1 — Newton vs
+  Lagrange reductions of the same integrals); DPM-Solver++ == SA-in-data
+  at tau=0 (the shared ODE limit);
+- closed-form: SEEDS stage-1 rows/noise against hand-derived formulas
+  (tau=0 is DPM-Solver-1), DPM-Solver++ order-2 against the exact
+  exponential-Adams b_1;
+- update/solve-level: float64 recursions from the host tables agree to
+  round-off; full f32 solves through the registry agree bitwise (seeds
+  vs sa-noise) or to float tolerance (dpmpp vs sa tau=0);
+- serving contracts inherited for free: zero-miss compile-cache sweeps
+  over family x tau x program, stepwise join invisibility, the
+  feature-cache capability gate, and the legacy baselines re-export.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GMM, StepProgram, get_schedule
+from repro.core.coefficients import build_tables
+from repro.core.programs import program_preset_for_nfe
+from repro.core.samplers import (Sampler, SamplerSpec, build_plan,
+                                 clear_compile_cache, compile_cache_stats,
+                                 fresh_carry, get_family, make_stepfns,
+                                 sample_batched)
+from repro.core.samplers.dpmpp import DPMppTableBuilder
+from repro.core.samplers.seeds import SEEDSTableBuilder
+
+SCHED = get_schedule("vp_linear")
+GMM2 = GMM.default_2d()
+TABLE_FIELDS = ("decay", "noise", "pred", "corr_new", "corr")
+
+
+def _ts(n_steps):
+    return SamplerSpec(name="sa", schedule=SCHED,
+                       n_steps=n_steps).grid_ts()
+
+
+def _tables(builder=None, *, n_steps=8, tau=0.0, order=3, corr=None,
+            parameterization="data"):
+    return build_tables(SCHED, _ts(n_steps), tau=tau,
+                        predictor_order=order,
+                        corrector_order=order if corr is None else corr,
+                        parameterization=parameterization, builder=builder)
+
+
+# ------------------------------------------------- table-level equality
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_dpmpp_tables_equal_sa_data_tau0(order):
+    """DPM-Solver++ rows ARE SA-Solver's data-convention tables at tau=0
+    (the shared ODE limit), computed through a different polynomial
+    basis — agreement to f64 round-off, at every order."""
+    sa = _tables(None, tau=0.0, order=order, parameterization="data")
+    dp = _tables(DPMppTableBuilder(), tau=1.0, order=order)  # tau inert
+    for f in TABLE_FIELDS:
+        np.testing.assert_allclose(getattr(dp, f), getattr(sa, f),
+                                   rtol=1e-12, atol=1e-14, err_msg=f)
+    assert np.all(dp.noise == 0.0)
+
+
+@pytest.mark.parametrize("tau", [0.0, 0.7, 1.0])
+def test_seeds_tables_equal_sa_noise(tau):
+    """SEEDS == SA-Solver in the noise parameterization at every tau
+    (the paper's Prop. A.1), Newton vs Lagrange reductions."""
+    sa = _tables(None, tau=tau, parameterization="noise")
+    se = _tables(SEEDSTableBuilder(), tau=tau)
+    for f in TABLE_FIELDS:
+        np.testing.assert_allclose(getattr(se, f), getattr(sa, f),
+                                   rtol=1e-12, atol=1e-14, err_msg=f)
+
+
+# ---------------------------------------------------------- closed forms
+@pytest.mark.parametrize("tau", [0.0, 0.5, 1.0])
+def test_seeds_stage1_closed_form(tau):
+    """SEEDS stage 1 against the hand-derived interval update:
+    decay = alpha'/alpha, b_0 = -sigma' (1+tau^2)(e^h - 1), noise =
+    sigma' tau sqrt(e^{2h} - 1). tau=0 is exactly DPM-Solver-1."""
+    t = _tables(SEEDSTableBuilder(), tau=tau, order=1, corr=0)
+    for i in range(len(t.decay)):
+        h = t.lams[i + 1] - t.lams[i]
+        a1, s1 = t.alphas[i + 1], t.sigmas[i + 1]
+        assert t.decay[i] == pytest.approx(a1 / t.alphas[i], rel=1e-13)
+        assert t.pred[i, 0] == pytest.approx(
+            -s1 * (1.0 + tau * tau) * math.expm1(h), rel=1e-12)
+        assert t.noise[i] == pytest.approx(
+            s1 * tau * math.sqrt(math.expm1(2.0 * h)), rel=1e-12, abs=0.0)
+
+
+def test_dpmpp_order2_closed_form():
+    """Exact exponential-Adams order 2 (NOT the official Taylor 2M
+    split, which differs at O(h^3)): b_1 = -alpha'(h - 1 + e^{-h})/h_prev
+    and b_0 + b_1 = alpha'(1 - e^{-h}) (the order-1 row sum)."""
+    t = _tables(DPMppTableBuilder(), order=2, corr=0)
+    for i in range(1, len(t.decay)):
+        h = t.lams[i + 1] - t.lams[i]
+        h_prev = t.lams[i] - t.lams[i - 1]
+        a1 = t.alphas[i + 1]
+        assert t.decay[i] == pytest.approx(
+            t.sigmas[i + 1] / t.sigmas[i], rel=1e-13)
+        b1 = -a1 * (h - 1.0 + math.exp(-h)) / h_prev
+        assert t.pred[i, 1] == pytest.approx(b1, rel=1e-10)
+        assert t.pred[i, 0] + t.pred[i, 1] == pytest.approx(
+            a1 * -math.expm1(-h), rel=1e-12)
+
+
+# -------------------------------------------------- f64 update/solve level
+def _f64_predictor_solve(tables, model):
+    """Predictor-only multistep recursion in pure numpy float64 from the
+    host tables — no jax in the update, so the only difference between
+    two families' trajectories is their tables."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((16, 2)) * float(
+        SCHED.prior_scale(float(tables.ts[0])))
+    hist = []
+    width = tables.pred.shape[1]
+    for i in range(len(tables.ts) - 1):
+        hist.insert(0, model(x, float(tables.ts[i])))
+        del hist[width:]
+        x = tables.decay[i] * x + sum(
+            tables.pred[i, j] * hist[j] for j in range(len(hist)))
+    return x
+
+
+def test_sa_tau0_solve_matches_dpmpp_2m_f64():
+    """SA at tau=0, predictor order 2 (warm-up ramp 1 -> 2), driven as a
+    float64 recursion, reproduces DPM-Solver++ 2M to round-off — the
+    ISSUE's cross-family limit, at update level."""
+    def model(x, t):  # smooth f64 stand-in for a data-prediction net
+        return 0.3 * x * math.cos(t)
+
+    sa = _tables(None, tau=0.0, order=2, corr=0, parameterization="data",
+                 n_steps=10)
+    dp = _tables(DPMppTableBuilder(), order=2, corr=0, n_steps=10)
+    a = _f64_predictor_solve(sa, model)
+    b = _f64_predictor_solve(dp, model)
+    np.testing.assert_allclose(a, b, rtol=1e-13, atol=1e-14)
+
+
+def test_seeds_stage1_deterministic_limit_on_gmm_oracle():
+    """SEEDS stage 1 at tau=0 against the published deterministic limit
+    (DPM-Solver-1: x' = (alpha'/alpha) x - sigma'(e^h - 1) eps), update
+    by update on GMM-oracle eps evaluations, float64, tight tolerance."""
+    eps_fn = GMM2.model_fn(SCHED, "noise")
+    t = _tables(SEEDSTableBuilder(), tau=0.0, order=1, corr=0, n_steps=8)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((32, 2)) * float(
+        SCHED.prior_scale(float(t.ts[0])))
+    for i in range(len(t.ts) - 1):
+        eps = np.asarray(
+            eps_fn(jnp.asarray(x, jnp.float32), float(t.ts[i])),
+            np.float64)
+        h = t.lams[i + 1] - t.lams[i]
+        ref = (t.alphas[i + 1] / t.alphas[i]) * x \
+            - t.sigmas[i + 1] * math.expm1(h) * eps
+        x = t.decay[i] * x + t.pred[i, 0] * eps
+        np.testing.assert_allclose(x, ref, rtol=1e-12, atol=1e-13)
+
+
+def test_seeds_solve_bitwise_equals_sa_noise():
+    """Full f32 registry solve: seeds and sa-in-noise are byte-equal at
+    tau=1 — same executor, tables agreeing to f64 round-off survive the
+    f32 cast identically."""
+    model = GMM2.model_fn(SCHED, "noise")
+    se = SamplerSpec.from_nfe("seeds", 12, schedule=SCHED, tau=1.0)
+    sa = SamplerSpec.from_nfe("sa", 12, schedule=SCHED, tau=1.0,
+                              parameterization="noise")
+    xT = Sampler(sa).init_noise(jax.random.PRNGKey(0), (64, 2))
+    key = jax.random.PRNGKey(1)
+    a = np.asarray(Sampler(se).sample(model, xT, key))
+    b = np.asarray(Sampler(sa).sample(model, xT, key))
+    assert (a == b).all()
+
+
+def test_dpmpp_solve_matches_sa_tau0_and_is_tau_inert():
+    """dpmpp_multistep == SA at tau=0 in f32 to float tolerance, and any
+    requested tau produces the SAME dpmpp samples (the builder zeroes
+    the track — tau is inert by construction, not by convention)."""
+    model = GMM2.model_fn(SCHED, "data")
+    xT = Sampler(SamplerSpec.from_nfe("sa", 12, schedule=SCHED)).init_noise(
+        jax.random.PRNGKey(2), (64, 2))
+    key = jax.random.PRNGKey(3)
+
+    def solve(name, tau):
+        spec = SamplerSpec.from_nfe(name, 12, schedule=SCHED, tau=tau)
+        return np.asarray(Sampler(spec).sample(model, xT, key))
+
+    dp = solve("dpmpp_multistep", 1.0)
+    np.testing.assert_allclose(dp, solve("sa", 0.0), rtol=2e-5, atol=2e-5)
+    assert (dp == solve("dpmpp_multistep", 0.3)).all()
+
+
+# ------------------------------------------------ compile-cache contract
+@pytest.mark.parametrize("family", ["sa", "seeds", "dpmpp_multistep"])
+def test_family_tau_program_sweep_zero_misses(family):
+    """Every multistep family inherits the plan/execute invariant: a
+    sweep over tau AND per-interval order programs (mode-uniform, so the
+    statics are fixed) shares ONE compiled executor per family."""
+    conv = get_family(family).model_convention(
+        SamplerSpec.from_nfe(family, 6, schedule=SCHED))
+    model = GMM2.model_fn(SCHED, conv)
+    base = program_preset_for_nfe("tau-anneal", 6)  # uniform PEC
+    M = base.length()
+    clear_compile_cache()
+    key = jax.random.PRNGKey(4)
+    n = 0
+    specs = [SamplerSpec.from_nfe(family, 6, schedule=SCHED, tau=tau)
+             for tau in (0.0, 0.7, 1.0)]
+    specs += [SamplerSpec.from_nfe(
+        family, 6, schedule=SCHED,
+        program=base.replace(predictor_order=orders, width=3))
+        for orders in ((1,) * M, (2,) * M,
+                       tuple(min(i + 1, 3) for i in range(M)))]
+    for spec in specs:
+        smp = Sampler(spec)
+        xT = smp.init_noise(jax.random.PRNGKey(5), (16, 2))
+        out = smp.sample(model, xT, key)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        n += 1
+    stats = compile_cache_stats()
+    assert stats["misses"] == 1, stats
+    assert stats["hits"] == n - 1, stats
+
+
+# -------------------------------------------------- stepwise invisibility
+def _stable_model(x, t):
+    """Fusion-stable eval (one multiply chain) — isolates the scheduler's
+    numerics, same trick as tests/test_stepwise.py."""
+    return 0.3 * x * jnp.cos(t)
+
+
+@pytest.mark.parametrize("family", ["seeds", "dpmpp_multistep"])
+def test_new_family_stepwise_join_invisibility(family):
+    """The new families inherit the step-granular executor: driving
+    requests tick-by-tick with STAGGERED mid-flight joins into a shared
+    carry is byte-equal to the whole-solve scan, per request."""
+    shape = (24, 2)
+    spec = SamplerSpec.from_nfe(family, 8, schedule=SCHED, tau=0.8)
+    plan = build_plan(spec)
+    scale = SCHED.prior_scale(float(plan.ts[0]))
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    xT = jax.vmap(lambda k: scale * jax.random.normal(
+        k, shape, jnp.float32))(keys)
+    solve_keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    ref = np.asarray(sample_batched(plan, _stable_model, xT, solve_keys))
+
+    lanes, stagger = 4, [0, 2, 5]
+    fns = make_stepfns(plan, _stable_model, shape, jnp.float32, lanes)
+    arrays = fns.adapter.arrays(plan)
+    M = fns.adapter.n_steps_of(arrays)
+    carry = fresh_carry(plan, lanes, shape, jnp.float32)
+    owner, done = [None] * lanes, {}
+    for tick in range(100):
+        for b in range(3):
+            if stagger[b] == tick:
+                lane = owner.index(None)
+                owner[lane] = b
+                carry = fns.join(arrays, carry, lane, xT[b],
+                                 jax.random.split(solve_keys[b], M),
+                                 0.0, 0, 1.0)
+        if all(o is None for o in owner):
+            if len(done) == 3:
+                break
+            continue
+        carry, aux = fns.step(arrays, carry)
+        fin = jax.device_get(aux["finished"])
+        for lane, b in enumerate(owner):
+            if b is not None and fin[lane]:
+                done[b] = np.asarray(carry["x_final"][lane])
+                owner[lane] = None
+    assert len(done) == 3, "unfinished requests"
+    for b in range(3):
+        assert (ref[b] == done[b]).all(), f"request {b} diverged"
+
+
+# --------------------------------------------------- capability registry
+def test_family_capability_flags():
+    for name in ("sa", "seeds", "dpmpp_multistep"):
+        fam = get_family(name)
+        assert fam.supports_feature_cache and fam.full_programs, name
+    assert get_family("dpmpp_multistep").tau_inert
+    assert not get_family("sa").tau_inert
+    assert not get_family("seeds").tau_inert
+    for name in ("ddim", "edm_heun", "euler_maruyama"):
+        fam = get_family(name)
+        assert not fam.supports_feature_cache, name
+        assert not fam.full_programs, name
+
+
+def test_feature_cache_gate_names_capability():
+    """A family without supports_feature_cache rejects the knob at
+    sample time with an actionable error."""
+    spec = SamplerSpec.from_nfe("ddim", 8, schedule=SCHED,
+                                feature_cache=2)
+    smp = Sampler(spec)
+    model = GMM2.model_fn(SCHED, "data")
+    xT = smp.init_noise(jax.random.PRNGKey(8), (8, 2))
+    with pytest.raises(ValueError, match="not supported by the 'ddim'"):
+        smp.sample(model, xT, jax.random.PRNGKey(9))
+
+
+def test_legacy_baselines_module_is_pure_reexport():
+    """core.baselines is one import surface over samplers.baselines — no
+    duplicated shim code paths (satellite: legacy fold)."""
+    import repro.core.baselines as legacy
+    import repro.core.samplers.baselines as canonical
+    assert set(legacy.__all__) <= set(canonical.__all__)
+    for name in legacy.__all__:
+        assert getattr(legacy, name) is getattr(canonical, name), name

@@ -18,8 +18,8 @@ MODEL = GMM2.model_fn(SCHED, "data")
 XT = jax.random.normal(jax.random.PRNGKey(9), (256, 2))
 KEY = jax.random.PRNGKey(0)
 
-ALL = ["ddim", "ddpm_ancestral", "dpm_solver_pp_2m", "edm_heun",
-       "edm_stochastic", "euler_maruyama", "sa"]
+ALL = ["ddim", "ddpm_ancestral", "dpm_solver_pp_2m", "dpmpp_multistep",
+       "edm_heun", "edm_stochastic", "euler_maruyama", "sa", "seeds"]
 
 
 def test_registry_lists_all_families():
@@ -37,8 +37,14 @@ def test_round_trip_every_sampler_on_gmm_oracle(name):
     """list_samplers -> make_sampler -> sample: every family reaches the
     GMM target (far closer than the prior) through the same call path."""
     from repro.core.metrics import sliced_w2
-    s = make_sampler(name, schedule=SCHED, nfe=32, tau=1.0)
-    x0 = s.sample(MODEL, XT, KEY)
+    from repro.core.samplers import get_family
+    # family-canonical kwargs: the published SEEDS solvers are
+    # predictor-only (a high-order corrector interpolates *noisy* eps
+    # evaluations at tau=1 and amplifies the injected noise)
+    kw = {"seeds": dict(corrector_order=0)}.get(name, {})
+    s = make_sampler(name, schedule=SCHED, nfe=32, tau=1.0, **kw)
+    conv = get_family(name).model_convention(s.spec)
+    x0 = s.sample(GMM2.model_fn(SCHED, conv), XT, KEY)
     assert x0.shape == XT.shape
     assert bool(jnp.all(jnp.isfinite(x0)))
     target = GMM2.sample(jax.random.PRNGKey(5), XT.shape[0])

@@ -28,7 +28,8 @@ from repro.core.samplers import SamplerSpec
 from repro.serve import QualityTiers, ServeEngine, default_tiers
 from repro.tune import (GMMObjective, ProgramEvaluator, SearchConfig,
                         run_search)
-from repro.tune.search import load_state, save_state, spec_from_state
+from repro.tune.search import (fc_spec_from_state, load_state, save_state,
+                               spec_from_state)
 
 SCHED = get_schedule("vp_linear")
 
@@ -167,6 +168,83 @@ def test_searched_program_beats_preset_on_objective():
     assert res.best_score < preset_score, (
         f"search found nothing better than the preset "
         f"({res.best_score} vs {preset_score})")
+
+
+# --------------------------------------------------- feature-cache search
+def test_fc_threshold_joins_search_space(tmp_path):
+    """ROADMAP close: the residual feature-cache threshold is a searched
+    coordinate. The fc unit runs after the program units; its winner
+    obeys the slack rule (largest threshold within fc_slack of the
+    program winner's score, argmin fallback) and round-trips through the
+    artifact into an exact serving spec."""
+    art = str(tmp_path / "tune.json")
+    cfg = SearchConfig(budget=3000, presets=("tau-anneal",),
+                       tau_values=(0.0, 0.5, 1.0),
+                       fc_thresholds=(1e-3, 0.05, 0.5), **SMALL)
+    res = run_search(cfg, artifact=art)
+    assert res.done and not res.exhausted
+    fc = res.best_fc
+    assert fc is not None
+    assert fc["slack"] == cfg.fc_slack and fc["anchor"] > 0
+
+    fc_hist = [h for h in res.state["history"] if "fc" in h]
+    assert fc_hist, "fc unit evaluated no candidates"
+    within = [h for h in fc_hist if np.isfinite(h["score"])
+              and h["score"] <= fc["slack"] * fc["anchor"]]
+    if within:  # slack branch: LARGEST qualifying threshold wins
+        assert fc["score"] <= fc["slack"] * fc["anchor"]
+        assert fc["thresh"] == max(h["fc"]["thresh"] for h in within)
+    else:  # fallback branch: pure argmin over the fc history
+        assert fc["score"] == min(h["score"] for h in fc_hist)
+
+    state = load_state(art)
+    assert state["best_fc"] == fc
+    spec = fc_spec_from_state(state)
+    assert spec.feature_cache == ("residual", fc["thresh"])
+    assert spec.mode == "PECE" and spec.tau == fc["tau"]
+
+
+def test_fc_search_resume_replays_identically(tmp_path):
+    """The fc unit is a unit like any other: interrupt before it, resume
+    from the artifact, and the combined run (history, best_fc) is
+    bit-identical to the uninterrupted one."""
+    art = str(tmp_path / "tune.json")
+    cfg = SearchConfig(budget=3000, presets=("tau-anneal",),
+                       tau_values=(0.0, 0.5, 1.0),
+                       fc_thresholds=(0.01, 0.2), **SMALL)
+    full = run_search(cfg)
+    part = run_search(cfg, artifact=art, max_units=1)
+    assert not part.done and part.best_fc is None
+    resumed = run_search(artifact=art, resume=True)
+    assert resumed.done
+    assert resumed.state["history"] == full.state["history"]
+    assert resumed.state["best_fc"] == full.state["best_fc"]
+
+
+def test_fc_evaluation_pays_staleness_cost():
+    """The cached-model path is real, not a label: a threshold the
+    residual never reaches (the cache never refreshes after step 0)
+    scores strictly worse than a tiny threshold (refresh ~always)."""
+    ev = ProgramEvaluator(_objective(), nfe=8, chunk=4)
+    never, always = ev.evaluate_fc([(1.0, 1e9), (1.0, 1e-6)])
+    assert never > always
+
+
+def test_tiers_from_artifact_maps_fc_winner_to_draft(tmp_path):
+    """An artifact with a feature-cache winner serves it as the draft
+    tier — the cheap-eval rung, autotuned; fc_tier=None opts out."""
+    art = str(tmp_path / "tune.json")
+    cfg = SearchConfig(budget=3000, presets=("tau-anneal",),
+                       tau_values=(0.0, 0.5, 1.0),
+                       fc_thresholds=(0.01, 0.2), **SMALL)
+    run_search(cfg, artifact=art)
+    state = load_state(art)
+    assert state["best_fc"] is not None
+    tiers = QualityTiers.from_artifact(art)
+    assert tiers.resolve("draft") == fc_spec_from_state(state)
+    assert tiers.resolve("best") == spec_from_state(state)
+    plain = QualityTiers.from_artifact(art, fc_tier=None)
+    assert plain.resolve("draft") == default_tiers().resolve("draft")
 
 
 # ----------------------------------------------------------------- tiers
